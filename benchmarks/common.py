@@ -1,0 +1,29 @@
+"""Benchmark helpers: CSV output in ``name,us_per_call,derived`` form."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+def section(title: str) -> None:
+    print(f"# --- {title} ---")
+
+
+def timeit(fn, *, n: int, warmup: int = 2) -> float:
+    """Median-of-3 wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    best = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        best.append((time.perf_counter() - t0) / n * 1e6)
+    best.sort()
+    return best[1]

@@ -1,0 +1,64 @@
+"""Baseline vs optimized sweep comparison (all cells, same-basis).
+
+Reads the paper-faithful-baseline sweep (results/dryrun) and the optimized
+sweep (results/dryrun_opt) and prints the per-cell dominant-term change.
+Both sweeps are full-config lowerings (scan bodies counted once in both),
+so ratios are exact even though absolute terms need extrapolation.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, section
+
+BASE = "results/dryrun"
+OPT = "results/dryrun_opt"
+
+
+def _load(d: str) -> dict:
+    out = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        name = os.path.basename(p)[:-5]
+        if "__L" in name:
+            continue
+        with open(p) as f:
+            out[name] = json.load(f)
+    return out
+
+
+def main() -> None:
+    if not (os.path.isdir(BASE) and os.path.isdir(OPT)):
+        print("# need both results/dryrun and results/dryrun_opt")
+        return
+    base, opt = _load(BASE), _load(OPT)
+    section("baseline vs optimized: max roofline term per cell (single pod)")
+    gains = []
+    for name in sorted(base):
+        if not name.endswith("__single"):
+            continue
+        b, o = base.get(name), opt.get(name)
+        if not b or not o or b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        bt = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        ot = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        btemp = b["memory_analysis"]["temp_size_bytes"] / 2 ** 30
+        otemp = o["memory_analysis"]["temp_size_bytes"] / 2 ** 30
+        gains.append(bt / ot)
+        emit(f"compare_{name[:-8]}", ot * 1e6,
+             f"max_term {bt:.3g}s -> {ot:.3g}s ({bt / ot:.2f}x) "
+             f"temp {btemp:.1f} -> {otemp:.1f} GiB "
+             f"dominant {b['dominant']} -> {o['dominant']}")
+    if gains:
+        gm = 1.0
+        for g in gains:
+            gm *= g
+        gm **= 1.0 / len(gains)
+        emit("compare_geomean_gain", 0.0,
+             f"{gm:.2f}x across {len(gains)} cells")
+
+
+if __name__ == "__main__":
+    main()

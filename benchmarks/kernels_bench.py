@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks (CPU wall time for the portable paths).
+
+TPU wall times are not measurable here; these rows track the XLA-chunked
+implementations' per-call cost on CPU (regression guard + relative scaling
+with sequence length) and the kernels' FLOP counts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section, timeit
+from repro.kernels.flash_attention.ops import flash_attention_xla
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.ssm_scan.ops import gla_scan_xla
+
+
+def main() -> None:
+    section("kernels: portable-path microbench (CPU)")
+    key = jax.random.PRNGKey(0)
+    for S in (256, 1024):
+        B, H, KV, D = 1, 8, 2, 64
+        q = jax.random.normal(key, (B, S, H, D), jnp.bfloat16)
+        k = jax.random.normal(key, (B, S, KV, D), jnp.bfloat16)
+        v = jax.random.normal(key, (B, S, KV, D), jnp.bfloat16)
+        fn = jax.jit(lambda q, k, v: flash_attention_xla(
+            q, k, v, causal=True, block_q=128, block_k=128))
+        fn(q, k, v).block_until_ready()
+        us = timeit(lambda: fn(q, k, v).block_until_ready(), n=5)
+        flops = 4 * B * H * S * S * D / 2  # causal
+        emit(f"kernel_flash_S{S}", us, f"{flops / us / 1e3:.1f} MFLOP/s-eq")
+    for S in (256, 1024):
+        B, H, K, V = 1, 4, 64, 64
+        q = jax.random.normal(key, (B, H, S, K), jnp.float32) * 0.5
+        kk = jax.random.normal(key, (B, H, S, K), jnp.float32) * 0.5
+        vv = jax.random.normal(key, (B, H, S, V), jnp.float32)
+        w = -jnp.ones((B, H, S, K)) * 0.01
+        fn = jax.jit(lambda q, k, v, w: gla_scan_xla(q, k, v, w, chunk=128)[0])
+        fn(q, kk, vv, w).block_until_ready()
+        us = timeit(lambda: fn(q, kk, vv, w).block_until_ready(), n=5)
+        emit(f"kernel_gla_S{S}", us, "chunked linear attention")
+    # paged decode
+    B, Hq, Hkv, D, P, page, maxp = 4, 8, 2, 64, 64, 64, 16
+    q = jax.random.normal(key, (B, Hq, D), jnp.bfloat16)
+    kp = jax.random.normal(key, (P, page, Hkv, D), jnp.bfloat16)
+    vp = jax.random.normal(key, (P, page, Hkv, D), jnp.bfloat16)
+    bt = jax.random.randint(key, (B, maxp), 0, P, jnp.int32)
+    sl = jnp.full((B,), maxp * page, jnp.int32)
+    fn = jax.jit(paged_attention_ref)
+    fn(q, kp, vp, bt, sl).block_until_ready()
+    us = timeit(lambda: fn(q, kp, vp, bt, sl).block_until_ready(), n=5)
+    emit("kernel_paged_decode", us, f"kv_len={maxp * page}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+``python -m benchmarks.run``            everything (measured + model + roofline)
+``python -m benchmarks.run fig17``      one module
+
+Output rows: ``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (compare, fig14_16_model, fig17_rings,
+                        fig18_23_zerocopy, fig22_cache_table,
+                        fig24_26_integration, kernels_bench, roofline)
+
+MODULES = {
+    "fig14_16": fig14_16_model,
+    "fig17": fig17_rings,
+    "fig18_23": fig18_23_zerocopy,
+    "fig22": fig22_cache_table,
+    "fig24_26": fig24_26_integration,
+    "kernels": kernels_bench,
+    "roofline": roofline,
+    "compare": compare,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(MODULES)
+    failures = 0
+    for name in wanted:
+        mod = MODULES.get(name)
+        if mod is None:
+            print(f"# unknown benchmark {name}; choices: {list(MODULES)}")
+            failures += 1
+            continue
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"# BENCHMARK {name} FAILED")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(failures)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end training driver: a ~100M-param TinyLlama-family model for a
+few hundred steps, with DDS-backed write-behind checkpointing and the
+ring-prefetched data pipeline.
+
+This is the (b) end-to-end example: config -> pipeline -> train loop ->
+checkpoints, all through the public API.  On CPU it uses a scaled-down
+width so a few hundred steps finish in minutes; pass --full-width on real
+hardware.
+
+Run:  PYTHONPATH=src python examples/train_tinyllama.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.core.dds_server import DDSStorageServer, ServerConfig
+from repro.data.pipeline import BatchSpec, TokenPipeline
+from repro.models.registry import build_model
+from repro.storage.checkpoint import CheckpointManager
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-width", action="store_true",
+                    help="use the real tinyllama-1.1b config (needs a TPU)")
+    args = ap.parse_args()
+
+    cfg = get_config("tinyllama_1p1b")
+    if not args.full_width:
+        # ~100M-param family member runnable on CPU for a demo.
+        cfg = dataclasses.replace(cfg, num_layers=4, d_model=512,
+                                  num_heads=8, num_kv_heads=2, head_dim=64,
+                                  d_ff=1408, vocab_size=8192)
+    api = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"arch={cfg.name} params~{n_params / 1e6:.0f}M "
+          f"layers={cfg.num_layers} d_model={cfg.d_model}")
+
+    # structured stream: learnable next-token process (uniform-random data
+    # would have an irreducible loss floor of ln(vocab) ~= 9.0)
+    pipeline = TokenPipeline(BatchSpec(args.batch, args.seq, cfg.vocab_size),
+                             seed=0, structured=True)
+    ckpt = CheckpointManager(DDSStorageServer(ServerConfig(
+        device_capacity=1 << 30)), keep=2)
+    tcfg = TrainConfig(peak_lr=args.lr, warmup_steps=max(10, args.steps // 10),
+                       total_steps=args.steps)
+    trainer = Trainer(api, tcfg, pipeline, checkpoint_mgr=ckpt,
+                      ckpt_every=args.ckpt_every)
+
+    if trainer.restore_latest():
+        print(f"resumed from checkpoint at step {trainer.step}")
+
+    t0 = time.time()
+    hist = trainer.run(args.steps)
+    dt = time.time() - t0
+    tput = args.steps * args.batch * args.seq / dt
+    print(f"\nstep   loss     grad_norm")
+    for h in hist[:: max(1, len(hist) // 10)]:
+        print(f"{h['step']:5d}  {h['loss']:.4f}  {h['grad_norm']:.3f}")
+    print(f"\n{args.steps} steps in {dt:.1f}s = {tput:,.0f} tokens/s (CPU)")
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    print(f"checkpoints kept: {sorted(ckpt._manifests())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned architecture."""
+
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, ARCH_IDS,
+                                get_config, reduced_config, applicable_shapes)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCH_IDS", "get_config",
+           "reduced_config", "applicable_shapes"]

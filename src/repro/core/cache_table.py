@@ -1,0 +1,267 @@
+"""DDS cache table (§6.1): cuckoo hashing with chained buckets.
+
+The cache table maps application object keys (page id, KV key, ...) to the
+user's cache items (file id / offset / size / version ...).  Requirements
+(paper Table 2):
+
+  * File service performs inserts/deletes at millions of op/s (bounded by the
+    storage device).
+  * Offload engine + traffic director perform lookups at up to tens of
+    millions of op/s — lookups must be worst-case constant time and must not
+    block behind writers.
+
+Design, following the paper:
+
+  * **Cuckoo hashing** with two hash functions — a key lives in one of two
+    buckets, so a lookup probes at most two buckets (worst-case constant).
+  * **Chained items within a bucket** — each bucket has ``slots`` in-line
+    entries plus an overflow chain, which absorbs insert collisions without
+    triggering cuckoo kicks on every conflict (reduces "the impact of
+    collisions on insertions").
+  * **Pre-reserved capacity** — the user declares the maximum number of cache
+    items; the table never resizes at runtime.
+
+Readers proceed without taking the writer lock: buckets are versioned with a
+seqlock (even = stable); a reader retries if the version moved under it.
+Writers (file service) serialize on a single mutex — there is exactly one
+file-service writer thread in DDS, so this is not a scalability limit.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Iterator
+
+import numpy as np
+
+_EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+# 64-bit mix (splitmix64 finalizer) — cheap, good avalanche.
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def _mix(x: np.uint64, seed: np.uint64) -> np.uint64:
+    with np.errstate(over="ignore"):
+        x = np.uint64(x) ^ seed
+        x ^= x >> np.uint64(30)
+        x *= _M1
+        x ^= x >> np.uint64(27)
+        x *= _M2
+        x ^= x >> np.uint64(31)
+    return x
+
+
+@dataclass
+class CacheTableStats:
+    inserts: int = 0
+    deletes: int = 0
+    lookups: int = 0
+    hits: int = 0
+    kicks: int = 0        # cuckoo relocations
+    chain_inserts: int = 0
+    full_rejections: int = 0
+
+
+class CacheTable:
+    """Fixed-capacity cuckoo hash table with per-bucket chaining."""
+
+    def __init__(self, max_items: int, slots_per_bucket: int = 4,
+                 load_factor: float = 0.5):
+        if max_items <= 0:
+            raise ValueError("max_items must be positive")
+        # Reserve memory up front to avoid runtime resizing (paper §6.1).
+        want = int(max_items / max(load_factor, 1e-3))
+        nbuckets = 1
+        while nbuckets * slots_per_bucket < want:
+            nbuckets <<= 1
+        self.nbuckets = nbuckets
+        self.slots = slots_per_bucket
+        self.max_items = max_items
+        self._mask = np.uint64(nbuckets - 1)
+        self._seed1 = np.uint64(0x9E3779B97F4A7C15)
+        self._seed2 = np.uint64(0xC2B2AE3D27D4EB4F)
+        # In-line slot arrays (keys as uint64 fingerprints of the full key).
+        self._keys = np.full((nbuckets, slots_per_bucket), _EMPTY, dtype=np.uint64)
+        self._vals: list[list[Any]] = [[None] * slots_per_bucket for _ in range(nbuckets)]
+        self._full_keys: list[list[Any]] = [[None] * slots_per_bucket for _ in range(nbuckets)]
+        self._chains: list[dict[Any, Any]] = [dict() for _ in range(nbuckets)]
+        self._versions = np.zeros(nbuckets, dtype=np.uint64)  # seqlock
+        self._count = 0
+        self._wlock = threading.Lock()
+        self.stats = CacheTableStats()
+
+    # -- hashing ---------------------------------------------------------------
+    def _hash_key(self, key: Any) -> np.uint64:
+        if isinstance(key, (int, np.integer)):
+            h = np.uint64(int(key) & 0xFFFFFFFFFFFFFFFF)
+        else:
+            h = np.uint64(hash(key) & 0xFFFFFFFFFFFFFFFF)
+        return _mix(h, np.uint64(0))
+
+    def _buckets_for(self, hk: np.uint64) -> tuple[int, int]:
+        b1 = int(_mix(hk, self._seed1) & self._mask)
+        b2 = int(_mix(hk, self._seed2) & self._mask)
+        if b2 == b1:
+            b2 = (b1 + 1) & int(self._mask)
+        return b1, b2
+
+    # -- read path (lock-free via seqlock) --------------------------------------
+    def lookup(self, key: Any) -> Any | None:
+        self.stats.lookups += 1
+        hk = self._hash_key(key)
+        b1, b2 = self._buckets_for(hk)
+        for b in (b1, b2):
+            for _ in range(64):  # seqlock retry budget
+                v0 = int(self._versions[b])
+                if v0 & 1:
+                    continue  # writer active in this bucket
+                found, val = self._probe(b, hk, key)
+                if int(self._versions[b]) == v0:
+                    if found:
+                        self.stats.hits += 1
+                        return val
+                    break
+        return None
+
+    def _probe(self, b: int, hk: np.uint64, key: Any) -> tuple[bool, Any]:
+        row = self._keys[b]
+        for s in range(self.slots):
+            if row[s] == hk and self._full_keys[b][s] == key:
+                return True, self._vals[b][s]
+        chain = self._chains[b]
+        if key in chain:
+            return True, chain[key]
+        return False, None
+
+    def __contains__(self, key: Any) -> bool:
+        return self.lookup(key) is not None
+
+    def __len__(self) -> int:
+        return self._count
+
+    # -- write path (single writer: the file service) ---------------------------
+    def _bucket_begin(self, b: int) -> None:
+        self._versions[b] += np.uint64(1)  # odd: writer active
+
+    def _bucket_end(self, b: int) -> None:
+        self._versions[b] += np.uint64(1)  # even: stable
+
+    def insert(self, key: Any, value: Any) -> bool:
+        """Insert or update.  Returns False iff the table is at capacity."""
+        with self._wlock:
+            hk = self._hash_key(key)
+            b1, b2 = self._buckets_for(hk)
+            # Update in place if present.
+            for b in (b1, b2):
+                row = self._keys[b]
+                for s in range(self.slots):
+                    if row[s] == hk and self._full_keys[b][s] == key:
+                        self._bucket_begin(b)
+                        self._vals[b][s] = value
+                        self._bucket_end(b)
+                        self.stats.inserts += 1
+                        return True
+                if key in self._chains[b]:
+                    self._bucket_begin(b)
+                    self._chains[b][key] = value
+                    self._bucket_end(b)
+                    self.stats.inserts += 1
+                    return True
+            if self._count >= self.max_items:
+                self.stats.full_rejections += 1
+                return False
+            # Try an empty in-line slot in either bucket.
+            for b in (b1, b2):
+                s = self._free_slot(b)
+                if s is not None:
+                    self._place(b, s, hk, key, value)
+                    self._count += 1
+                    self.stats.inserts += 1
+                    return True
+            # Cuckoo kicks with a bounded path; on failure, chain in-bucket.
+            if self._kick_insert(b1, hk, key, value, budget=32):
+                self._count += 1
+                self.stats.inserts += 1
+                return True
+            self._bucket_begin(b1)
+            self._chains[b1][key] = value
+            self._bucket_end(b1)
+            self.stats.chain_inserts += 1
+            self._count += 1
+            self.stats.inserts += 1
+            return True
+
+    def _free_slot(self, b: int) -> int | None:
+        row = self._keys[b]
+        for s in range(self.slots):
+            if row[s] == _EMPTY:
+                return s
+        return None
+
+    def _place(self, b: int, s: int, hk: np.uint64, key: Any, value: Any) -> None:
+        self._bucket_begin(b)
+        self._keys[b, s] = hk
+        self._full_keys[b][s] = key
+        self._vals[b][s] = value
+        self._bucket_end(b)
+
+    def _kick_insert(self, b: int, hk: np.uint64, key: Any, value: Any,
+                     budget: int) -> bool:
+        cur = (b, hk, key, value)
+        for i in range(budget):
+            b, hk, key, value = cur
+            s = self._free_slot(b)
+            if s is not None:
+                self._place(b, s, hk, key, value)
+                return True
+            # Evict the slot this path landed on (round-robin by budget step).
+            s = i % self.slots
+            vk = self._keys[b, s]
+            vfk, vv = self._full_keys[b][s], self._vals[b][s]
+            self._place(b, s, hk, key, value)
+            self.stats.kicks += 1
+            vb1, vb2 = self._buckets_for(vk)
+            nb = vb2 if vb1 == b else vb1
+            cur = (nb, vk, vfk, vv)
+        # Could not re-home the last victim: chain it in its bucket.
+        b, hk, key, value = cur
+        self._bucket_begin(b)
+        self._chains[b][key] = value
+        self._bucket_end(b)
+        self.stats.chain_inserts += 1
+        return True
+
+    def delete(self, key: Any) -> bool:
+        with self._wlock:
+            hk = self._hash_key(key)
+            b1, b2 = self._buckets_for(hk)
+            for b in (b1, b2):
+                row = self._keys[b]
+                for s in range(self.slots):
+                    if row[s] == hk and self._full_keys[b][s] == key:
+                        self._bucket_begin(b)
+                        self._keys[b, s] = _EMPTY
+                        self._full_keys[b][s] = None
+                        self._vals[b][s] = None
+                        self._bucket_end(b)
+                        self._count -= 1
+                        self.stats.deletes += 1
+                        return True
+                if key in self._chains[b]:
+                    self._bucket_begin(b)
+                    del self._chains[b][key]
+                    self._bucket_end(b)
+                    self._count -= 1
+                    self.stats.deletes += 1
+                    return True
+            return False
+
+    def items(self) -> Iterator[tuple[Any, Any]]:
+        with self._wlock:
+            for b in range(self.nbuckets):
+                for s in range(self.slots):
+                    if self._keys[b, s] != _EMPTY:
+                        yield self._full_keys[b][s], self._vals[b][s]
+                yield from list(self._chains[b].items())

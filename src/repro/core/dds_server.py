@@ -1,0 +1,335 @@
+r"""DDS storage server: wires rings + file service + director + offload engine.
+
+This is the deployable unit of the paper (Fig 6): one storage server host
+with a DPU.  It also defines the storage-disaggregated benchmark application
+of §8.1 (random file I/O over the network, batched requests) whose OffPred /
+OffFunc are the paper's 30/20-line examples — reads encode file id, offset
+and size directly, so ``Cache``/``Invalidate`` are not needed; writes go to
+the host.
+
+Components and their threads (all cooperatively schedulable for tests):
+
+  client --> director.ingress --(signature+predicate)--> offload engine --> SSD
+         \-> (host-bound) --> split connection --> host app (DDS front end)
+                                                     --> rings --> file service --> SSD
+
+``DDSStorageServer.pump()`` drives every component one step; ``run_until_idle``
+loops until no component has work, giving deterministic end-to-end tests.
+"""
+
+from __future__ import annotations
+
+import struct
+import threading
+from dataclasses import dataclass, field
+
+from repro.core import wire
+from repro.core.cache_table import CacheTable
+from repro.core.file_service import FileServiceRunner, SegmentFS
+from repro.core.host_lib import DDSFrontEnd
+from repro.core.offload import OffloadAPI, OffloadEngine, ReadOp, WriteOp
+from repro.core.ring import DMAEngine
+from repro.core.traffic import (ApplicationSignature, FiveTuple, Packet,
+                                TrafficDirector, FLAG_SYN)
+from repro.storage.blockdev import BlockDevice
+
+# ---------------------------------------------------------------------------
+# The benchmark application protocol (§8.1).
+# ---------------------------------------------------------------------------
+
+APP_READ = 1
+APP_WRITE = 2
+APP_HDR = struct.Struct("<BQIQI")        # type, req_id, file_id, offset, nbytes
+APP_RESP_HDR = struct.Struct("<QII")     # req_id, status, nbytes
+
+
+def encode_app_read(req_id: int, file_id: int, offset: int, nbytes: int) -> bytes:
+    return APP_HDR.pack(APP_READ, req_id, file_id, offset, nbytes)
+
+
+def encode_app_write(req_id: int, file_id: int, offset: int, data: bytes) -> bytes:
+    return APP_HDR.pack(APP_WRITE, req_id, file_id, offset, len(data)) + data
+
+
+def encode_batch(msgs: list[bytes]) -> bytes:
+    """Batch several app messages into one network message (§6.1 batching)."""
+    return b"".join(struct.pack("<I", len(m)) + m for m in msgs)
+
+
+def decode_batch(payload: bytes) -> list[bytes]:
+    out, off = [], 0
+    while off < len(payload):
+        (n,) = struct.unpack_from("<I", payload, off)
+        off += 4
+        out.append(payload[off : off + n])
+        off += n
+    return out
+
+
+def default_off_pred(payload: bytes, table) -> tuple[list[bytes], list[bytes]]:
+    """The paper's simple example: reads -> DPU, writes -> host (§6.1)."""
+    host, dpu = [], []
+    for m in decode_batch(payload):
+        if m and m[0] == APP_READ:
+            dpu.append(m)
+        else:
+            host.append(m)
+    return host, dpu
+
+
+def default_off_func(msg: bytes, table) -> ReadOp | None:
+    """File id/offset/size are encoded in the request (§8.2 footnote 4)."""
+    typ, req_id, file_id, offset, nbytes = APP_HDR.unpack_from(msg, 0)
+    if typ != APP_READ:
+        return None
+    return ReadOp(file_id, offset, nbytes)
+
+
+def app_response_header(msg: bytes, op: ReadOp, err: int) -> bytes:
+    if msg:
+        _, req_id, *_ = APP_HDR.unpack_from(msg, 0)
+    else:
+        req_id = 0
+    return APP_RESP_HDR.pack(req_id, err, op.size if err == wire.E_OK else 0)
+
+
+@dataclass
+class ServerConfig:
+    device_capacity: int = 1 << 28          # 256 MiB RAM "SSD"
+    segment_size: int = 1 << 20
+    server_port: int = 5000
+    director_cores: int = 1
+    offload_ring: int = 256
+    offload_pool: int = 1 << 24
+    zero_copy: bool = True
+    userspace_stack: bool = True             # TLDK vs Linux-on-DPU (Fig 19)
+    cache_items: int = 1 << 16
+    offload_enabled: bool = True             # False => all requests to host
+
+
+class DDSStorageServer:
+    """One storage server host + its DPU (Fig 6)."""
+
+    def __init__(self, config: ServerConfig | None = None,
+                 api: OffloadAPI | None = None):
+        self.config = config or ServerConfig()
+        cfg = self.config
+        self.device = BlockDevice(cfg.device_capacity, )
+        self.fs = SegmentFS(self.device, cfg.segment_size)
+        self.dma = DMAEngine()
+        self.cache_table = CacheTable(cfg.cache_items)
+        self.api = api or OffloadAPI(default_off_pred, default_off_func)
+        # Traffic director: signature matches any client talking to our port.
+        sig = (ApplicationSignature(dst_port=cfg.server_port)
+               if cfg.offload_enabled else
+               ApplicationSignature(dst_port=-1))  # match nothing: host-only
+        self.director = TrafficDirector(
+            sig, self.api.off_pred, self.cache_table,
+            ncores=cfg.director_cores, host_port=cfg.server_port,
+            userspace_stack=cfg.userspace_stack)
+        # File service with cache-on-write / invalidate-on-read hooks (§6.1).
+        self.file_service = FileServiceRunner(
+            self.fs, self.dma, zero_copy=cfg.zero_copy,
+            cache_hook=self._cache_on_write,
+            invalidate_hook=self._invalidate_on_read)
+        self.offload = OffloadEngine(
+            self.fs, self.director, self.api, self.cache_table,
+            ring_size=cfg.offload_ring, pool_size=cfg.offload_pool,
+            zero_copy=cfg.zero_copy,
+            app_header=self.api.response_header or app_response_header)
+        # The host storage application, adopting the DDS front-end library.
+        self.frontend = DDSFrontEnd(self.file_service)
+        self.host_app = _HostApp(self)
+        self.host_cpu_busy_s = 0.0   # modeled host CPU seconds consumed
+
+    # -- §6.1 hooks: translate file-service ops into user Cache/Invalidate ----------
+    def _cache_on_write(self, req: wire.Request) -> None:
+        if self.api.cache is not None:
+            self.offload.on_host_write(WriteOp(req.file_id, req.offset, req.payload))
+
+    def _invalidate_on_read(self, req: wire.Request) -> None:
+        if self.api.invalidate is not None:
+            self.offload.on_host_read(ReadOp(req.file_id, req.offset, req.nbytes))
+
+    # -- cooperative event loop ---------------------------------------------------------
+    def pump(self) -> int:
+        work = 0
+        for _ in range(64):
+            if not self.director.step():
+                break
+            work += 1
+        work += self.offload.step()
+        work += self.host_app.step()
+        work += self.file_service.step()
+        self.device.poll()
+        work += self.offload.complete_pending()
+        work += self.host_app.poll_completions()
+        return work
+
+    def run_until_idle(self, max_iters: int = 200_000) -> None:
+        idle = 0
+        for _ in range(max_iters):
+            if self.pump() == 0:
+                self.device.drain()
+                idle += 1
+                if idle >= 3:
+                    return
+            else:
+                idle = 0
+        raise TimeoutError("server did not go idle")
+
+
+class _HostApp:
+    """The storage application on the host, using the DDS front-end library.
+
+    Executes host-bound requests (writes, non-offloadable reads) and replies
+    through the traffic director.  Each request costs modeled host CPU time —
+    this is what Figs 2/14 measure and what offloading eliminates.
+    """
+
+    # Modeled per-request host costs (µs), calibrated to §1/§8 (Fig 2:
+    # network module dominates; 17 cores @156K pages/s ≈ 109 µs/page total).
+    HOST_NET_US = 45.0     # DBMS network module + OS stack per request
+    HOST_FS_US = 25.0      # OS file system / storage stack per request
+    HOST_APP_US = 10.0     # request parsing, bookkeeping
+
+    def __init__(self, server: DDSStorageServer):
+        self.server = server
+        self._inflight: dict[int, tuple] = {}  # rid -> (host_flow, app req)
+        self._files_ready = False
+
+    def step(self) -> int:
+        return self.server.director.drain_host_wire(self._deliver)
+
+    def _deliver(self, host_flow: FiveTuple, payload: bytes) -> None:
+        if not payload:
+            return  # SYN/control packet hardware-forwarded to the host
+        if host_flow.src_ip == "dpu-proxy":
+            msgs = [payload]          # PEP split connection: one app message
+        else:
+            msgs = decode_batch(payload)  # hw-forwarded original batch
+        for m in msgs:
+            self._execute(host_flow, m)
+
+    def _execute(self, host_flow: FiveTuple, m: bytes) -> None:
+        srv = self.server
+        srv.host_cpu_busy_s += (self.HOST_NET_US + self.HOST_APP_US) * 1e-6
+        typ = m[0] if m else 0
+        if typ not in (APP_READ, APP_WRITE) and srv.api.host_handler is not None:
+            action = srv.api.host_handler(m)
+            if action[0] == "resp":
+                _, req_id, status, body = action
+                srv.host_cpu_busy_s += self.HOST_NET_US * 1e-6
+                resp = APP_RESP_HDR.pack(req_id, status, len(body)) + body
+                srv.director.host_response(host_flow, resp)
+                return
+            if action[0] == "w":
+                _, req_id, file_id, offset, data = action
+                rid = srv.frontend.write_file(file_id, offset, data)
+                self._inflight[rid] = (host_flow, APP_WRITE, req_id, len(data))
+                return
+            _, req_id, file_id, offset, nbytes = action
+            rid = srv.frontend.read_file(file_id, offset, nbytes)
+            self._inflight[rid] = (host_flow, APP_READ, req_id, nbytes)
+            return
+        typ, req_id, file_id, offset, nbytes = APP_HDR.unpack_from(m, 0)
+        if typ == APP_WRITE:
+            data = m[APP_HDR.size : APP_HDR.size + nbytes]
+            rid = srv.frontend.write_file(file_id, offset, data)
+        else:
+            rid = srv.frontend.read_file(file_id, offset, nbytes)
+        self._inflight[rid] = (host_flow, typ, req_id, nbytes)
+
+    def poll_completions(self) -> int:
+        srv = self.server
+        n = 0
+        for gid in list(srv.frontend._groups):
+            for c in srv.frontend.poll_wait(gid, 0.0):
+                info = self._inflight.pop(c.request_id, None)
+                if info is None:
+                    continue
+                host_flow, typ, req_id, nbytes = info
+                srv.host_cpu_busy_s += self.HOST_NET_US * 1e-6  # response path
+                body = c.data if typ == APP_READ and c.error == wire.E_OK else b""
+                resp = APP_RESP_HDR.pack(req_id, c.error, len(body)) + body
+                srv.director.host_response(host_flow, resp)
+                n += 1
+        return n
+
+
+class DDSClient:
+    """A compute-server client for the benchmark app (batching, outstanding)."""
+
+    def __init__(self, server: DDSStorageServer, ip: str = "10.0.0.2",
+                 port: int = 31337):
+        self.server = server
+        self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port)
+        self._seq = 1  # after SYN
+        self._next_req = 1
+        self._lock = threading.Lock()
+        self.responses: dict[int, tuple[int, bytes]] = {}
+        self._rx_buf = bytearray()
+        server.director.ingress.push(Packet(self.flow, 0, b"", flags=FLAG_SYN))
+        server.director.step()
+
+    def _send(self, payload: bytes) -> None:
+        self.server.director.ingress.push(Packet(self.flow, self._seq, payload))
+        self._seq += len(payload)
+
+    def read(self, file_id: int, offset: int, nbytes: int) -> int:
+        with self._lock:
+            rid = self._next_req
+            self._next_req += 1
+        self._send(encode_batch([encode_app_read(rid, file_id, offset, nbytes)]))
+        return rid
+
+    def write(self, file_id: int, offset: int, data: bytes) -> int:
+        with self._lock:
+            rid = self._next_req
+            self._next_req += 1
+        self._send(encode_batch([encode_app_write(rid, file_id, offset, data)]))
+        return rid
+
+    def send_batch(self, msgs: list[tuple]) -> list[int]:
+        """msgs: list of ("r", fid, off, n) / ("w", fid, off, data)."""
+        encoded, rids = [], []
+        with self._lock:
+            for m in msgs:
+                rid = self._next_req
+                self._next_req += 1
+                rids.append(rid)
+                if m[0] == "r":
+                    encoded.append(encode_app_read(rid, m[1], m[2], m[3]))
+                else:
+                    encoded.append(encode_app_write(rid, m[1], m[2], m[3]))
+        self._send(encode_batch(encoded))
+        return rids
+
+    # -- response collection ---------------------------------------------------------
+    def collect(self) -> int:
+        """Drain the client wire, reassembling (possibly segmented) responses."""
+        n = 0
+        while True:
+            pkt = self.server.director.to_client.pop()
+            if pkt is None:
+                break
+            self._rx_buf += bytes(pkt.payload)
+            n += 1
+        while len(self._rx_buf) >= APP_RESP_HDR.size:
+            req_id, status, nbytes = APP_RESP_HDR.unpack_from(self._rx_buf, 0)
+            total = APP_RESP_HDR.size + nbytes
+            if len(self._rx_buf) < total:
+                break
+            body = bytes(self._rx_buf[APP_RESP_HDR.size : total])
+            del self._rx_buf[:total]
+            self.responses[req_id] = (status, body)
+        return n
+
+    def wait(self, rid: int, max_iters: int = 200_000) -> tuple[int, bytes]:
+        for _ in range(max_iters):
+            self.collect()
+            if rid in self.responses:
+                return self.responses.pop(rid)
+            self.server.pump()
+            self.server.device.poll()
+        raise TimeoutError(f"no response for request {rid}")

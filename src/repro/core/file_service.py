@@ -1,0 +1,601 @@
+"""DDS DPU file service (§4.3): segment file system + zero-copy execution.
+
+Two layers live here:
+
+``SegmentFS``
+    The paper's minimal DPU file system: SSD space is divided into
+    fixed-length segments (aligned to the disk block size); a bitmap tracks
+    availability; files are allocated space by segments and grouped in flat
+    directories; segment 0 persistently stores directory/file metadata and
+    the *file mapping* (the vector of segments allocated to each file).
+    ``translate`` converts a (file, offset, size) range into physical disk
+    runs via the file mapping.
+
+``FileServiceRunner``
+    The DPU-side execution engine for host-issued file operations:
+
+    * A dedicated DMA thread consumes request batches from each notification
+      group's request ring (Fig 8b) into a DPU-side *request buffer* whose
+      size is >= the host ring, so outstanding requests never overlap and the
+      storage driver can consume request payloads IN PLACE — no request copy
+      (§4.3 "Eliminating data copies").
+
+    * Responses are pre-allocated in a DPU-side *response buffer* governed by
+      three tails (§4.3 "Ordered execution"):
+        TailA(llocated)  — end of pre-allocated response space,
+        TailB(uffered)   — end of the completed-response prefix,
+        TailC(ompleted)  — end of responses delivered to the host ring.
+      The device writes read data straight into the pre-allocated response
+      space (status starts E_PENDING) — no response copy.  TailB only
+      advances over a contiguous completed prefix, preserving request order;
+      a DMA write delivers [TailC, TailB) once it reaches the delivery batch
+      size.
+
+    The same ``submit`` entry point is used by the offload engine (§6.2) for
+    DPU-local reads, with the destination pointing into ITS pre-allocated
+    packet memory instead.
+
+The runner is cooperatively scheduled (``step()``) so tests and benchmarks
+are deterministic; ``start()`` wraps it in a thread for the live system.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core import wire
+from repro.core.ring import DMAEngine, ProgressiveRing, Region, ResponseRing, unframe_batch, frame
+from repro.storage.blockdev import BlockDevice
+
+META_SEGMENT = 0
+
+
+class FSError(Exception):
+    def __init__(self, errno: int, msg: str = ""):
+        super().__init__(msg or f"fs error {errno}")
+        self.errno = errno
+
+
+@dataclass
+class FileMeta:
+    file_id: int
+    name: str
+    dir_id: int
+    size: int = 0
+    segments: list[int] = field(default_factory=list)  # the file mapping
+
+
+@dataclass
+class DirMeta:
+    dir_id: int
+    name: str
+    files: list[int] = field(default_factory=list)
+
+
+class SegmentFS:
+    """Segment-granular file system over a :class:`BlockDevice`."""
+
+    def __init__(self, device: BlockDevice, segment_size: int = 1 << 20):
+        assert segment_size % device.block_size == 0
+        self.device = device
+        self.segment_size = segment_size
+        self.num_segments = device.capacity // segment_size
+        if self.num_segments < 2:
+            raise ValueError("device too small for SegmentFS")
+        self.bitmap = np.zeros(self.num_segments, dtype=bool)
+        self.bitmap[META_SEGMENT] = True  # reserved for metadata
+        self.files: dict[int, FileMeta] = {}
+        self.dirs: dict[int, DirMeta] = {0: DirMeta(0, "/")}
+        self._next_file_id = 1
+        self._next_dir_id = 1
+        self._lock = threading.Lock()
+
+    # -- metadata persistence (segment 0) ----------------------------------------
+    def sync_metadata(self) -> None:
+        doc = {
+            "files": {str(f.file_id): [f.name, f.dir_id, f.size, f.segments]
+                      for f in self.files.values()},
+            "dirs": {str(d.dir_id): [d.name, d.files] for d in self.dirs.values()},
+            "next_file_id": self._next_file_id,
+            "next_dir_id": self._next_dir_id,
+            "bitmap": self.bitmap.tobytes().hex(),
+        }
+        blob = json.dumps(doc).encode()
+        if len(blob) + 8 > self.segment_size:
+            raise FSError(wire.E_NOSPC, "metadata exceeds metadata segment")
+        hdr = len(blob).to_bytes(8, "little")
+        self.device.raw_write(META_SEGMENT * self.segment_size, hdr + blob)
+
+    @classmethod
+    def mount(cls, device: BlockDevice, segment_size: int = 1 << 20) -> "SegmentFS":
+        fs = cls(device, segment_size)
+        raw = device.raw_read(META_SEGMENT * segment_size, 8)
+        n = int.from_bytes(raw, "little")
+        if n == 0:
+            return fs  # fresh device
+        blob = device.raw_read(META_SEGMENT * segment_size + 8, n)
+        doc = json.loads(blob.decode())
+        fs.bitmap = np.frombuffer(bytes.fromhex(doc["bitmap"]), dtype=bool).copy()
+        fs.files = {int(k): FileMeta(int(k), v[0], v[1], v[2], list(v[3]))
+                    for k, v in doc["files"].items()}
+        fs.dirs = {int(k): DirMeta(int(k), v[0], list(v[1]))
+                   for k, v in doc["dirs"].items()}
+        fs._next_file_id = doc["next_file_id"]
+        fs._next_dir_id = doc["next_dir_id"]
+        return fs
+
+    # -- control plane --------------------------------------------------------------
+    def create_dir(self, name: str) -> int:
+        with self._lock:
+            did = self._next_dir_id
+            self._next_dir_id += 1
+            self.dirs[did] = DirMeta(did, name)
+            return did
+
+    def create_file(self, name: str, dir_id: int = 0) -> int:
+        with self._lock:
+            if dir_id not in self.dirs:
+                raise FSError(wire.E_NOENT, f"no dir {dir_id}")
+            fid = self._next_file_id
+            self._next_file_id += 1
+            self.files[fid] = FileMeta(fid, name, dir_id)
+            self.dirs[dir_id].files.append(fid)
+            return fid
+
+    def delete_file(self, file_id: int) -> None:
+        with self._lock:
+            f = self.files.pop(file_id, None)
+            if f is None:
+                raise FSError(wire.E_NOENT)
+            for s in f.segments:
+                self.bitmap[s] = False
+            self.dirs[f.dir_id].files.remove(file_id)
+
+    def list_dir(self, dir_id: int) -> list[str]:
+        d = self.dirs.get(dir_id)
+        if d is None:
+            raise FSError(wire.E_NOENT)
+        return [self.files[f].name for f in d.files if f in self.files]
+
+    def file_size(self, file_id: int) -> int:
+        f = self.files.get(file_id)
+        if f is None:
+            raise FSError(wire.E_NOENT)
+        return f.size
+
+    # -- space management --------------------------------------------------------
+    def _alloc_segment(self) -> int:
+        free = np.flatnonzero(~self.bitmap)
+        if len(free) == 0:
+            raise FSError(wire.E_NOSPC, "device full")
+        s = int(free[0])
+        self.bitmap[s] = True
+        return s
+
+    def ensure_capacity(self, file_id: int, new_size: int) -> None:
+        with self._lock:
+            f = self.files.get(file_id)
+            if f is None:
+                raise FSError(wire.E_NOENT)
+            need = -(-new_size // self.segment_size)  # ceil
+            while len(f.segments) < need:
+                f.segments.append(self._alloc_segment())
+            if new_size > f.size:
+                f.size = new_size
+
+    def truncate(self, file_id: int, new_size: int) -> None:
+        with self._lock:
+            f = self.files.get(file_id)
+            if f is None:
+                raise FSError(wire.E_NOENT)
+            keep = -(-new_size // self.segment_size)
+            for s in f.segments[keep:]:
+                self.bitmap[s] = False
+            f.segments = f.segments[:keep]
+            f.size = new_size
+
+    # -- address translation (the file mapping) ------------------------------------
+    def translate(self, file_id: int, offset: int, size: int) -> list[tuple[int, int]]:
+        """(file, offset, size) -> [(device_byte_addr, nbytes), ...] runs."""
+        f = self.files.get(file_id)
+        if f is None:
+            raise FSError(wire.E_NOENT)
+        if offset + size > len(f.segments) * self.segment_size:
+            raise FSError(wire.E_INVAL, "range beyond allocation")
+        runs: list[tuple[int, int]] = []
+        seg_sz = self.segment_size
+        while size > 0:
+            seg_idx = offset // seg_sz
+            seg_off = offset % seg_sz
+            n = min(size, seg_sz - seg_off)
+            phys = f.segments[seg_idx] * seg_sz + seg_off
+            if runs and runs[-1][0] + runs[-1][1] == phys:
+                runs[-1] = (runs[-1][0], runs[-1][1] + n)  # coalesce
+            else:
+                runs.append((phys, n))
+            offset += n
+            size -= n
+        return runs
+
+    # -- data plane (async, zero-copy destinations) ---------------------------------
+    def submit_read(self, file_id: int, offset: int, size: int,
+                    dest: memoryview, on_complete: Callable[[int], None]) -> None:
+        f = self.files.get(file_id)
+        if f is None or offset + size > f.size:
+            on_complete(wire.E_INVAL if f else wire.E_NOENT)
+            return
+        runs = self.translate(file_id, offset, size)
+        state = {"left": len(runs), "err": wire.E_OK}
+
+        def done_one(status: int) -> None:
+            if status != 0:
+                state["err"] = wire.E_IO
+            state["left"] -= 1
+            if state["left"] == 0:
+                on_complete(state["err"])
+
+        pos = 0
+        for phys, n in runs:
+            self.device.submit_read(phys, n, dest[pos : pos + n], done_one)
+            pos += n
+
+    def submit_write(self, file_id: int, offset: int, data,
+                     on_complete: Callable[[int], None]) -> None:
+        try:
+            self.ensure_capacity(file_id, offset + len(data))
+            runs = self.translate(file_id, offset, len(data))
+        except FSError as e:
+            on_complete(e.errno)
+            return
+        state = {"left": len(runs), "err": wire.E_OK}
+
+        def done_one(status: int) -> None:
+            if status != 0:
+                state["err"] = wire.E_IO
+            state["left"] -= 1
+            if state["left"] == 0:
+                on_complete(state["err"])
+
+        pos = 0
+        mv = memoryview(data)
+        for phys, n in runs:
+            self.device.submit_write(phys, mv[pos : pos + n], done_one)
+            pos += n
+
+
+# ---------------------------------------------------------------------------
+# The DPU-side runner for host-issued file operations.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _PendingResp:
+    """A pre-allocated response slot in the DPU response buffer."""
+    group_id: int
+    off: int           # start offset in the group's response buffer (virtual)
+    size: int          # full response size (header + payload)
+    request_id: int
+    pad: bool = False  # wrap-padding slot: space only, never delivered
+
+
+@dataclass
+class _GroupState:
+    group_id: int
+    req_ring: ProgressiveRing
+    resp_ring: ResponseRing
+    # DPU request buffer: >= host ring size => outstanding requests never overlap.
+    req_buf: Region = None  # type: ignore[assignment]
+    req_buf_tail: int = 0
+    # DPU response buffer with the three tails of §4.3.
+    resp_buf: Region = None  # type: ignore[assignment]
+    tail_a: int = 0  # allocated
+    tail_b: int = 0  # buffered (completed prefix)
+    tail_c: int = 0  # delivered to host
+    pending: list[_PendingResp] = field(default_factory=list)
+    ready: list[_PendingResp] = field(default_factory=list)  # completed, undelivered
+    interrupt: Callable[[], None] | None = None  # "DPU driver interrupt"
+
+
+@dataclass
+class FileServiceStats:
+    requests: int = 0
+    reads: int = 0
+    writes: int = 0
+    control_ops: int = 0
+    read_bytes: int = 0
+    write_bytes: int = 0
+    response_batches: int = 0
+    responses_delivered: int = 0
+    request_copies: int = 0   # nonzero only with zero_copy=False
+    response_copies: int = 0
+    shed_requests: int = 0    # dropped under un-drained-ring overload
+
+
+class FileServiceRunner:
+    """Executes host file requests on the DPU with zero copies (§4.3)."""
+
+    def __init__(self, fs: SegmentFS, dma: DMAEngine | None = None,
+                 resp_buf_size: int = 1 << 22,
+                 delivery_batch: int = 1,
+                 zero_copy: bool = True,
+                 cache_hook: Callable[[wire.Request], None] | None = None,
+                 invalidate_hook: Callable[[wire.Request], None] | None = None):
+        self.fs = fs
+        self.dma = dma or DMAEngine()
+        self.resp_buf_size = resp_buf_size
+        self.delivery_batch = delivery_batch
+        self.zero_copy = zero_copy
+        self.cache_hook = cache_hook
+        self.invalidate_hook = invalidate_hook
+        self.groups: dict[int, _GroupState] = {}
+        self.stats = FileServiceStats()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+
+    # -- registration (host lib calls this when a notification group is made) -----
+    def register_group(self, group_id: int, req_ring: ProgressiveRing,
+                       resp_ring: ResponseRing,
+                       interrupt: Callable[[], None] | None = None) -> None:
+        g = _GroupState(group_id, req_ring, resp_ring)
+        # Request buffer sized >= the host ring: no outstanding request overlaps.
+        g.req_buf = Region(f"dpu:req{group_id}", max(req_ring.capacity, 1 << 12))
+        g.resp_buf = Region(f"dpu:resp{group_id}", self.resp_buf_size)
+        g.interrupt = interrupt
+        with self._lock:
+            self.groups[group_id] = g
+
+    # -- cooperative scheduling -----------------------------------------------------
+    def step(self) -> int:
+        """One iteration: fetch -> submit -> complete -> deliver. Returns work."""
+        work = 0
+        with self._lock:
+            groups = list(self.groups.values())
+        for g in groups:
+            work += self._fetch_and_submit(g)
+        self.fs.device.poll()
+        for g in groups:
+            work += self._deliver(g)
+        return work
+
+    def run_until_idle(self, max_iters: int = 100_000) -> None:
+        idle = 0
+        for _ in range(max_iters):
+            if self.step() == 0:
+                self.fs.device.drain()
+                if self.step() == 0:
+                    idle += 1
+                    if idle >= 2 and not self._any_pending():
+                        return
+            else:
+                idle = 0
+        raise TimeoutError("file service did not go idle")
+
+    def _any_pending(self) -> bool:
+        return any(g.pending or g.ready for g in self.groups.values())
+
+    def start(self) -> None:
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="dds-file-service")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            if self.step() == 0:
+                self._stop.wait(50e-6)
+
+    # -- request path -----------------------------------------------------------------
+    def _fetch_and_submit(self, g: _GroupState) -> int:
+        batch = g.req_ring.consume(self.dma)
+        if batch is None:
+            return 0
+        # Land the batch in the DPU request buffer (the DMA destination).
+        # Size >= host ring guarantees in-flight requests never overlap here.
+        cap = len(g.req_buf.buf)
+        pos = g.req_buf_tail % cap
+        first = min(len(batch), cap - pos)
+        g.req_buf.write(pos, batch[:first])
+        if first < len(batch):
+            g.req_buf.write(0, batch[first:])
+        g.req_buf_tail += len(batch)
+        for raw in unframe_batch(batch):
+            self._submit_one(g, wire.decode_request(raw))
+        return 1
+
+    def _submit_one(self, g: _GroupState, req: wire.Request) -> None:
+        self.stats.requests += 1
+        resp_size = wire.response_size_for(req)
+        cap = len(g.resp_buf.buf)
+        # Keep each response contiguous: pad TailA to the wrap boundary when
+        # the slot would cross it (pad slots occupy space, deliver nothing).
+        pos = g.tail_a % cap
+        if pos + resp_size > cap:
+            pad = cap - pos
+            if g.tail_a + pad - g.tail_c > cap:
+                self._complete_inline(g, req, wire.E_NOSPC, b"")
+                return
+            g.pending.append(_PendingResp(g.group_id, g.tail_a, pad,
+                                          0, pad=True))
+            g.tail_a += pad
+        # Backpressure: the response buffer is a ring in virtual offsets.
+        if g.tail_a + resp_size - g.tail_c > cap:
+            self._complete_inline(g, req, wire.E_NOSPC, b"")
+            return
+        off = g.tail_a
+        g.tail_a += resp_size  # pre-allocate response space (advance TailA)
+        slot = _PendingResp(g.group_id, off, resp_size, req.request_id)
+        g.pending.append(slot)
+        self._write_resp_header(g, off, req.request_id, wire.E_PENDING,
+                                resp_size - wire.RESP_HDR.size)
+        if req.op == wire.OP_READ:
+            self.stats.reads += 1
+            self.stats.read_bytes += req.nbytes
+            dest = self._resp_payload_view(g, off, req.nbytes)
+            if not self.zero_copy:
+                # Straw-man: read into a scratch buffer, copy to response later.
+                scratch = bytearray(req.nbytes)
+
+                def on_done(err: int, g=g, off=off, req=req, scratch=scratch):
+                    if err == wire.E_OK:
+                        view = self._resp_payload_view(g, off, req.nbytes)
+                        view[:] = scratch  # the extra copy zero-copy removes
+                        self.stats.response_copies += 1
+                    self._finish(g, off, req, err)
+
+                self.fs.submit_read(req.file_id, req.offset, req.nbytes,
+                                    memoryview(scratch), on_done)
+            else:
+                self.fs.submit_read(
+                    req.file_id, req.offset, req.nbytes, dest,
+                    lambda err, g=g, off=off, req=req: self._finish(g, off, req, err))
+            if self.invalidate_hook:
+                self.invalidate_hook(req)  # invalidate-on-read (§6.1)
+        elif req.op == wire.OP_WRITE:
+            self.stats.writes += 1
+            self.stats.write_bytes += len(req.payload)
+            data = req.payload
+            if not self.zero_copy:
+                data = bytes(data)  # defensive copy the zero-copy path avoids
+                self.stats.request_copies += 1
+            self.fs.submit_write(
+                req.file_id, req.offset, data,
+                lambda err, g=g, off=off, req=req: self._finish(g, off, req, err))
+            if self.cache_hook:
+                self.cache_hook(req)  # cache-on-write (§6.1)
+        else:
+            self._control_op(g, off, req)
+
+    def _control_op(self, g: _GroupState, off: int, req: wire.Request) -> None:
+        self.stats.control_ops += 1
+        err, payload = wire.E_OK, b""
+        try:
+            if req.op == wire.OP_CREATE_FILE:
+                fid = self.fs.create_file(req.payload.decode(), req.file_id)
+                payload = fid.to_bytes(4, "little")
+            elif req.op == wire.OP_CREATE_DIR:
+                did = self.fs.create_dir(req.payload.decode())
+                payload = did.to_bytes(4, "little")
+            elif req.op == wire.OP_DELETE_FILE:
+                self.fs.delete_file(req.file_id)
+            elif req.op == wire.OP_TRUNCATE:
+                self.fs.truncate(req.file_id, req.offset)
+            elif req.op == wire.OP_FSYNC:
+                self.fs.sync_metadata()
+            elif req.op == wire.OP_LIST_DIR:
+                names = json.dumps(self.fs.list_dir(req.file_id)).encode()[:4096]
+                payload = names.ljust(4096, b"\x00")
+            else:
+                err = wire.E_INVAL
+        except FSError as e:
+            err = e.errno
+        expect = wire.response_size_for(req) - wire.RESP_HDR.size
+        payload = payload.ljust(expect, b"\x00")
+        view = self._resp_payload_view(g, off, expect)
+        view[:] = payload
+        self._finish(g, off, req, err)
+
+    def _complete_inline(self, g: _GroupState, req: wire.Request, err: int,
+                         payload: bytes, spin: int = 100_000) -> None:
+        """Emergency completion bypassing pre-allocation (backpressure path).
+
+        Bounded: if the host never drains its response ring, the request is
+        SHED (load shedding, counted) rather than deadlocking the service
+        thread — the host library surfaces the gap as a timeout."""
+        resp = wire.Response(req.request_id, err, len(payload), payload).encode()
+        for _ in range(spin):
+            if g.resp_ring.produce(self.dma, frame(resp)):
+                if g.interrupt:
+                    g.interrupt()
+                return
+        self.stats.shed_requests += 1
+
+    # -- response-buffer helpers -------------------------------------------------------
+    def _resp_view(self, g: _GroupState, voff: int, n: int) -> memoryview:
+        cap = len(g.resp_buf.buf)
+        pos = voff % cap
+        assert pos + n <= cap, "response crosses buffer wrap (sized to avoid)"
+        return memoryview(g.resp_buf.buf)[pos : pos + n].cast("B")
+
+    def _resp_payload_view(self, g: _GroupState, off: int, n: int) -> memoryview:
+        return self._resp_view(g, off + wire.RESP_HDR.size, n)
+
+    def _write_resp_header(self, g: _GroupState, off: int, rid: int, err: int,
+                           nbytes: int) -> None:
+        hdr = wire.RESP_HDR.pack(rid, err, nbytes)
+        self._resp_view(g, off, wire.RESP_HDR.size)[:] = hdr
+
+    def _read_resp_error(self, g: _GroupState, off: int) -> int:
+        raw = bytes(self._resp_view(g, off, wire.RESP_HDR.size))
+        return wire.RESP_HDR.unpack(raw)[1]
+
+    def _finish(self, g: _GroupState, off: int, req: wire.Request, err: int) -> None:
+        """I/O completion: flip the pre-allocated response's status in place."""
+        n = wire.response_size_for(req) - wire.RESP_HDR.size
+        self._write_resp_header(g, off, req.request_id, err, n)
+
+    # -- delivery (TailB/TailC discipline) ------------------------------------------
+    def _deliver(self, g: _GroupState) -> int:
+        # Advance TailB over the contiguous completed prefix (ordered
+        # execution); completed slots queue for delivery in order.
+        while g.pending:
+            slot = g.pending[0]
+            if (not slot.pad
+                    and self._read_resp_error(g, slot.off) == wire.E_PENDING):
+                break
+            g.pending.pop(0)
+            g.tail_b = slot.off + slot.size
+            if not slot.pad:
+                g.ready.append(slot)
+        if g.tail_b - g.tail_c < self.delivery_batch or not g.ready:
+            return 0
+        # One DMA write delivers as many ready responses as the host ring
+        # accepts; TailC advances to the end of the delivered prefix.
+        parts: list[bytes] = []
+        space = g.resp_ring.free_space(self.dma)
+        used = 0
+        take = 0
+        for slot in g.ready:
+            body = bytes(self._resp_view(g, slot.off, slot.size))
+            fr = frame(body)
+            if used + len(fr) > space:
+                break
+            parts.append(fr)
+            used += len(fr)
+            take += 1
+        if not parts:
+            return 0  # host ring full; retry next step
+        if not g.resp_ring.produce(self.dma, b"".join(parts)):
+            return 0
+        last = g.ready[take - 1]
+        g.tail_c = last.off + last.size
+        del g.ready[:take]
+        self.stats.response_batches += 1
+        self.stats.responses_delivered += take
+        if g.interrupt:
+            g.interrupt()
+        return 1
+
+
+def _split_responses(chunk: bytes) -> list[bytes]:
+    """Split a contiguous [TailC, TailB) range into individual responses."""
+    out = []
+    off = 0
+    n = len(chunk)
+    while off < n:
+        rid, err, nbytes = wire.RESP_HDR.unpack_from(chunk, off)
+        total = wire.RESP_HDR.size + nbytes
+        out.append(chunk[off : off + total])
+        off += total
+    return out

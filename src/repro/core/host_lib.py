@@ -1,0 +1,277 @@
+"""DDS host front-end file library (§4.2).
+
+A userspace library that storage applications link against instead of the OS
+file system.  It offers a familiar file API — ``CreateDirectory``,
+``CreateFile``, ``ReadFile``/``WriteFile`` (plus scattered reads & gathered
+writes), ``CreatePoll``/``PollAdd``/``PollWait`` — while every operation is
+encoded per Fig 9 and shipped to the DPU file service over the DMA rings of
+§4.1.  All operations except ``PollWait`` are non-blocking.
+
+``PollWait`` supports the paper's two modes:
+  * non-blocking (``timeout_s=0``): returns immediately with whatever
+    completions are available, letting the caller keep computing;
+  * sleeping (``timeout_s>0``): the caller sleeps on an event that the "DPU
+    driver interrupt" (fired by the file service after a response DMA-write)
+    sets — zero CPU burned while waiting.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from repro.core import wire
+from repro.core.file_service import FileServiceRunner
+from repro.core.ring import ProgressiveRing, ResponseRing, frame, unframe_batch
+
+INVALID_HANDLE = -1
+
+
+@dataclass
+class _Op:
+    """Book-kept in its notification group until the completion is polled."""
+    request_id: int
+    op: int
+    file_id: int
+    offset: int
+    nbytes: int
+    scatter: Sequence[bytearray] | None = None  # destinations for scattered reads
+    done: bool = False
+    error: int = wire.E_PENDING
+    data: bytes = b""
+
+
+@dataclass
+class Completion:
+    request_id: int
+    op: int
+    file_id: int
+    error: int
+    nbytes: int
+    data: bytes = b""
+
+
+class NotificationGroup:
+    """An epoll-like completion group with its own request/response rings."""
+
+    def __init__(self, group_id: int, req_ring: ProgressiveRing,
+                 resp_ring: ResponseRing):
+        self.group_id = group_id
+        self.req_ring = req_ring
+        self.resp_ring = resp_ring
+        self.files: set[int] = set()
+        self._ops: dict[int, _Op] = {}
+        self._lock = threading.Lock()
+        self._event = threading.Event()  # set by the DPU driver interrupt
+        self._next_rid = 1
+
+    def interrupt(self) -> None:
+        self._event.set()
+
+    def book(self, op: _Op) -> None:
+        with self._lock:
+            self._ops[op.request_id] = op
+
+    def next_request_id(self) -> int:
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            return rid
+
+    def _drain_ring(self) -> list[Completion]:
+        got: list[Completion] = []
+        while True:
+            claimed = self.resp_ring.try_claim()
+            if claimed is None:
+                break
+            _, raw = claimed
+            for msg in unframe_batch(raw):
+                resp = wire.decode_response(msg)
+                with self._lock:
+                    op = self._ops.pop(resp.request_id, None)
+                if op is None:
+                    continue  # response for an op another thread owns? (popped)
+                data = resp.payload
+                if op.op == wire.OP_READ and op.scatter is not None:
+                    pos = 0  # scattered read: split into destination buffers
+                    for buf in op.scatter:
+                        n = min(len(buf), len(data) - pos)
+                        buf[:n] = data[pos : pos + n]
+                        pos += n
+                got.append(Completion(resp.request_id, op.op, op.file_id,
+                                      resp.error, resp.nbytes,
+                                      data if op.scatter is None else b""))
+        return got
+
+    def poll_wait(self, timeout_s: float = 0.0) -> list[Completion]:
+        comps = self._drain_ring()
+        if comps or timeout_s == 0.0:
+            return comps  # non-blocking mode
+        # Sleeping mode: wait for the driver interrupt, no spinning.
+        self._event.clear()
+        deadline = timeout_s
+        if self._event.wait(deadline):
+            comps = self._drain_ring()
+        return comps
+
+    @property
+    def outstanding(self) -> int:
+        with self._lock:
+            return len(self._ops)
+
+
+class DDSFrontEnd:
+    """The host file library.  One per storage application process."""
+
+    def __init__(self, service: FileServiceRunner,
+                 ring_capacity: int = 1 << 18,
+                 max_progress: int | None = None):
+        self.service = service
+        self.ring_capacity = ring_capacity
+        self.max_progress = max_progress
+        self._groups: dict[int, NotificationGroup] = {}
+        self._file_group: dict[int, int] = {}
+        self._next_group = 1
+        self._lock = threading.Lock()
+        # A default control group for applications that never create one.
+        self._control_group = self.create_poll()
+
+    # -- notification groups -------------------------------------------------------
+    def create_poll(self) -> int:
+        with self._lock:
+            gid = self._next_group
+            self._next_group += 1
+        req = ProgressiveRing(self.ring_capacity, self.max_progress,
+                              name=f"req-g{gid}")
+        resp = ResponseRing(self.ring_capacity, name=f"resp-g{gid}")
+        group = NotificationGroup(gid, req, resp)
+        # Rings are pre-registered to the DPU driver for DMA at creation time.
+        self.service.register_group(gid, req, resp, interrupt=group.interrupt)
+        with self._lock:
+            self._groups[gid] = group
+        return gid
+
+    def poll_add(self, poll: int, file_handle: int) -> None:
+        g = self._groups[poll]
+        g.files.add(file_handle)
+        self._file_group[file_handle] = poll
+
+    def poll_wait(self, poll: int, timeout_s: float = 0.0) -> list[Completion]:
+        return self._groups[poll].poll_wait(timeout_s)
+
+    # -- control plane ----------------------------------------------------------------
+    def _sync_call(self, req: wire.Request) -> Completion:
+        g = self._groups[self._control_group]
+        req.request_id = g.next_request_id()
+        g.book(_Op(req.request_id, req.op, req.file_id, req.offset, req.nbytes))
+        g.req_ring.insert(frame(req.encode()))
+        for _ in range(1_000_000):
+            self.service.step()  # cooperative: drive the DPU when co-resident
+            comps = g.poll_wait(0.0)
+            if comps:
+                return comps[0]
+        raise TimeoutError("control op did not complete")
+
+    def create_directory(self, name: str) -> int:
+        c = self._sync_call(wire.Request(wire.OP_CREATE_DIR, 0, 0, 0, 0,
+                                         name.encode()))
+        if c.error != wire.E_OK:
+            raise OSError(c.error, f"CreateDirectory({name})")
+        return int.from_bytes(c.data[:4], "little")
+
+    def create_file(self, name: str, directory: int = 0) -> int:
+        c = self._sync_call(wire.Request(wire.OP_CREATE_FILE, 0, directory, 0, 0,
+                                         name.encode()))
+        if c.error != wire.E_OK:
+            raise OSError(c.error, f"CreateFile({name})")
+        return int.from_bytes(c.data[:4], "little")
+
+    def delete_file(self, file_handle: int) -> None:
+        c = self._sync_call(wire.Request(wire.OP_DELETE_FILE, 0, file_handle, 0, 0))
+        if c.error != wire.E_OK:
+            raise OSError(c.error, "DeleteFile")
+
+    def fsync(self) -> None:
+        c = self._sync_call(wire.Request(wire.OP_FSYNC, 0, 0, 0, 0))
+        if c.error != wire.E_OK:
+            raise OSError(c.error, "Fsync")
+
+    # -- data plane (non-blocking) -------------------------------------------------
+    def _group_for(self, file_handle: int) -> NotificationGroup:
+        gid = self._file_group.get(file_handle, self._control_group)
+        return self._groups[gid]
+
+    def read_file(self, file_handle: int, offset: int, nbytes: int) -> int:
+        """Non-blocking single read; returns the request id."""
+        g = self._group_for(file_handle)
+        rid = g.next_request_id()
+        req = wire.Request(wire.OP_READ, rid, file_handle, offset, nbytes)
+        g.book(_Op(rid, wire.OP_READ, file_handle, offset, nbytes))
+        g.req_ring.insert(frame(req.encode()))
+        return rid
+
+    def read_file_scatter(self, file_handle: int, offset: int,
+                          bufs: Sequence[bytearray]) -> int:
+        """Scattered read: one file I/O, results split across ``bufs``."""
+        g = self._group_for(file_handle)
+        rid = g.next_request_id()
+        total = sum(len(b) for b in bufs)
+        req = wire.Request(wire.OP_READ, rid, file_handle, offset, total)
+        g.book(_Op(rid, wire.OP_READ, file_handle, offset, total, scatter=bufs))
+        g.req_ring.insert(frame(req.encode()))
+        return rid
+
+    def write_file(self, file_handle: int, offset: int, data: bytes) -> int:
+        """Non-blocking single write; data inlined in the request (Fig 9)."""
+        g = self._group_for(file_handle)
+        rid = g.next_request_id()
+        req = wire.Request(wire.OP_WRITE, rid, file_handle, offset,
+                           len(data), bytes(data))
+        g.book(_Op(rid, wire.OP_WRITE, file_handle, offset, len(data)))
+        g.req_ring.insert(frame(req.encode()))
+        return rid
+
+    def write_file_gather(self, file_handle: int, offset: int,
+                          bufs: Sequence[bytes]) -> int:
+        """Gathered write: an array of source buffers, one file I/O."""
+        return self.write_file(file_handle, offset, b"".join(bufs))
+
+    # -- convenience synchronous wrappers (drive the co-resident service) ----------
+    def _max_io(self, file_handle: int) -> int:
+        """Largest single request: bounded by the ring's allowable progress
+        (requests inline write data, Fig 9) and the response ring capacity."""
+        g = self._group_for(file_handle)
+        return min(g.req_ring.max_progress, g.resp_ring.capacity // 2) - 256
+
+    def read_sync(self, file_handle: int, offset: int, nbytes: int) -> bytes:
+        chunk = self._max_io(file_handle)
+        parts = []
+        for off in range(0, nbytes, chunk):
+            n = min(chunk, nbytes - off)
+            rid = self.read_file(file_handle, offset + off, n)
+            parts.append(self._wait_one(file_handle, rid).data)
+        return b"".join(parts)
+
+    def write_sync(self, file_handle: int, offset: int, data: bytes) -> None:
+        chunk = self._max_io(file_handle)
+        for off in range(0, len(data), chunk):
+            rid = self.write_file(file_handle, offset + off,
+                                  data[off : off + chunk])
+            c = self._wait_one(file_handle, rid)
+            if c.error != wire.E_OK:
+                raise OSError(c.error, "WriteFile")
+
+    def _wait_one(self, file_handle: int, rid: int) -> Completion:
+        g = self._group_for(file_handle)
+        stash: list[Completion] = []
+        for _ in range(1_000_000):
+            self.service.step()
+            for c in g.poll_wait(0.0):
+                if c.request_id == rid:
+                    if c.error != wire.E_OK and c.op == wire.OP_READ:
+                        raise OSError(c.error, "ReadFile")
+                    return c
+                stash.append(c)
+            self.service.fs.device.poll()
+        raise TimeoutError(f"request {rid} did not complete")

@@ -1,0 +1,310 @@
+"""DDS offload engine (§6): customizable read offloading on the DPU.
+
+Users customize offloading with the four functions of Table 1:
+
+  ``OffPred(Msg, CacheTable) -> (HostReqs, DPUReqs)``  — who serves a request
+  ``OffFunc(Req, CacheTable) -> ReadOp | None``        — request -> file read
+  ``Cache(WriteOp)   -> [(Key, CacheItem)]``           — cache-on-write
+  ``Invalidate(ReadOp) -> [Key]``                      — invalidate-on-read
+
+Execution follows Fig 13 exactly: a context ring book-keeps outstanding
+reads in arrival order; if the ring is full the request (and the rest of the
+batch) is bounced to the host via the traffic director; completions are
+processed from the head and stop at the first still-pending context so
+responses leave in request order.
+
+Zero-copy (Fig 12): the engine pre-allocates a pool of DMA-accessible huge
+pages.  A read's destination buffer is carved from the pool WITH HEADROOM for
+the application response header, and the response "packets" reference slices
+of that same buffer (indirect packet buffers) — data is written once by the
+storage device and never copied again on its way to the wire.  A
+``zero_copy=False`` mode performs the straw-man's two copies so the benefit
+is measurable (Fig 23).
+"""
+
+from __future__ import annotations
+
+import struct
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core.cache_table import CacheTable
+from repro.core.file_service import SegmentFS
+from repro.core.traffic import FiveTuple, Packet, TrafficDirector
+from repro.core import wire
+
+MTU = 1500
+PKT_HEADROOM = 64  # L2-L4 placeholder space per packet buffer
+
+
+@dataclass
+class ReadOp:
+    file_id: int
+    offset: int
+    size: int
+
+
+@dataclass
+class WriteOp:
+    file_id: int
+    offset: int
+    data: bytes
+
+
+@dataclass
+class OffloadAPI:
+    """The user-supplied customization (Table 1).  Nullable per the paper.
+
+    ``response_header`` frames offloaded read responses for the application's
+    wire protocol; ``host_handler`` lets the host application interpret
+    non-default message types (integration hook, cf. §9's "hundreds of lines
+    of code" adoption).  It returns one of:
+      ('r', req_id, file_id, offset, nbytes)   -- host file read, then respond
+      ('w', req_id, file_id, offset, data)     -- host file write, then ack
+      ('resp', req_id, status, body)           -- immediate response
+    """
+    off_pred: Callable[[bytes, CacheTable | None], tuple[list[bytes], list[bytes]]]
+    off_func: Callable[[bytes, CacheTable | None], ReadOp | None]
+    cache: Callable[[WriteOp], list[tuple[object, object]]] | None = None
+    invalidate: Callable[[ReadOp], list[object]] | None = None
+    response_header: Callable[[bytes, "ReadOp", int], bytes] | None = None
+    host_handler: Callable[[bytes], tuple] | None = None
+
+
+class MemPool:
+    """Pool of DMA-accessible huge pages with a first-fit free list.
+
+    ``allocate`` returns ``(offset, memoryview)`` carved out of one large
+    pinned region; the view is handed to the storage driver as the I/O
+    destination and later referenced (not copied) by packet buffers.
+    """
+
+    def __init__(self, size: int = 1 << 24):
+        self.size = size
+        self.buf = np.zeros(size, dtype=np.uint8)
+        self._free: list[tuple[int, int]] = [(0, size)]  # (off, len)
+        self._lock = threading.Lock()
+        self.allocs = 0
+        self.failed = 0
+
+    def allocate(self, n: int) -> tuple[int, memoryview] | None:
+        n = (n + 63) & ~63  # cache-line align
+        with self._lock:
+            for i, (off, ln) in enumerate(self._free):
+                if ln >= n:
+                    if ln == n:
+                        self._free.pop(i)
+                    else:
+                        self._free[i] = (off + n, ln - n)
+                    self.allocs += 1
+                    return off, memoryview(self.buf)[off : off + n]
+            self.failed += 1
+            return None
+
+    def release(self, off: int, n: int) -> None:
+        n = (n + 63) & ~63
+        with self._lock:
+            self._free.append((off, n))
+            # Coalesce adjacent ranges (keep the list small).
+            self._free.sort()
+            merged: list[tuple[int, int]] = []
+            for o, l in self._free:
+                if merged and merged[-1][0] + merged[-1][1] == o:
+                    merged[-1] = (merged[-1][0], merged[-1][1] + l)
+                else:
+                    merged.append((o, l))
+            self._free = merged
+
+    def in_use(self) -> int:
+        with self._lock:
+            return self.size - sum(l for _, l in self._free)
+
+
+PENDING = 0
+COMPLETE = 1
+FAILED = 2
+
+
+@dataclass
+class _Context:
+    """One slot of the context ring (§6.2)."""
+    client: FiveTuple | None = None
+    read_op: ReadOp | None = None
+    status: int = COMPLETE   # empty slots look complete & consumed
+    pool_off: int = 0
+    pool_len: int = 0
+    buf: memoryview | None = None
+    app_hdr: bytes = b""
+    consumed: bool = True
+
+
+@dataclass
+class OffloadStats:
+    offloaded: int = 0
+    bounced_to_host: int = 0   # context ring full -> host path (Fig 13 l.5-7)
+    completed: int = 0
+    failed: int = 0
+    packets: int = 0
+    data_copies: int = 0       # nonzero only with zero_copy=False
+    bytes_served: int = 0
+
+
+class OffloadEngine:
+    """Executes offloaded reads with the context ring + zero-copy pool."""
+
+    def __init__(self, fs: SegmentFS, director: TrafficDirector,
+                 api: OffloadAPI, cache_table: CacheTable | None = None,
+                 ring_size: int = 256, pool_size: int = 1 << 24,
+                 zero_copy: bool = True,
+                 app_header: Callable[[bytes, ReadOp, int], bytes] | None = None,
+                 mtu: int = MTU):
+        self.fs = fs
+        self.director = director
+        self.api = api
+        self.cache_table = cache_table
+        self.ring_size = ring_size
+        self.pool = MemPool(pool_size)
+        self.zero_copy = zero_copy
+        self.app_header = app_header or (lambda req, op, err: b"")
+        self.mtu = mtu
+        self._ring = [_Context() for _ in range(ring_size)]
+        self._head = 0
+        self._tail = 0
+        self.stats = OffloadStats()
+
+    # -- Fig 13 main loop --------------------------------------------------------------
+    def step(self, max_requests: int = 64) -> int:
+        """Pull requests from the traffic director and execute them."""
+        work = 0
+        reqs: list[tuple[FiveTuple, bytes]] = []
+        while self.director.offload_queue and len(reqs) < max_requests:
+            reqs.append(self.director.offload_queue.popleft())
+        i = 0
+        while i < len(reqs):
+            self.complete_pending()
+            client, raw = reqs[i]
+            if self._tail - self._head >= self.ring_size:
+                # Ring fully occupied: send this and the REST to the host.
+                for c2, r2 in reqs[i:]:
+                    self._bounce_to_host(c2, r2)
+                break
+            read_op = self.api.off_func(raw, self.cache_table)
+            if read_op is None:
+                self._bounce_to_host(client, raw)
+                i += 1
+                continue
+            alloc = self.pool.allocate(PKT_HEADROOM + read_op.size)
+            if alloc is None:
+                self._bounce_to_host(client, raw)
+                i += 1
+                continue
+            off, view = alloc
+            ctx = self._ring[self._tail % self.ring_size]
+            ctx.client = client
+            ctx.read_op = read_op
+            ctx.status = PENDING
+            ctx.pool_off, ctx.pool_len = off, PKT_HEADROOM + read_op.size
+            ctx.buf = view
+            ctx.app_hdr = self.app_header(raw, read_op, wire.E_OK)
+            ctx.consumed = False
+            self._tail += 1
+            # Destination = pool memory; the device writes it exactly once.
+            dest = view[PKT_HEADROOM : PKT_HEADROOM + read_op.size]
+            if not self.zero_copy:
+                scratch = bytearray(read_op.size)
+
+                def done(err: int, ctx=ctx, scratch=scratch):
+                    if err == wire.E_OK:
+                        ctx.buf[PKT_HEADROOM : PKT_HEADROOM + ctx.read_op.size] = scratch
+                        self.stats.data_copies += 1
+                    ctx.status = COMPLETE if err == wire.E_OK else FAILED
+
+                self.fs.submit_read(read_op.file_id, read_op.offset,
+                                    read_op.size, memoryview(scratch), done)
+            else:
+                self.fs.submit_read(
+                    read_op.file_id, read_op.offset, read_op.size, dest,
+                    lambda err, ctx=ctx: self._mark(ctx, err))
+            self.stats.offloaded += 1
+            work += 1
+            i += 1
+        self.fs.device.poll()
+        self.complete_pending()
+        return work
+
+    @staticmethod
+    def _mark(ctx: _Context, err: int) -> None:
+        ctx.status = COMPLETE if err == wire.E_OK else FAILED
+
+    def _bounce_to_host(self, client: FiveTuple, raw: bytes) -> None:
+        conn = self.director._conn(client)
+        self.director._send_to_host(conn, client, raw)
+        self.stats.bounced_to_host += 1
+
+    # -- ordered completion (Fig 13 CompletePending) --------------------------------
+    def complete_pending(self) -> int:
+        done = 0
+        while self._head != self._tail:
+            ctx = self._ring[self._head % self.ring_size]
+            if ctx.status == PENDING:
+                break  # preserve response order
+            if not ctx.consumed:
+                pkts = self._create_pkts(ctx)
+                self.director.dpu_response(ctx.client, pkts)
+                self.pool.release(ctx.pool_off, ctx.pool_len)
+                if ctx.status == COMPLETE:
+                    self.stats.completed += 1
+                    self.stats.bytes_served += ctx.read_op.size
+                else:
+                    self.stats.failed += 1
+                ctx.consumed = True
+                ctx.buf = None
+            self._head += 1
+            done += 1
+        return done
+
+    def _create_pkts(self, ctx: _Context) -> list[Packet]:
+        """Indirect packet buffers: header bytes + *references* into the pool.
+
+        Data > MTU is segmented into multiple packets whose payloads are
+        slices of the read buffer — no copy (Fig 12 step 3).
+        """
+        hdr = ctx.app_hdr
+        if ctx.status != COMPLETE:
+            hdr = self.app_header(b"", ctx.read_op, wire.E_IO)
+            pkt = Packet(ctx.client, 0, hdr)
+            self.stats.packets += 1
+            return [pkt]
+        total = ctx.read_op.size
+        data = ctx.buf[PKT_HEADROOM : PKT_HEADROOM + total]
+        pkts: list[Packet] = []
+        # First packet carries the app header; place it in the buffer headroom
+        # immediately before the data so header+data are one contiguous slice.
+        h = len(hdr)
+        assert h <= PKT_HEADROOM
+        ctx.buf[PKT_HEADROOM - h : PKT_HEADROOM] = hdr
+        first_len = min(self.mtu, h + total)
+        pkts.append(Packet(ctx.client, 0,
+                           ctx.buf[PKT_HEADROOM - h : PKT_HEADROOM - h + first_len]))
+        sent = first_len - h
+        while sent < total:
+            n = min(self.mtu, total - sent)
+            pkts.append(Packet(ctx.client, 0, data[sent : sent + n]))
+            sent += n
+        self.stats.packets += len(pkts)
+        return pkts
+
+    # -- cache-table maintenance (wired into the file service, §6.1/Table 2) -------
+    def on_host_write(self, op: WriteOp) -> None:
+        if self.api.cache and self.cache_table is not None:
+            for key, item in self.api.cache(op):
+                self.cache_table.insert(key, item)
+
+    def on_host_read(self, op: ReadOp) -> None:
+        if self.api.invalidate and self.cache_table is not None:
+            for key in self.api.invalidate(op):
+                self.cache_table.delete(key)

@@ -1,0 +1,280 @@
+"""Calibrated performance model of the DDS testbed (§8).
+
+The container has no BlueField-2, NVMe SSD, or 100 Gbps NIC, so the paper's
+*absolute* hardware numbers are reproduced with an explicit queueing model:
+every storage solution is a pipeline of stages, each with a per-request CPU
+cost on some resource (host cores / DPU Arm cores / SSD / wire), a base
+latency, and a capacity.  Throughput is capped by the slowest stage; latency
+is the sum of base latencies inflated by M/M/1-style contention; host CPU
+cores consumed = throughput x per-request host CPU time.
+
+Stage constants are CALIBRATED to the paper's measured anchors (cited inline)
+— the model is a reproduction of the paper's *numbers and relationships*, not
+an independent measurement.  The relative, hardware-independent claims (ring
+design, zero-copy, cache table) are measured for real in ``benchmarks/``.
+
+Anchors (paper §8-§9):
+  * baseline TCP+NTFS reads:   390 K IOPS peak, 10.7 host cores, 11 ms    (Figs 14a/15a)
+  * DDS front-end (host) read: 580 K IOPS peak,  6.5 host cores, ~1.8 ms  (6x lower)
+  * DDS offloaded reads:       730 K IOPS peak,  ~0 host cores, 780 us    (Figs 14a/15a)
+  * zero-copy off:             520 K IOPS peak, 250 us @peak              (Fig 23)
+  * writes: baseline 210 K @48 ms tail; DDS files 290 K @3 ms tail        (Figs 14b/15b)
+  * Hyperscale page server: 90 K @4.4 ms p99 -> DDS 160 K @1.3 ms         (Fig 24)
+  * FASTER KV: 340 K op/s @20 cores, 13/18 ms -> DDS 970 K, 0 cores, 300 us (Figs 25/26)
+  * TCP echo: DPU halves RTT (Fig 4); TLDK 3x lower than Linux-on-DPU (Fig 19)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Stage:
+    name: str
+    where: str                 # 'host' | 'dpu' | 'ssd' | 'wire'
+    cpu_us: float = 0.0        # busy time per request on this resource
+    latency_us: float = 0.0    # uncontended per-request latency
+    servers: float = 1.0       # parallel servers (cores, queue slots)
+    cap_kiops: float = math.inf
+
+
+@dataclass
+class Solution:
+    name: str
+    stages: list[Stage]
+    note: str = ""
+    tail_factor: float = 3.0     # p99 / p50 at load
+
+    def peak_kiops(self) -> float:
+        peak = math.inf
+        for s in self.stages:
+            peak = min(peak, s.cap_kiops)
+            if s.cpu_us > 0:
+                peak = min(peak, s.servers * 1e3 / s.cpu_us)  # kiops
+        return peak
+
+    def base_latency_us(self) -> float:
+        return sum(s.latency_us for s in self.stages)
+
+    def evaluate(self, target_kiops: float) -> "Operating":
+        ach = min(target_kiops, self.peak_kiops() * 0.999)
+        host_cores = sum(ach * 1e3 * s.cpu_us * 1e-6
+                         for s in self.stages if s.where == "host")
+        dpu_cores = sum(ach * 1e3 * s.cpu_us * 1e-6
+                        for s in self.stages if s.where == "dpu")
+        # Single bounded-utilization M/M/1-style inflation: at the operating
+        # peak every solution runs at u=0.9 => x5.26 over its base latency.
+        u = min(0.9, ach / max(self.peak_kiops(), 1e-9) * 0.9)
+        infl = 1.0 / (1.0 - u * u)
+        p50 = self.base_latency_us() * infl
+        p99 = p50 * self.tail_factor
+        return Operating(self.name, ach, host_cores, dpu_cores, p50, p99)
+
+
+@dataclass
+class Operating:
+    name: str
+    kiops: float
+    host_cores: float
+    dpu_cores: float
+    p50_us: float
+    p99_us: float
+
+
+# ---------------------------------------------------------------------------
+# Calibrated stage libraries (1 KB random reads unless noted).
+# ---------------------------------------------------------------------------
+
+def _ssd(cap_kiops: float = 733.0) -> Stage:
+    # 1 TB NVMe: ~730 K 1KB IOPS ceiling observed by DDS offloading (Fig 14a).
+    return Stage("ssd", "ssd", latency_us=95.0, servers=128, cap_kiops=cap_kiops)
+
+
+def baseline_tcp_ntfs_read() -> Solution:
+    """(5) Windows sockets TCP/IP + NTFS: 390 K peak, 10.7 cores, 11 ms."""
+    return Solution("tcp+windows-files", [
+        Stage("dbms-net", "host", cpu_us=14.0, latency_us=120.0, servers=17,
+              cap_kiops=391.0),
+        Stage("os-net", "host", cpu_us=6.4, latency_us=60.0, servers=17),
+        Stage("os-fs", "host", cpu_us=5.0, latency_us=1810.0, servers=17),
+        Stage("app", "host", cpu_us=2.0, latency_us=10.0, servers=17),
+        _ssd(),
+    ], note="baseline of Figs 14/15")
+
+
+def dds_frontend_read() -> Solution:
+    """(6) TCP + DDS files: host keeps network; file exec on the DPU."""
+    return Solution("tcp+dds-files", [
+        Stage("dbms-net", "host", cpu_us=8.0, latency_us=120.0, servers=10,
+              cap_kiops=581.0),
+        Stage("os-net", "host", cpu_us=2.2, latency_us=60.0, servers=10),
+        Stage("dds-lib", "host", cpu_us=1.0, latency_us=5.0, servers=10),
+        Stage("dma-ring", "dpu", cpu_us=0.6, latency_us=8.0, servers=1),
+        Stage("dpu-file-svc", "dpu", cpu_us=1.0, latency_us=12.0, servers=1),
+        _ssd(),
+    ], note="DDS front-end library; 6x latency cut (Fig 15a)")
+
+
+def dds_offload_read(zero_copy: bool = True) -> Solution:
+    """(9) full DDS offloading: requests never touch the host.
+    3 Arm cores (§7): DMA, SPDK file service, director+engine colocated."""
+    copies = 0.0 if zero_copy else 0.55    # per-request Arm memcpy time
+    cap = 733.0 if zero_copy else 521.0    # Fig 23: 730 K vs 520 K
+    lat = 14.0 if zero_copy else 22.0      # Fig 23: 170 us vs 250 us at peak
+    return Solution("dds-offload" + ("" if zero_copy else "-nocopy"), [
+        Stage("td+offload-engine", "dpu", cpu_us=1.2 + copies, latency_us=lat,
+              servers=1, cap_kiops=cap),
+        Stage("dpu-file-svc", "dpu", cpu_us=1.1, latency_us=12.0, servers=1),
+        _ssd(cap),
+    ], note="zero host CPU; 780 us @730 K (Fig 15a)")
+
+
+def baseline_write() -> Solution:
+    return Solution("tcp+windows-files-write", [
+        Stage("dbms-net", "host", cpu_us=14.0, latency_us=120.0, servers=12,
+              cap_kiops=211.0),
+        Stage("os-net", "host", cpu_us=6.4, latency_us=60.0, servers=12),
+        Stage("os-fs-write", "host", cpu_us=8.0, latency_us=2850.0,
+              servers=12),
+        _ssd(290.0),
+    ], note="48 ms tail at 210 K (Fig 15b)")
+
+
+def dds_frontend_write() -> Solution:
+    return Solution("tcp+dds-files-write", [
+        Stage("dbms-net", "host", cpu_us=8.0, latency_us=60.0, servers=8,
+              cap_kiops=291.0),
+        Stage("os-net", "host", cpu_us=2.2, latency_us=60.0, servers=8),
+        Stage("dds-lib", "host", cpu_us=1.0, latency_us=5.0, servers=8),
+        Stage("dma-ring", "dpu", cpu_us=0.6, latency_us=8.0, servers=1),
+        Stage("dpu-file-svc", "dpu", cpu_us=1.2, latency_us=30.0, servers=1),
+        Stage("ssd-write", "ssd", latency_us=30.0, servers=128,
+              cap_kiops=320.0),
+    ], note="3 ms tail at 290 K (Fig 15b)")
+
+
+# -- Fig 16: the ten solutions ---------------------------------------------------
+
+def detailed_comparison() -> list[Solution]:
+    local_ntfs = Solution("local+windows-files", [
+        Stage("os-fs", "host", cpu_us=5.0, latency_us=140.0, servers=6,
+              cap_kiops=452.0),
+        _ssd(),
+    ], note="(1) local SSD via NTFS")
+    local_dds = Solution("local+dds-files", [
+        Stage("dds-lib", "host", cpu_us=1.0, latency_us=5.0, servers=4,
+              cap_kiops=733.0),
+        Stage("dma-ring", "dpu", cpu_us=0.6, latency_us=8.0, servers=1),
+        Stage("dpu-file-svc", "dpu", cpu_us=1.0, latency_us=12.0, servers=1),
+        _ssd(),
+    ], note="(2) local files executed on the DPU")
+    smb = Solution("smb", [
+        Stage("smb-stack", "host", cpu_us=30.0, latency_us=700.0, servers=8,
+              cap_kiops=121.0),
+        Stage("os-fs", "host", cpu_us=5.0, latency_us=140.0, servers=8),
+        _ssd(),
+    ], note="(3) Windows remote file service")
+    smb_direct = Solution("smb-direct", [
+        Stage("smb-rdma", "host", cpu_us=16.0, latency_us=260.0, servers=8,
+              cap_kiops=182.0),
+        Stage("os-fs", "host", cpu_us=5.0, latency_us=140.0, servers=8),
+        _ssd(),
+    ], note="(4) SMB over RDMA")
+    redy_win = Solution("redy+windows-files", [
+        Stage("redy-rpc", "host", cpu_us=9.0, latency_us=25.0, servers=4,
+              cap_kiops=733.0),   # burns polling cores on both ends
+        Stage("os-fs", "host", cpu_us=5.0, latency_us=140.0, servers=8),
+        _ssd(),
+    ], note="(7) RDMA RPC + host files; polls cores")
+    redy_dds = Solution("redy+dds-files", [
+        Stage("redy-rpc", "host", cpu_us=9.0, latency_us=25.0, servers=4,
+              cap_kiops=733.0),
+        Stage("dds-lib", "host", cpu_us=1.0, latency_us=5.0, servers=4),
+        Stage("dma-ring", "dpu", cpu_us=0.6, latency_us=8.0, servers=1),
+        Stage("dpu-file-svc", "dpu", cpu_us=1.0, latency_us=12.0, servers=1),
+        _ssd(),
+    ], note="(8) low latency, but client+server poll cores")
+    dds_rdma = Solution("dds-offload-rdma", [
+        Stage("rdma-nic", "dpu", cpu_us=0.8, latency_us=3.0, servers=1,
+              cap_kiops=733.0),
+        Stage("offload-engine", "dpu", cpu_us=1.2, latency_us=6.0, servers=1),
+        Stage("dpu-file-svc", "dpu", cpu_us=1.0, latency_us=12.0, servers=1),
+        _ssd(),
+    ], note="(10) near-local cost/latency")
+    return [local_ntfs, local_dds, smb, smb_direct,
+            baseline_tcp_ntfs_read(), dds_frontend_read(),
+            redy_win, redy_dds, dds_offload_read(), dds_rdma]
+
+
+# -- §9 integrations -----------------------------------------------------------------
+
+def hyperscale_page_server(dds: bool) -> Solution:
+    """GetPage@LSN serving (8 KB pages, RBPEX on local SSD) — Fig 24."""
+    if not dds:
+        return Solution("hyperscale-baseline", [
+            Stage("sql-net", "host", cpu_us=60.0, latency_us=90.0, servers=17,
+                  cap_kiops=91.0),
+            Stage("os-fs", "host", cpu_us=14.0, latency_us=60.0, servers=17),
+            Stage("ssd-8k", "ssd", latency_us=130.0, servers=128, cap_kiops=180.0),
+        ], note="4.4 ms p99 @90 K (Fig 24)")
+    return Solution("hyperscale-dds", [
+        Stage("tldk", "dpu", cpu_us=2.2, latency_us=8.0, servers=1,
+              cap_kiops=161.0),
+        Stage("offload-engine", "dpu", cpu_us=1.6, latency_us=6.0, servers=1),
+        Stage("dpu-file-svc", "dpu", cpu_us=1.4, latency_us=12.0, servers=1),
+        Stage("ssd-8k", "ssd", latency_us=130.0, servers=128, cap_kiops=185.0),
+    ], note="1.3 ms @160 K (Fig 24)", tail_factor=1.6)
+
+
+def faster_kv(dds: bool) -> Solution:
+    """YCSB uniform reads on disaggregated FASTER (8 B kv) — Figs 25/26."""
+    if not dds:
+        return Solution("faster-baseline", [
+            Stage("kv-net", "host", cpu_us=40.0, latency_us=400.0, servers=20,
+                  cap_kiops=341.0),
+            Stage("faster-index", "host", cpu_us=6.0, latency_us=30.0, servers=20),
+            Stage("idevice", "host", cpu_us=12.0, latency_us=2000.0, servers=20),
+            Stage("ssd-rec", "ssd", latency_us=95.0, servers=128,
+                  cap_kiops=400.0),
+        ], note="20 cores, 13/18 ms @340 K (Figs 25/26)", tail_factor=1.4)
+    return Solution("faster-dds", [
+        Stage("tldk", "dpu", cpu_us=1.6, latency_us=8.0, servers=2,
+              cap_kiops=971.0),
+        Stage("offload-engine", "dpu", cpu_us=0.8, latency_us=6.0, servers=1),
+        Stage("dpu-file-svc", "dpu", cpu_us=0.6, latency_us=12.0, servers=1),
+        Stage("ssd-rec", "ssd", latency_us=40.0, servers=128,
+              cap_kiops=1000.0),
+    ], note="970 K op/s, ~300 us, zero host CPU (Figs 25/26)",
+        tail_factor=1.4)
+
+
+# -- Fig 4 / 19 / 20: echo latency models ---------------------------------------------
+
+def echo_latency_us(size_b: int, responder: str) -> float:
+    """TCP echo RTT by responder: 'host', 'dpu-linux', 'dpu-tldk'."""
+    wire = 2.0 + size_b / 12.5e3            # 100 Gbps wire both ways
+    if responder == "host":
+        return wire + 11.0 + 24.0 + size_b / 4e3   # NIC->host PCIe + kernel TCP
+    if responder == "dpu-linux":
+        return wire + 3.0 + 68.0 + size_b / 2.4e3  # weak-core kernel stack
+    if responder == "dpu-tldk":
+        return wire + 3.0 + 9.5 + size_b / 8e3     # userspace stack on Arm
+    raise ValueError(responder)
+
+
+def faster_rmw_kops(threads: int, where: str) -> float:
+    """Fig 5: FASTER RMW throughput on host vs DPU.
+
+    Host (EPYC) scales past 8 threads; the DPU (8 Arm A72) is ~3x slower
+    per thread and flat beyond 8 threads, reaching the paper's "up to 4.5x
+    slower" at 8+ threads."""
+    if where == "host":
+        return 170.0 * min(threads, 48) ** 0.95
+    return 170.0 / 3.0 * min(threads, 8) ** 0.82
+
+
+def director_bandwidth_gbps(cores: int) -> float:
+    """Fig 21: 6.4 Gbps on one Arm core, linear RSS scaling (8 cores max)."""
+    return 6.4 * min(cores, 8)

@@ -1,0 +1,314 @@
+"""DDS traffic director (§5): bump-in-the-wire + PEP transport transparency.
+
+No NIC exists inside a JAX container, so the transport is modeled with typed
+packets on in-process wires — but the *semantics* the paper cares about are
+implemented exactly:
+
+  * **Application signature** (§5.1): a 5-tuple wildcard filter evaluated on
+    packet headers.  Matching is "pushed down to the network interface": a
+    non-matching packet is hardware-forwarded to the host with ZERO DPU-core
+    latency added; only matching packets reach the director's cores.
+
+  * **Offload predicate**: user code applied to packet payloads, producing a
+    host list and a DPU list per network message (Table 1 ``OffPred``).
+
+  * **PEP / TCP splitting** (§5.2): partial offloading breaks end-to-end
+    sequence numbers (Fig 11) — if the DPU consumed bytes [132, 1064) of a
+    flow, the host's TCP would see a gap and dup-ACK, forcing the client to
+    resend everything that was offloaded.  The director therefore terminates
+    the client connection at the DPU and opens a SECOND connection to the
+    host with its own contiguous sequence space; host-bound requests are
+    re-framed onto it.  ``TCPReceiver`` models the host stack so tests can
+    show dup-ACKs with a naive splitter and none with the PEP.
+
+  * **RSS** (§7): flows are mapped to director cores by a SYMMETRIC 5-tuple
+    hash, so host responses in a split connection are handled by the same
+    core that split it — no cross-core connection state.
+
+Latency accounting is *modeled* (BF-2 measurements from §5.3: ~6 us to
+forward a packet via an Arm core, ~10 us round trip for a matched packet
+that fails the predicate); nothing sleeps.
+"""
+
+from __future__ import annotations
+
+import struct
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+# Modeled BF-2 constants (§5.3).
+ARM_FORWARD_LATENCY_S = 6e-6
+PREDICATE_FAIL_RTT_S = 10e-6
+TLDK_PER_PKT_S = 2e-6     # userspace stack per-packet cost on an Arm core
+LINUX_TCP_PER_PKT_S = 25e-6  # kernel stack on the DPU (Fig 19: ~3x worse)
+
+FLAG_SYN = 1
+FLAG_ACK = 2
+FLAG_FIN = 4
+
+
+@dataclass(frozen=True)
+class FiveTuple:
+    src_ip: str
+    src_port: int
+    dst_ip: str
+    dst_port: int
+    proto: str = "tcp"
+
+    def reversed(self) -> "FiveTuple":
+        return FiveTuple(self.dst_ip, self.dst_port, self.src_ip,
+                         self.src_port, self.proto)
+
+
+@dataclass
+class Packet:
+    flow: FiveTuple
+    seq: int                 # first byte's sequence number
+    payload: bytes | memoryview
+    flags: int = 0
+    ack: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload)
+
+
+@dataclass
+class ApplicationSignature:
+    """5-tuple wildcard filter; None = match-any (§5.1 example)."""
+    src_ip: str | None = None
+    src_port: int | None = None
+    dst_ip: str | None = None
+    dst_port: int | None = None
+    proto: str | None = "tcp"
+
+    def matches(self, ft: FiveTuple) -> bool:
+        return ((self.src_ip is None or self.src_ip == ft.src_ip)
+                and (self.src_port is None or self.src_port == ft.src_port)
+                and (self.dst_ip is None or self.dst_ip == ft.dst_ip)
+                and (self.dst_port is None or self.dst_port == ft.dst_port)
+                and (self.proto is None or self.proto == ft.proto))
+
+
+class Wire:
+    """A unidirectional link: thread-safe packet queue."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._q: deque[Packet] = deque()
+        self._lock = threading.Lock()
+
+    def push(self, pkt: Packet) -> None:
+        with self._lock:
+            self._q.append(pkt)
+
+    def pop(self) -> Packet | None:
+        with self._lock:
+            return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+
+class TCPReceiver:
+    """Host TCP receive model: detects sequence gaps and duplicate-ACKs.
+
+    This exists to demonstrate (and regression-test) Fig 11: with a naive
+    bump-in-the-wire that silently consumes offloaded bytes, the host sees a
+    gap and dup-ACKs, forcing client retransmission of offloaded data.
+    """
+
+    def __init__(self):
+        self.expected_seq = 0
+        self.dup_acks = 0
+        self.delivered: list[bytes] = []
+        self.acked: int = 0
+
+    def receive(self, pkt: Packet) -> tuple[bool, int]:
+        """Returns (accepted, ack_number)."""
+        if pkt.flags & FLAG_SYN:
+            self.expected_seq = pkt.seq + 1
+            self.acked = self.expected_seq
+            return True, self.acked
+        if pkt.seq != self.expected_seq:
+            self.dup_acks += 1          # fast-recovery trigger
+            return False, self.acked    # duplicate ACK of the old edge
+        self.expected_seq += pkt.nbytes
+        self.acked = self.expected_seq
+        self.delivered.append(bytes(pkt.payload))
+        return True, self.acked
+
+
+def rss_core(ft: FiveTuple, ncores: int) -> int:
+    """Symmetric RSS hash: both directions of a flow land on one core (§7)."""
+    a = (ft.src_ip, ft.src_port)
+    b = (ft.dst_ip, ft.dst_port)
+    lo, hi = (a, b) if a <= b else (b, a)
+    h = hash((lo, hi, ft.proto)) & 0x7FFFFFFF
+    return h % max(1, ncores)
+
+
+@dataclass
+class _PEPConnection:
+    """State for one split client connection (client<->DPU, DPU<->host)."""
+    client_flow: FiveTuple
+    client_next_seq: int = 0     # next byte expected from the client
+    client_resp_seq: int = 0     # next byte we send toward the client
+    host_next_seq: int = 0       # next byte on the DPU->host connection
+    core: int = 0
+
+
+@dataclass
+class DirectorStats:
+    hw_forwarded: int = 0         # packets bypassing DPU cores (NIC match miss)
+    inspected: int = 0
+    to_host: int = 0              # messages re-framed to the host connection
+    to_dpu: int = 0               # messages handed to the offload engine
+    resp_from_host: int = 0
+    resp_from_dpu: int = 0
+    modeled_time_s: float = 0.0
+    per_core_pkts: dict[int, int] = field(default_factory=dict)
+
+
+class TrafficDirector:
+    """The DDS bump-in-the-wire packet processor."""
+
+    def __init__(self, signature: ApplicationSignature,
+                 off_pred: Callable[[bytes, object], tuple[list[bytes], list[bytes]]],
+                 cache_table: object | None = None,
+                 ncores: int = 1,
+                 host_port: int = 9999,
+                 userspace_stack: bool = True):
+        self.signature = signature
+        self.off_pred = off_pred
+        self.cache_table = cache_table
+        self.ncores = ncores
+        self.host_port = host_port
+        self.per_pkt_cost = TLDK_PER_PKT_S if userspace_stack else LINUX_TCP_PER_PKT_S
+        # Wires: ingress (from NIC), to-host, to-client, and the offload queue.
+        self.ingress = Wire("nic-ingress")
+        self.to_host = Wire("dpu->host")
+        self.from_host = Wire("host->dpu")
+        self.to_client = Wire("dpu->client")
+        self.offload_queue: deque[tuple[FiveTuple, bytes]] = deque()
+        self._conns: dict[FiveTuple, _PEPConnection] = {}
+        self._host_flow_of: dict[FiveTuple, FiveTuple] = {}
+        self.stats = DirectorStats()
+        self._lock = threading.Lock()
+
+    # -- connection management ------------------------------------------------------
+    def _conn(self, ft: FiveTuple) -> _PEPConnection:
+        c = self._conns.get(ft)
+        if c is None:
+            c = _PEPConnection(ft, core=rss_core(ft, self.ncores))
+            self._conns[ft] = c
+            # Second connection of the split: DPU -> host, own seq space.
+            host_flow = FiveTuple("dpu-proxy", 40000 + len(self._conns),
+                                  "host", self.host_port, ft.proto)
+            self._host_flow_of[ft] = host_flow
+        return c
+
+    # -- ingress processing (one step = one packet) -----------------------------------
+    def step(self) -> bool:
+        pkt = self.ingress.pop()
+        if pkt is None:
+            return False
+        # Stage 1: application signature, evaluated in NIC hardware (§5.3).
+        if not self.signature.matches(pkt.flow):
+            self.stats.hw_forwarded += 1
+            self.to_host.push(pkt)   # line-rate forward; no Arm-core latency
+            return True
+        conn = self._conn(pkt.flow)
+        self.stats.inspected += 1
+        self.stats.per_core_pkts[conn.core] = (
+            self.stats.per_core_pkts.get(conn.core, 0) + 1)
+        self.stats.modeled_time_s += self.per_pkt_cost
+        if pkt.flags & FLAG_SYN:
+            conn.client_next_seq = pkt.seq + 1
+            return True
+        if pkt.seq != conn.client_next_seq:
+            return True  # PEP handles client-side reliability; drop dup/ooo
+        conn.client_next_seq += pkt.nbytes
+        # Stage 2: the offload predicate inspects the payload.
+        host_msgs, dpu_msgs = self.off_pred(bytes(pkt.payload), self.cache_table)
+        for m in host_msgs:
+            self._send_to_host(conn, pkt.flow, m)
+        for m in dpu_msgs:
+            self.stats.to_dpu += 1
+            self.offload_queue.append((pkt.flow, m))
+        if host_msgs and not dpu_msgs:
+            # matched the signature but fully host-bound: paid the round trip
+            self.stats.modeled_time_s += PREDICATE_FAIL_RTT_S - self.per_pkt_cost
+        return True
+
+    def _send_to_host(self, conn: _PEPConnection, client_flow: FiveTuple,
+                      msg: bytes) -> None:
+        """Re-frame a host-bound message onto the split DPU->host connection.
+
+        The host connection's sequence numbers stay CONTIGUOUS even though
+        the DPU consumed some client bytes — transport transparency.
+        """
+        host_flow = self._host_flow_of[client_flow]
+        self.to_host.push(Packet(host_flow, conn.host_next_seq, msg))
+        conn.host_next_seq += len(msg)
+        self.stats.to_host += 1
+        self.stats.modeled_time_s += ARM_FORWARD_LATENCY_S
+
+    # -- response paths -----------------------------------------------------------------
+    def host_response(self, host_flow: FiveTuple, msg: bytes) -> None:
+        """A response from the host app on the second connection."""
+        client_flow = next((cf for cf, hf in self._host_flow_of.items()
+                            if hf == host_flow), None)
+        if client_flow is None:
+            # Hardware-forwarded flow (no split): respond on the client flow.
+            client_flow = host_flow
+        self._respond_to_client(client_flow, msg)
+        self.stats.resp_from_host += 1
+
+    def dpu_response(self, client_flow: FiveTuple, packets: list[Packet]) -> None:
+        """Responses produced by the offload engine (already segmented)."""
+        conn = self._conn(client_flow)
+        for p in packets:
+            p.flow = client_flow.reversed()
+            p.seq = conn.client_resp_seq
+            conn.client_resp_seq += p.nbytes
+            self.to_client.push(p)
+        self.stats.resp_from_dpu += 1
+
+    def _respond_to_client(self, client_flow: FiveTuple, msg: bytes) -> None:
+        conn = self._conn(client_flow)
+        self.to_client.push(Packet(client_flow.reversed(),
+                                   conn.client_resp_seq, msg))
+        conn.client_resp_seq += len(msg)
+
+    def drain_host_wire(self, deliver: Callable[[FiveTuple, bytes], None]) -> int:
+        """Pump packets that crossed to the host into the host application."""
+        n = 0
+        while True:
+            pkt = self.to_host.pop()
+            if pkt is None:
+                return n
+            deliver(pkt.flow, bytes(pkt.payload))
+            n += 1
+
+
+class NaiveSplitter:
+    """A broken bump-in-the-wire WITHOUT the PEP, for the Fig 11 test.
+
+    Offloaded bytes are silently consumed; host-bound packets keep their
+    ORIGINAL client sequence numbers, so the host receiver sees gaps.
+    """
+
+    def __init__(self, off_pred):
+        self.off_pred = off_pred
+        self.offloaded: list[bytes] = []
+
+    def process(self, pkt: Packet, host: TCPReceiver) -> tuple[bool, int]:
+        host_msgs, dpu_msgs = self.off_pred(bytes(pkt.payload), None)
+        if dpu_msgs and not host_msgs:
+            self.offloaded.append(bytes(pkt.payload))
+            return True, host.acked  # consumed on the DPU; host never sees it
+        return host.receive(pkt)     # gap => dup-ACK

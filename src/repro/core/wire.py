@@ -1,0 +1,88 @@
+"""Request/response encodings on the DDS rings (paper Figure 9).
+
+A *request* is a fixed header followed, for writes, by the inlined data so
+the entire request moves host->DPU in a single DMA read.  A *response* is a
+fixed header followed, for reads, by the read data.  Control-plane operations
+(file/directory management) use the same header with op-specific payloads —
+the paper optimizes the data plane; control ops are rare.
+
+All integers little-endian.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+# ---- op codes ---------------------------------------------------------------
+OP_READ = 1
+OP_WRITE = 2
+OP_CREATE_FILE = 3
+OP_CREATE_DIR = 4
+OP_DELETE_FILE = 5
+OP_TRUNCATE = 6
+OP_FSYNC = 7
+OP_LIST_DIR = 8
+
+DATA_PLANE_OPS = (OP_READ, OP_WRITE)
+
+# ---- error codes --------------------------------------------------------------
+E_PENDING = 0xFFFFFFFF  # response space pre-allocated, I/O not yet complete
+E_OK = 0
+E_NOENT = 2
+E_IO = 5
+E_INVAL = 22
+E_NOSPC = 28
+
+# request header: op(u8) request_id(u64) file_id(u32) offset(u64) nbytes(u32)
+REQ_HDR = struct.Struct("<BQIQI")
+# response header: request_id(u64) error(u32) nbytes(u32)
+RESP_HDR = struct.Struct("<QII")
+
+
+@dataclass
+class Request:
+    op: int
+    request_id: int
+    file_id: int
+    offset: int
+    nbytes: int
+    payload: bytes = b""
+
+    def encode(self) -> bytes:
+        return REQ_HDR.pack(self.op, self.request_id, self.file_id,
+                            self.offset, self.nbytes) + self.payload
+
+
+def decode_request(raw: bytes | memoryview) -> Request:
+    op, rid, fid, off, nbytes = REQ_HDR.unpack_from(raw, 0)
+    payload = bytes(raw[REQ_HDR.size:])
+    return Request(op, rid, fid, off, nbytes, payload)
+
+
+@dataclass
+class Response:
+    request_id: int
+    error: int
+    nbytes: int
+    payload: bytes = b""
+
+    def encode(self) -> bytes:
+        return RESP_HDR.pack(self.request_id, self.error, self.nbytes) + self.payload
+
+
+def decode_response(raw: bytes | memoryview) -> Response:
+    rid, err, nbytes = RESP_HDR.unpack_from(raw, 0)
+    payload = bytes(raw[RESP_HDR.size : RESP_HDR.size + nbytes])
+    return Response(rid, err, nbytes, payload)
+
+
+def response_size_for(req: Request) -> int:
+    """Expected response size — derivable in advance (§4.3 pre-allocation)."""
+    if req.op == OP_READ:
+        return RESP_HDR.size + req.nbytes
+    if req.op in (OP_CREATE_FILE, OP_CREATE_DIR):
+        return RESP_HDR.size + 4          # returns the new id
+    if req.op == OP_LIST_DIR:
+        return RESP_HDR.size + 4096       # bounded listing
+    return RESP_HDR.size                   # write/others: header only

@@ -1,0 +1,157 @@
+"""Fault tolerance for 1000+-node runs: heartbeats, stragglers, restart.
+
+Components:
+
+``HeartbeatMonitor``
+    Tracks per-host heartbeats (monotonic step + timestamp).  A host whose
+    heartbeat is older than ``timeout_s`` is declared dead; the supervisor
+    then triggers an elastic restart.
+
+``StragglerDetector``
+    Collects per-host step durations and flags hosts slower than
+    ``threshold x`` the fleet median over a sliding window.  At pod scale a
+    straggler is usually a failing HBM/host: the mitigation (as in
+    production TPU fleets) is checkpoint-exclude-restart rather than work
+    stealing, so the detector emits *policy decisions*, not reassignments.
+
+``TrainSupervisor``
+    Drives a Trainer with failure injection hooks: on a detected failure it
+    restores the latest DDS checkpoint (write-behind saves mean at most
+    ``ckpt_every`` steps are replayed) and continues — optionally on a
+    SHRUNKEN data-parallel world (elastic restart), re-sharding parameter
+    rows via ``CheckpointManager.restore_elastic``.
+
+All timing here is injected (``now`` callables) so tests are deterministic.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass
+class HostState:
+    host: str
+    last_step: int = -1
+    last_beat_s: float = 0.0
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: list[str], timeout_s: float = 60.0,
+                 now: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.now = now
+        self.hosts = {h: HostState(h, last_beat_s=now()) for h in hosts}
+
+    def beat(self, host: str, step: int) -> None:
+        st = self.hosts[host]
+        st.last_step = step
+        st.last_beat_s = self.now()
+        st.alive = True
+
+    def dead_hosts(self) -> list[str]:
+        t = self.now()
+        dead = []
+        for st in self.hosts.values():
+            if t - st.last_beat_s > self.timeout_s:
+                st.alive = False
+                dead.append(st.host)
+        return dead
+
+    def remove(self, host: str) -> None:
+        self.hosts.pop(host, None)
+
+
+class StragglerDetector:
+    """Flags hosts whose step time exceeds threshold x fleet median."""
+
+    def __init__(self, threshold: float = 1.5, window: int = 16,
+                 min_samples: int = 4):
+        self.threshold = threshold
+        self.window = window
+        self.min_samples = min_samples
+        self._samples: dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=window))
+
+    def record(self, host: str, step_time_s: float) -> None:
+        self._samples[host].append(step_time_s)
+
+    def host_median(self, host: str) -> float | None:
+        s = self._samples.get(host)
+        if not s or len(s) < self.min_samples:
+            return None
+        return statistics.median(s)
+
+    def stragglers(self) -> list[tuple[str, float]]:
+        meds = {h: m for h in self._samples
+                if (m := self.host_median(h)) is not None}
+        if len(meds) < 2:
+            return []
+        fleet = statistics.median(meds.values())
+        return [(h, m / fleet) for h, m in meds.items()
+                if m > self.threshold * fleet]
+
+
+@dataclass
+class FailureEvent:
+    step: int
+    kind: str          # "crash" | "straggler" | "heartbeat"
+    host: str
+    action: str        # "restart" | "restart_shrunk"
+
+
+class TrainSupervisor:
+    """Checkpoint/restart orchestration around a Trainer.
+
+    ``inject_failure(step)`` may be set by tests/chaos tooling: returning a
+    host name at a step simulates that host dying mid-step.
+    """
+
+    def __init__(self, trainer, hosts: list[str],
+                 monitor: HeartbeatMonitor | None = None,
+                 detector: StragglerDetector | None = None,
+                 inject_failure: Callable[[int], str | None] = lambda s: None):
+        self.trainer = trainer
+        self.hosts = list(hosts)
+        self.monitor = monitor or HeartbeatMonitor(hosts)
+        self.detector = detector or StragglerDetector()
+        self.inject_failure = inject_failure
+        self.events: list[FailureEvent] = []
+        self.restarts = 0
+
+    def run(self, target_step: int) -> list[dict]:
+        """Drive training until ``trainer.step`` REACHES target_step —
+        crashes rewind to the last checkpoint and the lost steps replay."""
+        while self.trainer.step < target_step:
+            failed = self.inject_failure(self.trainer.step)
+            if failed is not None:
+                self._handle_failure(failed, "crash")
+                continue
+            self.trainer.run(1)
+            for h in self.hosts:
+                self.monitor.beat(h, self.trainer.step)
+        return self.trainer.history
+
+    def _handle_failure(self, host: str, kind: str) -> None:
+        """Lose ``host``: restore the latest checkpoint and continue on the
+        surviving world (elastic shrink)."""
+        self.restarts += 1
+        if host in self.hosts:
+            self.hosts.remove(host)
+        self.monitor.remove(host)
+        action = "restart_shrunk" if self.hosts else "restart"
+        self.events.append(FailureEvent(self.trainer.step, kind, host, action))
+        restored = self.trainer.restore_latest()
+        if not restored:
+            # No checkpoint yet: restart from step 0 (params already in
+            # memory are considered lost; re-init deterministically).
+            from repro.train.loop import init_train_state
+            (self.trainer.params, self.trainer.opt, self.trainer.comp,
+             self.trainer.axes) = init_train_state(self.trainer.api,
+                                                   self.trainer.tcfg)
+            self.trainer.step = 0

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for flash attention (naive full materialization).
+
+Semantics: GQA scaled dot-product attention with optional causal masking and
+optional sliding window (a query at position i attends to keys in
+``[i - window + 1, i]`` when causal, plus the mask).  fp32 softmax.
+
+Shapes:
+  q: (B, Sq, Hq, D)   k, v: (B, Sk, Hkv, D)   with Hq % Hkv == 0
+  returns (B, Sq, Hq, D) in q.dtype
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  q_offset: int | None = None, scale: float | None = None):
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    if q_offset is None:
+        q_offset = Sk - Sq  # decode: queries are the trailing positions
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to query heads
+    kf = jnp.repeat(kf, G, axis=2)
+    vf = jnp.repeat(vf, G, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / (probs.sum(-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Dispatching wrapper for paged decode attention.
+
+  * ``pallas``  — block-table-walking Mosaic kernel (TPU)
+  * ``xla``     — gather pages then masked attention (portable; what the
+    dry-run lowers on CPU).  The gather IS the straw-man extra copy; on TPU
+    the Pallas path removes it (see kernel.py docstring).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens,
+                    scale: float | None = None, impl: str | None = None,
+                    interpret: bool = False):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels.paged_attention.kernel import paged_attention_pallas
+        return paged_attention_pallas(q, k_pages, v_pages, block_table,
+                                      seq_lens, scale=scale,
+                                      interpret=interpret)
+    if impl == "xla":
+        return paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens,
+                                   scale=scale)
+    raise ValueError(f"unknown impl {impl}")

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Decode-time attention where the KV cache lives in a paged pool (the DDS
+file-mapping analogue: a block table maps each sequence's logical KV pages
+to physical pool pages).
+
+Shapes:
+  q:           (B, Hq, D)          one new query token per sequence
+  k_pages:     (P, page, Hkv, D)   physical page pool
+  v_pages:     (P, page, Hkv, D)
+  block_table: (B, MaxPages) int32 physical page id per logical page
+  seq_lens:    (B,) int32          valid KV length per sequence
+  returns      (B, Hq, D)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens,
+                        scale: float | None = None):
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    # Gather each sequence's pages into contiguous KV (the "two-copy
+    # straw-man" — fine for an oracle).
+    k = k_pages[block_table]                    # (B, MaxPages, page, Hkv, D)
+    v = v_pages[block_table]
+    Smax = k.shape[1] * page
+    k = k.reshape(B, Smax, Hkv, D).astype(jnp.float32)
+    v = v.reshape(B, Smax, Hkv, D).astype(jnp.float32)
+    k = jnp.repeat(k, G, axis=2)                # (B, Smax, Hq, D)
+    v = jnp.repeat(v, G, axis=2)
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bhd,bkhd->bhk", qf, k)      # (B, Hq, Smax)
+    kpos = jnp.arange(Smax)[None, None, :]
+    mask = kpos < seq_lens[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / (p.sum(-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v)
+    return out.astype(q.dtype)

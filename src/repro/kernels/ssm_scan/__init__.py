@@ -1,0 +1,3 @@
+from repro.kernels.ssm_scan.ops import gla_scan
+
+__all__ = ["gla_scan"]

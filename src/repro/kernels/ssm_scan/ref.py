@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the gated linear-attention (SSM) scan.
+
+One recurrence covers the framework's attention-free families:
+
+  S_t = diag(exp(w_t)) . S_{t-1} + k_t (x) v_t        (state K x V per head)
+  o_t = q_t^T S_t
+
+  * RWKV6 ("Finch"): w_t is a data-dependent per-key-dim log decay.
+  * Mamba2 (SSD):    w_t = -softplus(dt) * A broadcast per head (scalar
+                     decay), k_t = B_t, v_t = dt * x_t, q_t = C_t.
+
+Shapes: q, k, w: (B, H, S, K); v: (B, H, S, V); init state (B, H, K, V).
+Returns (o: (B, H, S, V), final state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_scan_ref(q, k, v, w, init_state=None):
+    B, H, S, K = q.shape
+    V = v.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((B, H, K, V), jnp.float32)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    wf = w.astype(jnp.float32)
+
+    def step(state, xs):
+        qt, kt, vt, wt = xs                    # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        decay = jnp.exp(wt)[..., None]         # (B,H,K,1)
+        state = state * decay + kt[..., None] * vt[..., None, :]
+        ot = jnp.einsum("bhk,bhkv->bhv", qt, state)
+        return state, ot
+
+    xs = (qf.transpose(2, 0, 1, 3), kf.transpose(2, 0, 1, 3),
+          vf.transpose(2, 0, 1, 3), wf.transpose(2, 0, 1, 3))
+    final, outs = jax.lax.scan(step, init_state, xs)
+    o = outs.transpose(1, 2, 0, 3)             # (B,H,S,V)
+    return o.astype(q.dtype), final
+
+
+def gla_decode_step(q, k, v, w, state):
+    """Single-token recurrence (serving): q/k/w (B,H,K), v (B,H,V)."""
+    decay = jnp.exp(w.astype(jnp.float32))[..., None]
+    state = state * decay + (k.astype(jnp.float32)[..., None]
+                             * v.astype(jnp.float32)[..., None, :])
+    o = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return o.astype(q.dtype), state

@@ -1,0 +1,207 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium).
+
+Encoder: bidirectional attention blocks over audio-frame embeddings — the
+modality frontend is a STUB: ``input_specs`` provides precomputed frame
+embeddings (B, S_enc, d_model), per the assignment note.
+
+Decoder: causal self-attention + cross-attention to encoder states + MLP.
+Decode keeps a self-attention KV cache and precomputed cross KV per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain_batch, constrain_logits
+from repro.models import layers as L
+
+
+def _self_cfg(cfg: ModelConfig, causal: bool) -> L.AttnConfig:
+    return L.AttnConfig(d_model=cfg.d_model, num_heads=cfg.num_heads,
+                        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                        rope_theta=cfg.rope_theta, causal=causal)
+
+
+def init_enc_block(cfg: ModelConfig, key):
+    p = L.ParamFactory(key)
+    ap, aa = L.init_attention(p._split(), _self_cfg(cfg, False))
+    p.params["attn"], p.axes["attn"] = ap, aa
+    mp, ma = L.init_mlp(p._split(), cfg.d_model, cfg.d_ff, cfg.mlp)
+    p.params["mlp"], p.axes["mlp"] = mp, ma
+    for n in ("norm1", "norm2"):
+        p.ones(f"{n}_w", (cfg.d_model,), ("embed",))
+        p.zeros(f"{n}_b", (cfg.d_model,), ("embed",))
+    return p.params, p.axes
+
+
+def init_dec_block(cfg: ModelConfig, key):
+    p = L.ParamFactory(key)
+    ap, aa = L.init_attention(p._split(), _self_cfg(cfg, True))
+    p.params["self_attn"], p.axes["self_attn"] = ap, aa
+    cp, ca = L.init_attention(p._split(), _self_cfg(cfg, False))
+    p.params["cross_attn"], p.axes["cross_attn"] = cp, ca
+    mp, ma = L.init_mlp(p._split(), cfg.d_model, cfg.d_ff, cfg.mlp)
+    p.params["mlp"], p.axes["mlp"] = mp, ma
+    for n in ("norm1", "norm2", "norm3"):
+        p.ones(f"{n}_w", (cfg.d_model,), ("embed",))
+        p.zeros(f"{n}_b", (cfg.d_model,), ("embed",))
+    return p.params, p.axes
+
+
+def init_encdec(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    params, axes = {}, {}
+    ep, ea = L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model,
+                              cfg.tie_embeddings)
+    params["embedding"], axes["embedding"] = ep, ea
+    bp, ba = L.stack_layer_params(lambda k: init_enc_block(cfg, k), ks[1],
+                                  cfg.encoder_layers)
+    params["encoder"], axes["encoder"] = bp, ba
+    dp, da = L.stack_layer_params(lambda k: init_dec_block(cfg, k), ks[2],
+                                  cfg.decoder_layers)
+    params["decoder"], axes["decoder"] = dp, da
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.bfloat16)
+    axes["final_norm"] = ("embed",)
+    return params, axes
+
+
+def _ln(p, n, x):
+    return L.layer_norm(x, p[f"{n}_w"], p[f"{n}_b"])
+
+
+def encode(params, cfg: ModelConfig, frames, remat: bool = True):
+    """frames: (B, S_enc, d_model) stub embeddings -> encoder states."""
+    B, S, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = frames.astype(jnp.bfloat16)
+
+    def body(x, blk):
+        x = constrain_batch(x)
+        a, _ = L.attention_fwd(blk["attn"], _ln(blk, "norm1", x),
+                               _self_cfg(cfg, False), pos)
+        x = x + a
+        m = L.mlp_fwd(blk["mlp"], _ln(blk, "norm2", x), cfg.mlp)
+        return x + m, None
+
+    if remat:
+        body = L.maybe_remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return x
+
+
+def _cross_kv(blk, cfg, enc_states):
+    """Precompute cross-attention K/V from encoder states (per layer)."""
+    B, S, _ = enc_states.shape
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    k = (enc_states @ blk["cross_attn"]["wk"]).reshape(B, S, KV, hd)
+    v = (enc_states @ blk["cross_attn"]["wv"]).reshape(B, S, KV, hd)
+    return k, v
+
+
+def _cross_attend(blk, cfg, x, ck, cv):
+    """Query x against fixed cross K/V (no rope on cross attention)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (x @ blk["cross_attn"]["wq"]).reshape(B, S, H, hd)
+    from repro.kernels.flash_attention import flash_attention
+    o = flash_attention(q, ck, cv, causal=False, q_offset=0)
+    o = o.reshape(B, S, H * hd)
+    return o @ blk["cross_attn"]["wo"]
+
+
+def dec_forward(params, cfg: ModelConfig, tokens, enc_states,
+                remat: bool = True):
+    """Teacher-forced decoder over full target sequence."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = L.embed_fwd(params["embedding"], tokens)
+
+    def body(x, blk):
+        x = constrain_batch(x)
+        a, _ = L.attention_fwd(blk["self_attn"], _ln(blk, "norm1", x),
+                               _self_cfg(cfg, True), pos)
+        x = x + a
+        ck, cv = _cross_kv(blk, cfg, enc_states)
+        x = x + _cross_attend(blk, cfg, _ln(blk, "norm2", x), ck, cv)
+        m = L.mlp_fwd(blk["mlp"], _ln(blk, "norm3", x), cfg.mlp)
+        return x + m, None
+
+    if remat:
+        body = L.maybe_remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = constrain_batch(L.rms_norm(x, params["final_norm"]))
+    return constrain_logits(L.unembed_fwd(params["embedding"], x))
+
+
+def encdec_forward(params, cfg: ModelConfig, tokens, frames,
+                   remat: bool = True):
+    """End-to-end training forward: returns (logits, aux=0)."""
+    enc = encode(params, cfg, frames, remat)
+    return dec_forward(params, cfg, tokens, enc, remat), jnp.zeros(
+        (), jnp.float32)
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      enc_len: int, dtype=jnp.bfloat16):
+    Ld, KV, hd = cfg.decoder_layers, cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((Ld, batch, cache_len, KV, hd), dtype),
+        "v": jnp.zeros((Ld, batch, cache_len, KV, hd), dtype),
+        "cross_k": jnp.zeros((Ld, batch, enc_len, KV, hd), dtype),
+        "cross_v": jnp.zeros((Ld, batch, enc_len, KV, hd), dtype),
+    }
+
+
+def encdec_prefill(params, cfg: ModelConfig, tokens, frames,
+                   cache_len: int | None = None):
+    """Encode source + prefill decoder prompt.  Returns (logits, cache)."""
+    enc = encode(params, cfg, frames, remat=False)
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = L.embed_fwd(params["embedding"], tokens)
+
+    def body(x, blk):
+        a, (k, v) = L.attention_fwd(blk["self_attn"], _ln(blk, "norm1", x),
+                                    _self_cfg(cfg, True), pos)
+        x = x + a
+        ck, cv = _cross_kv(blk, cfg, enc)
+        x = x + _cross_attend(blk, cfg, _ln(blk, "norm2", x), ck, cv)
+        m = L.mlp_fwd(blk["mlp"], _ln(blk, "norm3", x), cfg.mlp)
+        pad = cache_len - S
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x + m, (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["decoder"])
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed_fwd(params["embedding"], x[:, -1:])[:, 0]
+    return logits, {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs}
+
+
+def encdec_decode_step(params, cfg: ModelConfig, cache, kv_len, token,
+                       embeds=None):
+    B = token.shape[0]
+    x = L.embed_fwd(params["embedding"], token)
+    pos = jnp.broadcast_to(jnp.arange(1)[None], (B, 1)) + kv_len
+
+    def body(x, xs):
+        blk, kc, vc, ck, cv = xs
+        a, kc, vc = L.attention_decode(blk["self_attn"],
+                                       _ln(blk, "norm1", x),
+                                       _self_cfg(cfg, True), kc, vc,
+                                       kv_len, pos)
+        x = x + a
+        x = x + _cross_attend(blk, cfg, _ln(blk, "norm2", x), ck, cv)
+        m = L.mlp_fwd(blk["mlp"], _ln(blk, "norm3", x), cfg.mlp)
+        return x + m, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["decoder"], cache["k"],
+                                         cache["v"], cache["cross_k"],
+                                         cache["cross_v"]))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed_fwd(params["embedding"], x)[:, 0]
+    return logits, dict(cache, k=ks, v=vs)

@@ -1,0 +1,224 @@
+"""Model registry: one uniform API over all 10 architectures.
+
+``build_model(cfg)`` returns a :class:`ModelAPI` whose members are pure
+functions (pjit-able).  ``input_specs(shape)`` produces the
+ShapeDtypeStruct stand-ins for the dry-run — including the stub modality
+frontends (audio frames / vision patches) for the multimodal archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import ssm_stack as SS
+from repro.models import transformer as TF
+
+VLM_PATCH_TOKENS = 1024    # stub vision prefix length
+AUDIO_FRAME_STRIDE = 1     # stub: one embedding per frame position
+
+
+def cross_entropy(logits, labels):
+    """Sharded-softmax cross entropy.
+
+    All reductions run over the vocab axis FIRST (max, sum-exp, label
+    contraction), so with vocab TP-sharded the only collectives are
+    (B, S)-sized psums — never an all-gather/all-reduce of the full logits
+    (which at 262k vocab costs ~100x the step's other collectives).
+    ``take_along_axis`` is avoided: a gather over a sharded vocab dim makes
+    GSPMD materialize the full logits.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    v_idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    label_logit = jnp.sum(
+        jnp.where(v_idx == labels[..., None].astype(jnp.int32), logits, 0.0),
+        axis=-1)
+    return jnp.mean(lse - label_logit)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable          # (key) -> (params, axes)
+    forward: Callable       # (params, batch) -> (logits, aux)
+    loss_fn: Callable       # (params, batch) -> (loss, metrics)
+    init_cache: Callable    # (batch, cache_len) -> cache pytree
+    prefill: Callable       # (params, batch) -> (logits, cache)
+    decode_step: Callable   # (params, cache, kv_len, token) -> (logits, cache)
+    input_specs: Callable   # (ShapeConfig) -> dict of ShapeDtypeStruct
+
+
+def _loss_wrapper(forward, moe_aux_weight=0.01):
+    def loss_fn(params, batch):
+        logits, aux = forward(params, batch)
+        loss = cross_entropy(logits, batch["labels"])
+        total = loss + moe_aux_weight * aux
+        return total, {"xent": loss, "aux": aux}
+    return loss_fn
+
+
+def _token_specs(shape: ShapeConfig, batch_override: int | None = None):
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _build_transformer(cfg)
+    if fam == "ssm":
+        return _build_ssm(cfg)
+    if fam == "hybrid":
+        return _build_hybrid(cfg)
+    if fam == "encdec":
+        return _build_encdec(cfg)
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+
+
+def _build_transformer(cfg: ModelConfig) -> ModelAPI:
+    def forward(params, batch):
+        return TF.lm_forward(params, cfg, batch["tokens"],
+                             embeds=batch.get("embeds"))
+
+    def init_cache(batch: int, cache_len: int):
+        return TF.lm_init_cache(cfg, batch, cache_len)
+
+    def prefill(params, batch, cache_len=None):
+        return TF.lm_prefill(params, cfg, batch["tokens"],
+                             cache_len=cache_len, embeds=batch.get("embeds"))
+
+    def decode_step(params, cache, kv_len, token):
+        return TF.lm_decode_step(params, cfg, cache, kv_len, token)
+
+    def input_specs(shape: ShapeConfig):
+        if shape.kind == "train" or shape.kind == "prefill":
+            specs = _token_specs(shape)
+            if cfg.family == "vlm":
+                V = min(VLM_PATCH_TOKENS, shape.seq_len // 4)
+                specs["embeds"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, V, cfg.d_model), jnp.bfloat16)
+            if shape.kind == "prefill":
+                specs.pop("labels")
+            return specs
+        # decode: one token + full cache of seq_len entries
+        B = shape.global_batch
+        cache = jax.eval_shape(lambda: init_cache(B, shape.seq_len + 1))
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "kv_len": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": cache}
+
+    return ModelAPI(cfg, lambda key: TF.init_lm(cfg, key), forward,
+                    _loss_wrapper(forward), init_cache, prefill, decode_step,
+                    input_specs)
+
+
+def _build_ssm(cfg: ModelConfig) -> ModelAPI:
+    def forward(params, batch):
+        return SS.rwkv_forward(params, cfg, batch["tokens"])
+
+    def init_cache(batch: int, cache_len: int):
+        return SS.rwkv_init_state(cfg, batch)   # O(1): no cache_len
+
+    def prefill(params, batch, cache_len=None):
+        return SS.rwkv_prefill(params, cfg, batch["tokens"])
+
+    def decode_step(params, cache, kv_len, token):
+        return SS.rwkv_decode_step(params, cfg, cache, kv_len, token)
+
+    def input_specs(shape: ShapeConfig):
+        if shape.kind in ("train", "prefill"):
+            specs = _token_specs(shape)
+            if shape.kind == "prefill":
+                specs.pop("labels")
+            return specs
+        B = shape.global_batch
+        cache = jax.eval_shape(lambda: init_cache(B, shape.seq_len))
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "kv_len": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": cache}
+
+    return ModelAPI(cfg, lambda key: SS.init_rwkv_lm(cfg, key), forward,
+                    _loss_wrapper(forward), init_cache, prefill, decode_step,
+                    input_specs)
+
+
+def _build_hybrid(cfg: ModelConfig) -> ModelAPI:
+    def forward(params, batch):
+        return HY.hybrid_forward(params, cfg, batch["tokens"])
+
+    def init_cache(batch: int, cache_len: int):
+        return HY.hybrid_state(cfg, batch, cache_len)
+
+    def prefill(params, batch, cache_len=None):
+        return HY.hybrid_prefill(params, cfg, batch["tokens"],
+                                 cache_len=cache_len)
+
+    def decode_step(params, cache, kv_len, token):
+        return HY.hybrid_decode_step(params, cfg, cache, kv_len, token)
+
+    def input_specs(shape: ShapeConfig):
+        if shape.kind in ("train", "prefill"):
+            specs = _token_specs(shape)
+            if shape.kind == "prefill":
+                specs.pop("labels")
+            return specs
+        B = shape.global_batch
+        cache = jax.eval_shape(lambda: init_cache(B, shape.seq_len + 1))
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "kv_len": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": cache}
+
+    return ModelAPI(cfg, lambda key: HY.init_hybrid_lm(cfg, key), forward,
+                    _loss_wrapper(forward), init_cache, prefill, decode_step,
+                    input_specs)
+
+
+def _build_encdec(cfg: ModelConfig) -> ModelAPI:
+    DEC_PREFILL_FRac = 8  # decoder prompt = seq_len/8 during prefill cells
+
+    def forward(params, batch):
+        return ED.encdec_forward(params, cfg, batch["tokens"],
+                                 batch["frames"])
+
+    def init_cache(batch: int, cache_len: int, enc_len: int | None = None):
+        return ED.encdec_init_cache(cfg, batch, cache_len,
+                                    enc_len or cache_len)
+
+    def prefill(params, batch, cache_len=None):
+        return ED.encdec_prefill(params, cfg, batch["tokens"],
+                                 batch["frames"], cache_len=cache_len)
+
+    def decode_step(params, cache, kv_len, token):
+        return ED.encdec_decode_step(params, cfg, cache, kv_len, token)
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        frames = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            return {**_token_specs(shape), "frames": frames}
+        if shape.kind == "prefill":
+            Sdec = max(1, S // DEC_PREFILL_FRac)
+            return {"tokens": jax.ShapeDtypeStruct((B, Sdec), jnp.int32),
+                    "frames": frames}
+        cache = jax.eval_shape(
+            lambda: init_cache(B, shape.seq_len + 1, shape.seq_len))
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "kv_len": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": cache}
+
+    return ModelAPI(cfg, lambda key: ED.init_encdec(cfg, key), forward,
+                    _loss_wrapper(forward), init_cache, prefill, decode_step,
+                    input_specs)

@@ -1,0 +1,179 @@
+"""Attention-free sequence mixers: Mamba2 (SSD) and RWKV6 ("Finch").
+
+Both reduce to the gated-linear-attention recurrence executed by
+``repro.kernels.ssm_scan`` (chunked matmul form for train/prefill, O(1)
+recurrent state for decode):
+
+    S_t = diag(exp(w_t)) S_{t-1} + k_t (x) v_t ;   o_t = q_t^T S_t
+
+* **Mamba2**: per-head scalar decay  w_t = -softplus(dt_t) * exp(A_h),
+  k = B-projection, v = dt * x, q = C-projection, plus the depthwise
+  short conv on the input and a gated output (SiLU(z) * y) with RMS norm.
+* **RWKV6**: per-key-dim data-dependent decay w_t from a low-rank MLP,
+  token-shift mixing on the inputs, receptance r as q, and a gated output.
+
+Decode carries (conv tail, GLA state) — constant memory in sequence length,
+which is why the rwkv6/zamba2 archs run the 500k-context shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import gla_scan
+from repro.kernels.ssm_scan.ref import gla_decode_step
+from repro.distributed.sharding import gather_fsdp
+from repro.models.layers import ParamFactory, rms_norm
+
+CONV_K = 4  # mamba short-conv width
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block.
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, d_model: int, state: int, num_heads: int,
+                head_dim: int | None = None, expand: int = 2,
+                dtype=jnp.bfloat16):
+    """d_inner = expand*d_model split into num_heads of head_dim."""
+    d_inner = expand * d_model
+    head_dim = head_dim or d_inner // num_heads
+    assert num_heads * head_dim == d_inner
+    p = ParamFactory(key, dtype)
+    p.dense("in_xz", (d_model, 2 * d_inner), ("embed", "heads"))
+    p.dense("in_bc", (d_model, 2 * state * num_heads), ("embed", "heads"))
+    p.dense("in_dt", (d_model, num_heads), ("embed", "heads"))
+    p.zeros("conv", (CONV_K, d_inner), (None, "heads"))
+    p.zeros("A_log", (num_heads,), ("heads",), dtype=jnp.float32)
+    p.zeros("D", (num_heads,), ("heads",), dtype=jnp.float32)
+    # dt ~ softplus(x@W + bias) ~ 0.01: slow default decay (mamba2 init
+    # range dt in [1e-3, 1e-1]); keeps chunk-cumulative log-decay bounded.
+    p.const("dt_bias", (num_heads,), ("heads",), -4.6, dtype=jnp.float32)
+    p.zeros("norm_w", (d_inner,), ("heads",))
+    p.dense("out", (d_inner, d_model), ("heads", "embed"))
+    return p.params, p.axes
+
+
+def _short_conv(x, w, tail=None):
+    """Depthwise causal conv along S.  x: (B,S,C); w: (K,C).
+
+    ``tail`` (B, K-1, C) carries the last K-1 inputs for decode; returns
+    (out, new_tail).
+    """
+    B, S, C = x.shape
+    if tail is None:
+        tail = jnp.zeros((B, CONV_K - 1, C), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)          # (B, S+K-1, C)
+    out = jnp.zeros_like(x)
+    for i in range(CONV_K):
+        out = out + xp[:, i : i + S] * w[i][None, None]
+    new_tail = xp[:, -(CONV_K - 1):]
+    return out, new_tail
+
+
+def mamba2_fwd(params, x, *, state: int, num_heads: int, chunk: int = 128,
+               carry=None, decode: bool = False):
+    """x: (B, S, D).  carry = (conv_tail, gla_state) for decode continuity."""
+    B, S, D = x.shape
+    H = num_heads
+    d_inner = params["in_xz"].shape[1] // 2
+    hd = d_inner // H
+    xz = x @ gather_fsdp(params["in_xz"], tp_dim=1)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = carry[0] if carry is not None else None
+    xs, new_tail = _short_conv(xs, params["conv"], conv_tail)
+    xs = jax.nn.silu(xs)
+    bc = x @ gather_fsdp(params["in_bc"], tp_dim=1)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)            # (B,S,H*state)
+    dt = jax.nn.softplus((x @ params["in_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])          # (B,S,H)
+    A = -jnp.exp(params["A_log"])                      # (H,) negative
+    w = (dt * A[None, None]).astype(jnp.float32)       # (B,S,H) log-decay <= 0
+
+    # GLA form: per head, K=state, V=head_dim.
+    q = cmat.reshape(B, S, H, state).transpose(0, 2, 1, 3)
+    k = bmat.reshape(B, S, H, state).transpose(0, 2, 1, 3)
+    v = (xs.reshape(B, S, H, hd) * dt[..., None].astype(xs.dtype)
+         ).transpose(0, 2, 1, 3)
+    wk = jnp.broadcast_to(w.transpose(0, 2, 1)[..., None], k.shape)
+
+    gla_state = carry[1] if carry is not None else None
+    if decode and S == 1:
+        if gla_state is None:
+            gla_state = jnp.zeros((B, H, state, hd), jnp.float32)
+        o, new_state = gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                       wk[:, :, 0], gla_state)
+        o = o[:, :, None]                              # (B,H,1,hd)
+    else:
+        o, new_state = gla_scan(q, k, v, wk, chunk=chunk)
+    y = o.transpose(0, 2, 1, 3).reshape(B, S, d_inner)
+    y = y + xs * jnp.repeat(params["D"], hd)[None, None].astype(xs.dtype)
+    y = rms_norm(y, params["norm_w"]) * jax.nn.silu(z)
+    return y @ gather_fsdp(params["out"], tp_dim=0), (new_tail, new_state)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time mixing; channel mixing is a gated MLP in the stack).
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6(key, d_model: int, num_heads: int, decay_rank: int = 64,
+               dtype=jnp.bfloat16):
+    hd = d_model // num_heads
+    p = ParamFactory(key, dtype)
+    for n in ("r", "k", "v", "g"):
+        p.dense(f"w_{n}", (d_model, d_model), ("embed", "heads"))
+    # token-shift mix coefficients (one per stream)
+    p.zeros("mix", (5, d_model), (None, "embed"))
+    # data-dependent decay: low-rank MLP  d_model -> rank -> d_model
+    p.dense("wd_a", (d_model, decay_rank), ("embed", None))
+    p.dense("wd_b", (decay_rank, d_model), (None, "heads"))
+    # w = -exp(decay_base + dd): base -5 => per-token log-decay ~ -0.007,
+    # matching RWKV6's slow-decay init and bounding chunk exponents.
+    p.const("decay_base", (d_model,), ("heads",), -5.0, dtype=jnp.float32)
+    p.zeros("ln_w", (d_model,), ("heads",))
+    p.dense("out", (d_model, d_model), ("heads", "embed"))
+    return p.params, p.axes
+
+
+def rwkv6_fwd(params, x, *, num_heads: int, chunk: int = 128,
+              carry=None, decode: bool = False):
+    """x: (B, S, D).  carry = (prev_token, gla_state)."""
+    B, S, D = x.shape
+    H = num_heads
+    hd = D // H
+    prev = carry[0] if carry is not None else jnp.zeros((B, 1, D), x.dtype)
+    shifted = jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+    def mixed(i):
+        m = params["mix"][i][None, None]
+        return x + (shifted - x) * m
+
+    r = mixed(0) @ gather_fsdp(params["w_r"], tp_dim=1)
+    kk = mixed(1) @ gather_fsdp(params["w_k"], tp_dim=1)
+    vv = mixed(2) @ gather_fsdp(params["w_v"], tp_dim=1)
+    g = mixed(3) @ gather_fsdp(params["w_g"], tp_dim=1)
+    # data-dependent per-channel log decay (Finch):
+    dd = jnp.tanh(mixed(4) @ params["wd_a"]) @ params["wd_b"]
+    w = -jnp.exp(params["decay_base"] + dd.astype(jnp.float32))  # (B,S,D) < 0
+
+    q = r.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = kk.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = vv.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    wk = w.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+
+    gla_state = carry[1] if carry is not None else None
+    if decode and S == 1:
+        if gla_state is None:
+            gla_state = jnp.zeros((B, H, hd, hd), jnp.float32)
+        o, new_state = gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                       wk[:, :, 0], gla_state)
+        o = o[:, :, None]
+    else:
+        o, new_state = gla_scan(q, k, v, wk, chunk=chunk)
+    y = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+    y = rms_norm(y, params["ln_w"]) * jax.nn.silu(g)
+    new_prev = x[:, -1:]
+    return y @ gather_fsdp(params["out"], tp_dim=0), (new_prev, new_state)

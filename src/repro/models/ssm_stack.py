@@ -1,0 +1,133 @@
+"""RWKV6 language model stack (attention-free).
+
+Block = RWKV6 time mixing + channel mixing (token-shifted squared-ReLU MLP).
+Decode state is O(1) in sequence length — (prev token, per-head K x V state)
+per layer — which is why this arch runs the 500k-context decode shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain_batch, constrain_logits
+from repro.models import layers as L
+from repro.models.ssm import init_rwkv6, rwkv6_fwd
+
+
+def init_channel_mix(key, d_model: int, d_ff: int):
+    p = L.ParamFactory(key)
+    p.dense("wk", (d_model, d_ff), ("embed", "ff"))
+    p.dense("wv", (d_ff, d_model), ("ff", "embed"))
+    p.dense("wr", (d_model, d_model), ("embed", "embed"))
+    p.zeros("mix", (2, d_model), (None, "embed"))
+    return p.params, p.axes
+
+
+def channel_mix_fwd(params, x, prev=None):
+    """Token-shifted squared-ReLU channel mix.  Returns (out, last_token)."""
+    B, S, D = x.shape
+    if prev is None:
+        prev = jnp.zeros((B, 1, D), x.dtype)
+    shifted = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xk = x + (shifted - x) * params["mix"][0][None, None]
+    xr = x + (shifted - x) * params["mix"][1][None, None]
+    from repro.distributed.sharding import gather_fsdp
+    k = jnp.square(jax.nn.relu(xk @ gather_fsdp(params["wk"], tp_dim=1)))
+    out = (jax.nn.sigmoid(xr @ gather_fsdp(params["wr"], tp_dim=1))
+           * (k @ gather_fsdp(params["wv"], tp_dim=0)))
+    return out, x[:, -1:]
+
+
+def init_rwkv_block(cfg: ModelConfig, key):
+    p = L.ParamFactory(key)
+    tp, ta = init_rwkv6(p._split(), cfg.d_model, cfg.num_heads)
+    p.params["time"], p.axes["time"] = tp, ta
+    cp, ca = init_channel_mix(p._split(), cfg.d_model, cfg.d_ff)
+    p.params["chan"], p.axes["chan"] = cp, ca
+    p.zeros("norm1", (cfg.d_model,), ("embed",))
+    p.zeros("norm2", (cfg.d_model,), ("embed",))
+    return p.params, p.axes
+
+
+def init_rwkv_lm(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    params, axes = {}, {}
+    ep, ea = L.init_embedding(k1, cfg.padded_vocab, cfg.d_model,
+                              cfg.tie_embeddings)
+    params["embedding"], axes["embedding"] = ep, ea
+    bp, ba = L.stack_layer_params(lambda k: init_rwkv_block(cfg, k), k2,
+                                  cfg.num_layers)
+    params["blocks"], axes["blocks"] = bp, ba
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.bfloat16)
+    axes["final_norm"] = ("embed",)
+    return params, axes
+
+
+def _block(cfg, blk, x, carry, decode):
+    x = constrain_batch(x)
+    t_out, t_carry = rwkv6_fwd(blk["time"], L.rms_norm(x, blk["norm1"]),
+                               num_heads=cfg.num_heads,
+                               carry=(carry[0], carry[1]), decode=decode)
+    x = x + t_out
+    c_out, c_prev = channel_mix_fwd(blk["chan"], L.rms_norm(x, blk["norm2"]),
+                                    prev=carry[2])
+    return x + c_out, (t_carry[0], t_carry[1], c_prev)
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    Lr, D, H = cfg.num_layers, cfg.d_model, cfg.num_heads
+    hd = cfg.hd
+    return (jnp.zeros((Lr, batch, 1, D), dtype),           # time-mix prev token
+            jnp.zeros((Lr, batch, H, hd, hd), jnp.float32),  # GLA state
+            jnp.zeros((Lr, batch, 1, D), dtype))            # chan-mix prev token
+
+
+def rwkv_forward(params, cfg: ModelConfig, tokens, embeds=None,
+                 remat: bool = True):
+    B, S = tokens.shape
+    x = L.embed_fwd(params["embedding"], tokens)
+    state = rwkv_init_state(cfg, B)
+
+    def body(x, xs):
+        blk, s0, s1, s2 = xs
+        x, _ = _block(cfg, blk, x, (s0, s1, s2), decode=False)
+        return x, None
+
+    if remat:
+        body = L.maybe_remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, (params["blocks"],) + state)
+    x = constrain_batch(L.rms_norm(x, params["final_norm"]))
+    return (constrain_logits(L.unembed_fwd(params["embedding"], x)),
+            jnp.zeros((), jnp.float32))
+
+
+def rwkv_prefill(params, cfg: ModelConfig, tokens, embeds=None):
+    B, S = tokens.shape
+    x = L.embed_fwd(params["embedding"], tokens)
+    state = rwkv_init_state(cfg, B)
+
+    def body(x, xs):
+        blk, s0, s1, s2 = xs
+        x, new = _block(cfg, blk, x, (s0, s1, s2), decode=False)
+        return x, new
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"],) + state)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed_fwd(params["embedding"], x[:, -1:])[:, 0]
+    return logits, new_state
+
+
+def rwkv_decode_step(params, cfg: ModelConfig, state, kv_len, token,
+                     embeds=None):
+    x = L.embed_fwd(params["embedding"], token)
+
+    def body(x, xs):
+        blk, s0, s1, s2 = xs
+        x, new = _block(cfg, blk, x, (s0, s1, s2), decode=True)
+        return x, new
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"],) + state)
+    x = L.rms_norm(x, params["final_norm"])
+    return L.unembed_fwd(params["embedding"], x)[:, 0], new_state

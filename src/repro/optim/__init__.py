@@ -1,0 +1,10 @@
+"""Optimizers, LR schedules, gradient compression."""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+from repro.optim.compression import (CompressionState, compress_tree,
+                                     decompress_tree, init_compression)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "warmup_cosine",
+           "CompressionState", "compress_tree", "decompress_tree",
+           "init_compression"]

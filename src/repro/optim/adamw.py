@@ -1,0 +1,77 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Pure-pytree implementation (no optax dependency).  Optimizer state inherits
+the parameter sharding: under GSPMD the first/second moments partition the
+same way the parameters do, so FSDP/TP sharding of a model automatically
+ZeRO-shards its optimizer state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    sq = jax.tree_util.tree_map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(sum(jax.tree_util.tree_leaves(sq)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any,
+                 lr: jnp.ndarray | float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 max_grad_norm: float | None = 1.0) -> tuple[Any, AdamWState, jnp.ndarray]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    if max_grad_norm is not None:
+        grads, norm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        norm = global_norm(grads)
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        # Decoupled weight decay only on matrices/embeddings (ndim >= 2).
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(count, new_m, new_v), norm

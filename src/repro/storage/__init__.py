@@ -1,0 +1,1 @@
+"""Storage substrates: block device model, page store, checkpointing."""

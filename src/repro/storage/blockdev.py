@@ -1,0 +1,152 @@
+"""NVMe SSD model: a block device with submission/completion queues.
+
+The container has no NVMe device, so this is a RAM- (or file-) backed block
+store with an SPDK-like asynchronous interface: ``submit_read`` /
+``submit_write`` enqueue an operation; completions are delivered by
+``poll()`` (SPDK-style polling) in submission order per queue.  A service
+time model (base latency + bytes/bandwidth, bounded queue depth) accumulates
+*modeled* device time for the calibrated benchmarks; nothing ever sleeps.
+
+Zero-copy contract (DDS §4.3/§6.2): ``submit_read`` takes a destination
+``memoryview`` and the device writes bytes straight into it — the caller
+points it at pre-allocated response/packet space, so no intermediate copy is
+ever made.  ``submit_write`` reads from the caller's buffer view directly.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+# v5-era datacenter NVMe-ish constants (§8.1: 1 TB NVMe SSD, 100-200us access).
+DEFAULT_READ_LATENCY_S = 90e-6
+DEFAULT_WRITE_LATENCY_S = 25e-6
+DEFAULT_BANDWIDTH_BPS = 3.2e9
+DEFAULT_QUEUE_DEPTH = 128
+
+STATUS_PENDING = -1
+STATUS_OK = 0
+STATUS_EINVAL = 22
+STATUS_EIO = 5
+
+
+@dataclass
+class IoOp:
+    kind: str                      # "read" | "write"
+    lba: int                       # byte offset on device
+    nbytes: int
+    buf: memoryview | bytes | None
+    on_complete: Callable[[int], None] | None
+    status: int = STATUS_PENDING
+    modeled_done_s: float = 0.0
+
+
+@dataclass
+class BlockDeviceStats:
+    reads: int = 0
+    writes: int = 0
+    read_bytes: int = 0
+    write_bytes: int = 0
+    modeled_busy_s: float = 0.0
+    max_queue_depth_seen: int = 0
+
+
+class BlockDevice:
+    """RAM-backed block device with an async queue interface."""
+
+    def __init__(self, capacity: int, block_size: int = 4096,
+                 read_latency_s: float = DEFAULT_READ_LATENCY_S,
+                 write_latency_s: float = DEFAULT_WRITE_LATENCY_S,
+                 bandwidth_Bps: float = DEFAULT_BANDWIDTH_BPS,
+                 queue_depth: int = DEFAULT_QUEUE_DEPTH):
+        assert capacity % block_size == 0
+        self.capacity = capacity
+        self.block_size = block_size
+        self.read_latency_s = read_latency_s
+        self.write_latency_s = write_latency_s
+        self.bandwidth_Bps = bandwidth_Bps
+        self.queue_depth = queue_depth
+        self._mem = np.zeros(capacity, dtype=np.uint8)
+        self._queue: deque[IoOp] = deque()
+        self._lock = threading.Lock()
+        self._clock_s = 0.0  # modeled device clock
+        self.stats = BlockDeviceStats()
+
+    # -- submission --------------------------------------------------------------
+    def submit_read(self, lba: int, nbytes: int, dest: memoryview,
+                    on_complete: Callable[[int], None] | None = None) -> IoOp:
+        op = IoOp("read", lba, nbytes, dest, on_complete)
+        self._submit(op)
+        return op
+
+    def submit_write(self, lba: int, data, on_complete: Callable[[int], None] | None = None) -> IoOp:
+        op = IoOp("write", lba, len(data), data, on_complete)
+        self._submit(op)
+        return op
+
+    def _submit(self, op: IoOp) -> None:
+        if op.lba < 0 or op.lba + op.nbytes > self.capacity:
+            op.status = STATUS_EINVAL
+            if op.on_complete:
+                op.on_complete(op.status)
+            return
+        with self._lock:
+            self._queue.append(op)
+            d = len(self._queue)
+            if d > self.stats.max_queue_depth_seen:
+                self.stats.max_queue_depth_seen = d
+
+    def queue_len(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # -- completion --------------------------------------------------------------
+    def poll(self, max_completions: int | None = None) -> int:
+        """Execute + complete up to ``max_completions`` queued ops, in order."""
+        budget = max_completions if max_completions is not None else self.queue_depth
+        done = 0
+        while done < budget:
+            with self._lock:
+                if not self._queue:
+                    break
+                op = self._queue.popleft()
+            self._execute(op)
+            done += 1
+        return done
+
+    def drain(self) -> None:
+        while self.poll(1_000_000):
+            pass
+
+    def _execute(self, op: IoOp) -> None:
+        lat = self.read_latency_s if op.kind == "read" else self.write_latency_s
+        self._clock_s += lat + op.nbytes / self.bandwidth_Bps
+        op.modeled_done_s = self._clock_s
+        self.stats.modeled_busy_s = self._clock_s
+        if op.kind == "read":
+            src = self._mem[op.lba : op.lba + op.nbytes]
+            dest = op.buf
+            # Write straight into the caller's view (zero-copy contract).
+            dest[: op.nbytes] = src.tobytes()
+            self.stats.reads += 1
+            self.stats.read_bytes += op.nbytes
+        else:
+            data = op.buf
+            self._mem[op.lba : op.lba + op.nbytes] = np.frombuffer(
+                bytes(data), dtype=np.uint8)
+            self.stats.writes += 1
+            self.stats.write_bytes += op.nbytes
+        op.status = STATUS_OK
+        if op.on_complete:
+            op.on_complete(op.status)
+
+    # -- raw access for metadata bootstrap ----------------------------------------
+    def raw_read(self, lba: int, nbytes: int) -> bytes:
+        return self._mem[lba : lba + nbytes].tobytes()
+
+    def raw_write(self, lba: int, data: bytes) -> None:
+        self._mem[lba : lba + len(data)] = np.frombuffer(data, dtype=np.uint8)

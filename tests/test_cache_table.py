@@ -1,0 +1,98 @@
+"""Cuckoo cache table (DDS §6.1): correctness + properties + concurrency."""
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_table import CacheTable
+
+
+def test_basic_ops():
+    t = CacheTable(max_items=128)
+    assert t.insert("a", 1) and t.insert("b", 2)
+    assert t.lookup("a") == 1 and t.lookup("b") == 2
+    assert t.lookup("c") is None
+    assert t.insert("a", 10)          # update in place
+    assert t.lookup("a") == 10
+    assert len(t) == 2
+    assert t.delete("a") and not t.delete("a")
+    assert t.lookup("a") is None
+    assert len(t) == 1
+
+
+def test_capacity_pre_reserved():
+    t = CacheTable(max_items=16)
+    for i in range(16):
+        assert t.insert(i, i)
+    assert not t.insert(999, 999)     # at capacity: reject, never resize
+    assert t.stats.full_rejections == 1
+    assert t.delete(0)
+    assert t.insert(999, 999)
+
+
+def test_collision_chaining():
+    t = CacheTable(max_items=64, slots_per_bucket=1)
+    for i in range(64):
+        assert t.insert(f"key-{i}", i)
+    for i in range(64):
+        assert t.lookup(f"key-{i}") == i
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["ins", "del"]),
+                          st.integers(0, 40), st.integers(0, 1000)),
+                max_size=200))
+def test_property_matches_dict(ops):
+    t = CacheTable(max_items=64)
+    model: dict = {}
+    for op, k, v in ops:
+        if op == "ins":
+            if len(model) < 64 or k in model:
+                assert t.insert(k, v)
+                model[k] = v
+        else:
+            assert t.delete(k) == (k in model)
+            model.pop(k, None)
+    for k, v in model.items():
+        assert t.lookup(k) == v
+    assert len(t) == len(model)
+
+
+def test_concurrent_readers_during_writes():
+    t = CacheTable(max_items=4096)
+    for i in range(512):
+        t.insert(i, i * 7)
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            for i in range(0, 512, 17):
+                v = t.lookup(i)
+                if v is not None and v != i * 7 and v != i * 7 + 1:
+                    errors.append((i, v))
+
+    def writer():
+        for rounds in range(50):
+            for i in range(0, 512, 5):
+                t.insert(i, i * 7)  # rewrite same values
+
+    rs = [threading.Thread(target=reader) for _ in range(2)]
+    w = threading.Thread(target=writer)
+    for r in rs:
+        r.start()
+    w.start()
+    w.join()
+    stop.set()
+    for r in rs:
+        r.join()
+    assert not errors
+
+
+def test_lookup_stats():
+    t = CacheTable(max_items=32)
+    t.insert("x", 1)
+    t.lookup("x")
+    t.lookup("nope")
+    assert t.stats.lookups == 2 and t.stats.hits == 1

@@ -1,0 +1,91 @@
+"""Heartbeats, stragglers, checkpoint/restart, elastic shrink."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.dds_server import DDSStorageServer, ServerConfig
+from repro.data.pipeline import BatchSpec, TokenPipeline
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               StragglerDetector,
+                                               TrainSupervisor)
+from repro.models.registry import build_model
+from repro.storage.checkpoint import CheckpointManager
+from repro.train.loop import TrainConfig, Trainer
+
+
+def test_heartbeat_monitor_detects_dead():
+    clock = {"t": 0.0}
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10,
+                           now=lambda: clock["t"])
+    mon.beat("h0", 1)
+    mon.beat("h1", 1)
+    clock["t"] = 5.0
+    mon.beat("h0", 2)
+    clock["t"] = 12.0
+    assert mon.dead_hosts() == ["h1"]
+    assert mon.hosts["h0"].alive
+
+
+def test_straggler_detector():
+    det = StragglerDetector(threshold=1.5, window=8, min_samples=4)
+    for step in range(8):
+        for h in ("a", "b", "c", "d"):
+            det.record(h, 1.0 if h != "d" else 2.2)
+    bad = det.stragglers()
+    assert len(bad) == 1 and bad[0][0] == "d"
+    assert bad[0][1] == pytest.approx(2.2, rel=0.1)
+
+
+def _tiny_trainer(ckpt=True, ckpt_every=4):
+    cfg = dataclasses.replace(reduced_config(get_config("tinyllama_1p1b")),
+                              num_layers=2, d_ff=64, vocab_size=256,
+                              d_model=64, num_heads=2, num_kv_heads=2,
+                              head_dim=32)
+    api = build_model(cfg)
+    pipe = TokenPipeline(BatchSpec(2, 16, cfg.vocab_size), seed=0)
+    cm = (CheckpointManager(DDSStorageServer(ServerConfig()), keep=2)
+          if ckpt else None)
+    tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=2, total_steps=50)
+    return Trainer(api, tcfg, pipe, checkpoint_mgr=cm, ckpt_every=ckpt_every)
+
+
+def test_crash_restart_resumes_from_checkpoint():
+    trainer = _tiny_trainer()
+    failures = {6: "host3"}  # crash at step 6 (after the step-4 checkpoint)
+    sup = TrainSupervisor(
+        trainer, [f"host{i}" for i in range(4)],
+        inject_failure=lambda s: failures.pop(s, None))
+    hist = sup.run(10)
+    assert sup.restarts == 1
+    assert sup.events[0].kind == "crash"
+    assert "host3" not in sup.hosts           # elastic shrink
+    # we replayed steps 4..6 after restoring the step-4 checkpoint
+    steps = [h["step"] for h in trainer.history]
+    assert trainer.step >= 10
+    assert trainer.ckpt.latest_step() is not None
+
+
+def test_restart_without_checkpoint_restarts_clean():
+    trainer = _tiny_trainer(ckpt=True, ckpt_every=100)  # never checkpoints
+    failures = {2: "host1"}
+    sup = TrainSupervisor(trainer, ["host0", "host1"],
+                          inject_failure=lambda s: failures.pop(s, None))
+    sup.run(5)
+    assert sup.restarts == 1
+    assert sup.events[0].action == "restart_shrunk"
+    assert trainer.step >= 5
+
+
+def test_elastic_world_resharding_data_pipeline():
+    """After shrinking the world, ranks repartition the same global batch."""
+    spec = BatchSpec(8, 16, 100)
+    before = [TokenPipeline(spec, seed=7, rank=r, world=4).batch_at(3)
+              for r in range(4)]
+    after = [TokenPipeline(spec, seed=7, rank=r, world=2).batch_at(3)
+             for r in range(2)]
+    tot_b = np.concatenate([b["tokens"] for b in before])
+    tot_a = np.concatenate([a["tokens"] for a in after])
+    assert tot_b.shape[0] == tot_a.shape[0] == 8  # same global batch size

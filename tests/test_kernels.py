@@ -1,0 +1,238 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention_xla
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.ssm_scan.kernel import gla_scan_pallas
+from repro.kernels.ssm_scan.ops import gla_scan_xla
+from repro.kernels.ssm_scan.ref import gla_decode_step, gla_scan_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention.
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # B, Sq, Sk, Hq, Hkv, D, causal, window
+    (2, 128, 128, 4, 2, 64, True, None),
+    (1, 256, 256, 8, 8, 64, True, 64),
+    (2, 64, 192, 4, 1, 32, False, None),
+    (1, 128, 128, 6, 2, 128, True, None),
+    (1, 64, 64, 2, 2, 64, True, 16),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_pallas_interpret(case, dtype):
+    B, Sq, Sk, Hq, Hkv, D, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Sq, Hq, D), dtype)
+    k = _rand(ks[1], (B, Sk, Hkv, D), dtype)
+    v = _rand(ks[2], (B, Sk, Hkv, D), dtype)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FA_CASES + [(1, 100, 100, 2, 2, 64, True, None)])
+def test_flash_attention_xla_chunked(case, dtype):
+    B, Sq, Sk, Hq, Hkv, D, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, Sq, Hq, D), dtype)
+    k = _rand(ks[1], (B, Sk, Hkv, D), dtype)
+    v = _rand(ks[2], (B, Sk, Hkv, D), dtype)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention_xla(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# Paged attention.
+# ---------------------------------------------------------------------------
+
+PA_CASES = [
+    # B, Hq, Hkv, D, pool_pages, page, max_pages
+    (2, 8, 2, 64, 16, 16, 4),
+    (1, 4, 4, 32, 8, 8, 8),
+    (3, 16, 8, 128, 32, 32, 3),
+    (2, 4, 1, 64, 8, 64, 2),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", PA_CASES)
+def test_paged_attention_pallas_interpret(case, dtype):
+    B, Hq, Hkv, D, P, page, maxp = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = _rand(ks[0], (B, Hq, D), dtype)
+    kp = _rand(ks[1], (P, page, Hkv, D), dtype)
+    vp = _rand(ks[2], (P, page, Hkv, D), dtype)
+    bt = jax.random.randint(ks[3], (B, maxp), 0, P, jnp.int32)
+    sl = jnp.asarray([(maxp * page) - 3] + [(maxp - 1) * page - 1] * (B - 1),
+                     jnp.int32)[:B]
+    ref = paged_attention_ref(q, kp, vp, bt, sl)
+    out = paged_attention_pallas(q, kp, vp, bt, sl, interpret=True)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_attention_respects_block_table():
+    """Permuting physical pages + table together must not change results."""
+    B, Hq, Hkv, D, P, page, maxp = 1, 4, 2, 32, 8, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = _rand(ks[0], (B, Hq, D), jnp.float32)
+    kp = _rand(ks[1], (P, page, Hkv, D), jnp.float32)
+    vp = _rand(ks[2], (P, page, Hkv, D), jnp.float32)
+    bt = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    sl = jnp.asarray([maxp * page], jnp.int32)
+    base = paged_attention_ref(q, kp, vp, bt, sl)
+    perm = jnp.asarray([3, 0, 1, 2, 4, 5, 6, 7])
+    inv = jnp.argsort(perm)
+    out = paged_attention_ref(q, kp[perm], vp[perm], inv[bt], sl)
+    np.testing.assert_allclose(base, out, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# GLA / SSM scan.
+# ---------------------------------------------------------------------------
+
+GLA_CASES = [
+    # B, H, S, K, V, chunk
+    (2, 4, 128, 64, 64, 32),
+    (1, 2, 256, 32, 64, 64),
+    (2, 1, 96, 16, 16, 32),
+    (1, 3, 64, 128, 32, 16),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", GLA_CASES)
+def test_gla_xla_chunked(case, dtype):
+    B, H, S, K, V, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = _rand(ks[0], (B, H, S, K), dtype) * 0.5
+    k = _rand(ks[1], (B, H, S, K), dtype) * 0.5
+    v = _rand(ks[2], (B, H, S, V), dtype)
+    w = -jnp.exp(_rand(ks[3], (B, H, S, K), jnp.float32)) * 0.05
+    ref_o, ref_s = gla_scan_ref(q, k, v, w)
+    out_o, out_s = gla_scan_xla(q, k, v, w, chunk=chunk)
+    np.testing.assert_allclose(out_o.astype(jnp.float32),
+                               ref_o.astype(jnp.float32),
+                               atol=TOL[dtype] * 4, rtol=TOL[dtype] * 4)
+    np.testing.assert_allclose(out_s, ref_s, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("case", GLA_CASES[:3])
+def test_gla_pallas_interpret(case):
+    B, H, S, K, V, chunk = case
+    if S % chunk:
+        pytest.skip("pallas path needs chunk-aligned S")
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = _rand(ks[0], (B, H, S, K), jnp.float32) * 0.5
+    k = _rand(ks[1], (B, H, S, K), jnp.float32) * 0.5
+    v = _rand(ks[2], (B, H, S, V), jnp.float32)
+    w = -jnp.exp(_rand(ks[3], (B, H, S, K), jnp.float32)) * 0.05
+    ref_o, ref_s = gla_scan_ref(q, k, v, w)
+    out_o, out_s = gla_scan_pallas(q, k, v, w, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(out_o, ref_o, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(out_s, ref_s, atol=1e-3, rtol=1e-3)
+
+
+def test_gla_decode_continuation():
+    """prefill(S-1) + decode_step == full scan at position S-1."""
+    B, H, S, K, V = 2, 2, 64, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    q = _rand(ks[0], (B, H, S, K), jnp.float32) * 0.5
+    k = _rand(ks[1], (B, H, S, K), jnp.float32) * 0.5
+    v = _rand(ks[2], (B, H, S, V), jnp.float32)
+    w = -jnp.exp(_rand(ks[3], (B, H, S, K), jnp.float32)) * 0.05
+    o_all, s_all = gla_scan_ref(q, k, v, w)
+    _, s_pre = gla_scan_xla(q[:, :, :-1], k[:, :, :-1], v[:, :, :-1],
+                            w[:, :, :-1], chunk=16)
+    o_dec, s_dec = gla_decode_step(q[:, :, -1], k[:, :, -1], v[:, :, -1],
+                                   w[:, :, -1], s_pre)
+    np.testing.assert_allclose(o_dec, o_all[:, :, -1], atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(s_dec, s_all, atol=1e-4, rtol=1e-4)
+
+
+def test_gla_strong_decay_stays_finite():
+    """The exponent guard keeps extreme decays finite (regression)."""
+    B, H, S, K, V = 1, 1, 256, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (B, H, S, K), jnp.float32)
+    k = _rand(ks[1], (B, H, S, K), jnp.float32)
+    v = _rand(ks[2], (B, H, S, V), jnp.float32)
+    w = jnp.full((B, H, S, K), -2.5)          # very strong decay
+    o, s = gla_scan_xla(q, k, v, w, chunk=128)
+    assert bool(jnp.all(jnp.isfinite(o)))
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+# ---------------------------------------------------------------------------
+# Backward passes (training differentiates through the portable paths).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", FA_CASES[:3])
+def test_flash_attention_xla_gradients_match_naive(case):
+    B, Sq, Sk, Hq, Hkv, D, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = _rand(ks[0], (B, Sq, Hq, D), jnp.float32)
+    k = _rand(ks[1], (B, Sk, Hkv, D), jnp.float32)
+    v = _rand(ks[2], (B, Sk, Hkv, D), jnp.float32)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.square(attention_ref(
+            q, k, v, causal=causal, window=window)))
+
+    def loss_xla(q, k, v):
+        return jnp.sum(jnp.square(flash_attention_xla(
+            q, k, v, causal=causal, window=window, block_q=64, block_k=64)))
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g_xla = jax.grad(loss_xla, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_xla):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("case", GLA_CASES[:2])
+def test_gla_xla_gradients_match_naive(case):
+    B, H, S, K, V, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    q = _rand(ks[0], (B, H, S, K), jnp.float32) * 0.5
+    k = _rand(ks[1], (B, H, S, K), jnp.float32) * 0.5
+    v = _rand(ks[2], (B, H, S, V), jnp.float32)
+    w = -jnp.exp(_rand(ks[3], (B, H, S, K), jnp.float32)) * 0.05
+
+    def loss_ref(q, k, v, w):
+        return jnp.sum(jnp.square(gla_scan_ref(q, k, v, w)[0]))
+
+    def loss_xla(q, k, v, w):
+        return jnp.sum(jnp.square(gla_scan_xla(q, k, v, w, chunk=chunk)[0]))
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(q, k, v, w)
+    g_xla = jax.grad(loss_xla, argnums=(0, 1, 2, 3))(q, k, v, w)
+    for a, b in zip(g_ref, g_xla):
+        np.testing.assert_allclose(a, b, atol=5e-3, rtol=5e-3)

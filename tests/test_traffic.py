@@ -1,0 +1,92 @@
+"""Traffic director (§5): signatures, PEP transport transparency, RSS."""
+
+from repro.core.traffic import (ApplicationSignature, FiveTuple, NaiveSplitter,
+                                Packet, TCPReceiver, TrafficDirector,
+                                rss_core, FLAG_SYN)
+from repro.core.dds_server import (decode_batch, default_off_pred,
+                                   encode_app_read, encode_app_write,
+                                   encode_batch)
+
+
+def flow(port=5000):
+    return FiveTuple("10.0.0.2", 31337, "10.0.0.1", port)
+
+
+def test_signature_wildcards():
+    sig = ApplicationSignature(dst_port=5000)  # any client -> local:5000/tcp
+    assert sig.matches(flow())
+    assert not sig.matches(flow(port=80))
+    assert not sig.matches(FiveTuple("a", 1, "b", 5000, proto="udp"))
+
+
+def test_non_matching_packets_hardware_forwarded():
+    td = TrafficDirector(ApplicationSignature(dst_port=5000),
+                         default_off_pred)
+    other = FiveTuple("x", 1, "y", 9999)
+    td.ingress.push(Packet(other, 0, b"payload"))
+    before = td.stats.modeled_time_s
+    td.step()
+    assert td.stats.hw_forwarded == 1
+    assert td.stats.modeled_time_s == before  # line-rate: no Arm latency
+    assert len(td.to_host) == 1
+
+
+def test_fig11_naive_splitting_triggers_dup_acks():
+    """Without the PEP, offloaded bytes create host-side sequence gaps."""
+    host = TCPReceiver()
+    splitter = NaiveSplitter(default_off_pred)
+    host.receive(Packet(flow(), 0, b"", flags=FLAG_SYN))
+    seq = 1
+    dup_before = host.dup_acks
+    for i in range(6):
+        if i % 2 == 0:  # reads -> consumed by the DPU
+            payload = encode_batch([encode_app_read(i, 1, 0, 64)])
+        else:           # writes -> to the host, with ORIGINAL seq numbers
+            payload = encode_batch([encode_app_write(i, 1, 0, b"z" * 16)])
+        splitter.process(Packet(flow(), seq, payload), host)
+        seq += len(payload)
+    assert host.dup_acks > dup_before          # Fig 11 reproduced
+    assert len(splitter.offloaded) == 3
+
+
+def test_pep_maintains_contiguous_host_sequences():
+    """With TCP splitting, the host-side connection never sees gaps."""
+    td = TrafficDirector(ApplicationSignature(dst_port=5000),
+                         default_off_pred)
+    f = flow()
+    td.ingress.push(Packet(f, 0, b"", flags=FLAG_SYN))
+    td.step()
+    seq = 1
+    for i in range(6):
+        if i % 2 == 0:
+            payload = encode_batch([encode_app_read(i, 1, 0, 64)])
+        else:
+            payload = encode_batch([encode_app_write(i, 1, 0, b"z" * 16)])
+        td.ingress.push(Packet(f, seq, payload))
+        td.step()
+        seq += len(payload)
+    host = TCPReceiver()
+    host.expected_seq = 0
+    while True:
+        pkt = td.to_host.pop()
+        if pkt is None:
+            break
+        ok, _ = host.receive(pkt)
+        assert ok
+    assert host.dup_acks == 0                   # transport transparency
+    assert td.stats.to_dpu == 3
+    assert td.stats.to_host == 3
+
+
+def test_rss_symmetric():
+    f = flow()
+    for cores in (1, 2, 4, 8):
+        assert rss_core(f, cores) == rss_core(f.reversed(), cores)
+
+
+def test_rss_distributes():
+    cores = 4
+    hits = set()
+    for p in range(100):
+        hits.add(rss_core(FiveTuple("c", 10000 + p, "s", 5000), cores))
+    assert len(hits) == cores
