@@ -1,0 +1,107 @@
+"""Cluster scale-out: throughput and DPU-served fraction vs. shard count.
+
+Runs the §9.2 KV workload (host-path PUTs, offloaded GETs) against clusters
+of 1/2/4/8 DDS storage servers behind consistent-hash key sharding, using
+the batched, pipelined cluster client.  Reported throughput uses MODELED
+service time (per-packet DPU cost + per-request host CPU cost, §5.3/§8),
+with the busiest shard bounding the cluster — wall-clock of the Python
+simulation itself is meaningless here.
+
+Output rows (benchmarks.common CSV convention):
+
+    cluster_put_shardsN,us_per_op,tput=...op/s
+    cluster_get_shardsN,us_per_op,tput=...op/s dpu_frac=...
+
+Smoke mode (``--smoke`` or DDS_BENCH_SMOKE=1) shrinks the key count; the
+shape of the curve — monotonically rising aggregate throughput 1 -> 4 and a
+nonzero offloaded fraction — must survive smoke mode (CI asserts it).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, section  # noqa: E402
+from repro.apps.kv_store import KVClient, ShardedKVStore  # noqa: E402
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def run_workload(num_shards: int, n_keys: int, get_rounds: int) -> dict:
+    store = ShardedKVStore(num_shards=num_shards)
+    client = KVClient(store)
+    keys = [f"user:{i:05d}".encode() for i in range(n_keys)]
+    value = b"x" * 256
+
+    # Phase 1: PUTs (host path; Cache() arms the DPU for every record).
+    put_rids = [client.put(k, value) for k in keys]
+    client.flush()
+    client.run_until_idle()
+    for r in put_rids:
+        client.wait_put(r)
+    put_busy = store.cluster.stats().per_shard_busy_s
+    put_makespan = max(put_busy)
+
+    # Phase 2: pipelined GET rounds (offloaded; zero host CPU on hits).
+    get_rids = []
+    for _ in range(get_rounds):
+        get_rids += [client.get(k) for k in keys]
+        client.flush()                 # next batch pipelined behind this one
+    client.run_until_idle()
+    for r in get_rids:
+        status, _ = client.net.wait(r)
+        assert status == 0
+    total_busy = store.cluster.stats().per_shard_busy_s
+    total_makespan = max(total_busy)
+
+    n_puts, n_gets = len(put_rids), len(get_rids)
+    # GET-phase critical path: subtract per shard BEFORE taking the max —
+    # the PUT-busiest and overall-busiest shard need not be the same one.
+    get_makespan = max(max(t - p for t, p in zip(total_busy, put_busy)), 1e-9)
+    dpu_frac = store.dpu_served_gets() / max(n_gets, 1)
+    return {
+        "shards": num_shards,
+        "puts": n_puts,
+        "gets": n_gets,
+        "put_tput": n_puts / max(put_makespan, 1e-9),
+        "get_tput": n_gets / get_makespan,
+        "agg_tput": (n_puts + n_gets) / max(total_makespan, 1e-9),
+        "dpu_frac": dpu_frac,
+    }
+
+
+def main() -> None:
+    smoke = ("--smoke" in sys.argv
+             or os.environ.get("DDS_BENCH_SMOKE", "0") == "1")
+    n_keys = 96 if smoke else 384
+    get_rounds = 2 if smoke else 4
+    section(f"cluster scaling (KV workload, {n_keys} keys, "
+            f"{get_rounds} GET rounds{', smoke' if smoke else ''})")
+    results = []
+    for n in SHARD_COUNTS:
+        r = run_workload(n, n_keys, get_rounds)
+        results.append(r)
+        emit(f"cluster_put_shards{n}", 1e6 / r["put_tput"],
+             f"tput={r['put_tput']:.0f}op/s")
+        emit(f"cluster_get_shards{n}", 1e6 / r["get_tput"],
+             f"tput={r['get_tput']:.0f}op/s dpu_frac={r['dpu_frac']:.2f}")
+        emit(f"cluster_agg_shards{n}", 1e6 / r["agg_tput"],
+             f"tput={r['agg_tput']:.0f}op/s")
+    by_shards = {r["shards"]: r for r in results}
+    mono = (by_shards[1]["agg_tput"] < by_shards[2]["agg_tput"]
+            < by_shards[4]["agg_tput"])
+    offloaded = all(r["dpu_frac"] > 0 for r in results)
+    print(f"# aggregate throughput monotonic 1->2->4 shards: {mono}")
+    print(f"# DPU-served GET fraction nonzero on every size: {offloaded}")
+    if not (mono and offloaded):
+        # RuntimeError (not SystemExit) so run.py counts this as ONE failed
+        # module and still runs the rest of the benchmark suite.
+        raise RuntimeError("cluster scaling benchmark failed its invariants")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,20 +2,32 @@
 
 ``python -m benchmarks.run``            everything (measured + model + roofline)
 ``python -m benchmarks.run fig17``      one module
+``python -m benchmarks.run --smoke``    CI nightly gate (modules that
+                                        support it run reduced sizes)
 
 Output rows: ``name,us_per_call,derived``.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
+# Allow direct invocation (`python benchmarks/run.py`) in addition to
+# `python -m benchmarks.run`: put the repo root and src/ on the path.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 from benchmarks import (compare, fig14_16_model, fig17_rings,
                         fig18_23_zerocopy, fig22_cache_table,
-                        fig24_26_integration, kernels_bench, roofline)
+                        fig24_26_integration, fig_cluster_scaling,
+                        kernels_bench, roofline)
 
 MODULES = {
+    "cluster": fig_cluster_scaling,
     "fig14_16": fig14_16_model,
     "fig17": fig17_rings,
     "fig18_23": fig18_23_zerocopy,
@@ -28,7 +40,13 @@ MODULES = {
 
 
 def main() -> None:
-    wanted = sys.argv[1:] or list(MODULES)
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        # Size reduction is opt-in per module: modules that support it (so
+        # far: cluster) read DDS_BENCH_SMOKE; the rest run at full size.
+        os.environ["DDS_BENCH_SMOKE"] = "1"
+        args = [a for a in args if a != "--smoke"]
+    wanted = args or list(MODULES)
     failures = 0
     for name in wanted:
         mod = MODULES.get(name)

@@ -1,0 +1,288 @@
+"""Sharded KV store on the DDS cluster — the §9.2 workload, scaled out.
+
+Each shard of a :class:`~repro.distributed.cluster.DDSCluster` holds one
+append-only record log.  The four Table-1 functions per shard:
+
+  * ``OffPred``   — a GET whose key is in the DPU cache table goes to the
+    DPU; everything else (PUT/DEL, cold GETs) goes to the host.
+  * ``OffFunc``   — key -> cached ``(file, offset, size)`` -> ``ReadOp``.
+  * ``Cache``     — cache-on-write: when the host appends records to the
+    log, their locations are inserted, so subsequent GETs are served
+    entirely on the DPU (zero host CPU).
+  * ``Invalidate``— invalidate-on-read: when the host pulls a record back
+    (DELETE / read-modify-write), its cache entry is dropped before the
+    host proceeds — the DPU can never serve a record the host is mutating.
+
+``PUT`` executes on the host (§2: writes need the big cores + memory) and
+its ack carries the record's on-disk location ``(file_id, offset, size)``.
+Overwrites append a fresh record; ``Cache`` upserts the key to the new
+location, and ``Invalidate`` ignores stale log offsets so an overwrite can
+never knock out the newer mapping.
+
+Routing is by consistent-hashing the KEY over the cluster ring, so the
+same thin :class:`~repro.core.client.ClusterClient` pipelining applies.
+"""
+
+from __future__ import annotations
+
+import bisect
+import struct
+from dataclasses import dataclass, field
+
+from repro.core import wire
+from repro.core.client import ClusterClient
+from repro.core.dds_server import APP_RESP_HDR, ServerConfig, decode_batch
+from repro.core.offload import OffloadAPI, ReadOp, WriteOp
+from repro.distributed.cluster import DDSCluster
+
+# -- network message formats (batched with the §8.1 framing) -------------------------
+KV_PUT = 16
+KV_GET = 17
+KV_DEL = 18
+PUT_HDR = struct.Struct("<BQII")   # type, req_id, klen, vlen
+GET_HDR = struct.Struct("<BQI")    # type, req_id, klen
+REC_HDR = struct.Struct("<II")     # klen, vlen (on-disk record header)
+LOC = struct.Struct("<IQI")        # file_id, offset, size (PUT ack body)
+
+
+def encode_put(req_id: int, key: bytes, value: bytes) -> bytes:
+    return PUT_HDR.pack(KV_PUT, req_id, len(key), len(value)) + key + value
+
+
+def encode_get(req_id: int, key: bytes) -> bytes:
+    return GET_HDR.pack(KV_GET, req_id, len(key)) + key
+
+
+def encode_del(req_id: int, key: bytes) -> bytes:
+    return GET_HDR.pack(KV_DEL, req_id, len(key)) + key
+
+
+def decode_record(data: bytes) -> tuple[bytes, bytes]:
+    klen, vlen = REC_HDR.unpack_from(data, 0)
+    k = data[REC_HDR.size : REC_HDR.size + klen]
+    v = data[REC_HDR.size + klen : REC_HDR.size + klen + vlen]
+    return k, v
+
+
+@dataclass(frozen=True)
+class KVLocation:
+    file_id: int
+    offset: int
+    size: int
+
+    @staticmethod
+    def decode(body: bytes) -> "KVLocation":
+        return KVLocation(*LOC.unpack_from(body, 0))
+
+    def encode(self) -> bytes:
+        return LOC.pack(self.file_id, self.offset, self.size)
+
+
+@dataclass
+class _ShardState:
+    """Host-side per-shard state (the storage application on that host)."""
+    log_fid: int = -1                 # shard-LOCAL file id of the record log
+    log_off: int = 0                  # append tail
+    index: dict = field(default_factory=dict)      # key -> KVLocation
+    at_offset: dict = field(default_factory=dict)  # log offset -> (key, size)
+    offsets: list = field(default_factory=list)    # sorted (log appends only)
+    puts: int = 0
+    dels: int = 0
+    host_gets: int = 0
+
+
+class ShardedKVStore:
+    """N-shard KV service; every shard is a full DDS storage server."""
+
+    def __init__(self, num_shards: int = 2,
+                 config: ServerConfig | None = None, vnodes: int = 64):
+        self._states = [_ShardState() for _ in range(num_shards)]
+        self.cluster = DDSCluster(num_shards, config,
+                                  api_factory=self._api_for, vnodes=vnodes)
+        for st, srv in zip(self._states, self.cluster.servers):
+            st.log_fid = srv.frontend.create_file("kvlog")
+            srv.run_until_idle()
+
+    def shard_for_key(self, key: bytes) -> int:
+        return self.cluster.ring.shard_for(key)
+
+    # -- Table 1 functions, closed over one shard's state ---------------------------
+    def _api_for(self, shard: int) -> OffloadAPI:
+        st = self._states[shard]
+
+        def off_pred(payload: bytes, table) -> tuple[list[bytes], list[bytes]]:
+            host, dpu = [], []
+            for m in decode_batch(payload):
+                if m and m[0] == KV_GET:
+                    _, rid, klen = GET_HDR.unpack_from(m, 0)
+                    key = m[GET_HDR.size : GET_HDR.size + klen]
+                    if table is not None and table.lookup(key) is not None:
+                        dpu.append(m)
+                        continue
+                host.append(m)
+            return host, dpu
+
+        def off_func(msg: bytes, table) -> ReadOp | None:
+            if not msg or msg[0] != KV_GET:
+                return None
+            _, rid, klen = GET_HDR.unpack_from(msg, 0)
+            key = msg[GET_HDR.size : GET_HDR.size + klen]
+            loc: KVLocation | None = table.lookup(key) if table else None
+            if loc is None:
+                return None
+            return ReadOp(loc.file_id, loc.offset, loc.size)
+
+        def cache(op: WriteOp) -> list[tuple[object, object]]:
+            if op.file_id != st.log_fid:
+                return []
+            out, pos = [], 0
+            while pos + REC_HDR.size <= len(op.data):
+                klen, vlen = REC_HDR.unpack_from(op.data, pos)
+                total = REC_HDR.size + klen + vlen
+                key = bytes(op.data[pos + REC_HDR.size
+                                    : pos + REC_HDR.size + klen])
+                out.append((key, KVLocation(op.file_id, op.offset + pos, total)))
+                pos += total
+            return out
+
+        def invalidate(op: ReadOp) -> list[object]:
+            """Host pulled [offset, offset+size) of the log back: drop the
+            cache entries of records in that range — UNLESS the index
+            already points the key at a newer offset outside the range
+            (an overwrite must not invalidate its own fresh mapping).
+
+            ``st.offsets`` is sorted (the log only appends), so the scan is
+            a bisect plus the overlapped window; records whose mapping is
+            resolved here are tombstoned out of ``at_offset`` so no read
+            pays for them twice."""
+            if op.file_id != st.log_fid:
+                return []
+            keys = []
+            j = max(bisect.bisect_right(st.offsets, op.offset) - 1, 0)
+            while j < len(st.offsets):
+                off = st.offsets[j]
+                j += 1
+                if off >= op.offset + op.size:
+                    break
+                ent = st.at_offset.get(off)
+                if ent is None:
+                    continue  # tombstoned by an earlier invalidation
+                key, size = ent
+                if off + size <= op.offset:
+                    continue  # record just before the range; no overlap
+                cur: KVLocation | None = st.index.get(key)
+                if cur is not None and not (
+                        cur.offset < op.offset + op.size
+                        and cur.offset + cur.size > op.offset):
+                    # Key lives elsewhere now: keep its fresh mapping, and
+                    # this stale record can never matter again — prune it.
+                    del st.at_offset[off]
+                    continue
+                keys.append(key)
+                del st.at_offset[off]
+            return keys
+
+        def response_header(msg: bytes, op: ReadOp, err: int) -> bytes:
+            req_id = GET_HDR.unpack_from(msg, 0)[1] if msg else 0
+            return APP_RESP_HDR.pack(req_id, err,
+                                     op.size if err == wire.E_OK else 0)
+
+        def host_handler(msg: bytes) -> tuple:
+            typ = msg[0] if msg else 0
+            if typ == KV_PUT:
+                _, req_id, klen, vlen = PUT_HDR.unpack_from(msg, 0)
+                key = msg[PUT_HDR.size : PUT_HDR.size + klen]
+                value = msg[PUT_HDR.size + klen : PUT_HDR.size + klen + vlen]
+                rec = REC_HDR.pack(klen, vlen) + key + value
+                loc = KVLocation(st.log_fid, st.log_off, len(rec))
+                st.log_off += len(rec)
+                st.index[key] = loc
+                st.at_offset[loc.offset] = (key, loc.size)
+                st.offsets.append(loc.offset)   # log appends: stays sorted
+                st.puts += 1
+                # Append to the log; Cache() fires on the write -> next GET
+                # for this key is DPU-served.  The ack returns the location.
+                return ("w", req_id, loc.file_id, loc.offset, rec, loc.encode())
+            if typ == KV_GET:
+                _, req_id, klen = GET_HDR.unpack_from(msg, 0)
+                key = msg[GET_HDR.size : GET_HDR.size + klen]
+                loc = st.index.get(key)
+                st.host_gets += 1
+                if loc is None:
+                    return ("resp", req_id, wire.E_NOENT, b"")
+                return ("r", req_id, loc.file_id, loc.offset, loc.size)
+            if typ == KV_DEL:
+                _, req_id, klen = GET_HDR.unpack_from(msg, 0)
+                key = msg[GET_HDR.size : GET_HDR.size + klen]
+                loc = st.index.pop(key, None)
+                if loc is None:
+                    return ("resp", req_id, wire.E_NOENT, b"")
+                st.dels += 1
+                # Read-for-update: the host pulls the record back, which
+                # fires Invalidate() and drops the DPU mapping BEFORE the
+                # response; the dead record's bytes ack the delete.
+                return ("r", req_id, loc.file_id, loc.offset, loc.size)
+            return ("resp", 0, wire.E_INVAL, b"")
+
+        return OffloadAPI(off_pred, off_func, cache=cache,
+                          invalidate=invalidate,
+                          response_header=response_header,
+                          host_handler=host_handler)
+
+    # -- observability -----------------------------------------------------------------
+    def dpu_served_gets(self) -> int:
+        return sum(s.offload.stats.completed for s in self.cluster.servers)
+
+    def host_served_gets(self) -> int:
+        return sum(st.host_gets for st in self._states)
+
+    def shard_stats(self) -> list[dict]:
+        return [{"puts": st.puts, "dels": st.dels, "host_gets": st.host_gets,
+                 "dpu_gets": srv.offload.stats.completed,
+                 "log_bytes": st.log_off}
+                for st, srv in zip(self._states, self.cluster.servers)]
+
+
+class KVClient:
+    """Key-routed client: batches/pipelines PUT/GET/DEL across shards."""
+
+    def __init__(self, store: ShardedKVStore, ip: str = "10.0.0.9",
+                 port: int | None = None):
+        self.store = store
+        self.net = ClusterClient(store.cluster, ip=ip, port=port)
+
+    def put(self, key: bytes, value: bytes) -> int:
+        shard = self.store.shard_for_key(key)
+        return self.net.send_raw(shard, lambda rid: encode_put(rid, key, value))
+
+    def get(self, key: bytes) -> int:
+        shard = self.store.shard_for_key(key)
+        return self.net.send_raw(shard, lambda rid: encode_get(rid, key))
+
+    def delete(self, key: bytes) -> int:
+        shard = self.store.shard_for_key(key)
+        return self.net.send_raw(shard, lambda rid: encode_del(rid, key))
+
+    # -- scheduling + typed waits -----------------------------------------------------
+    def flush(self) -> int:
+        return self.net.flush()
+
+    def pump(self) -> int:
+        return self.net.pump()
+
+    def run_until_idle(self) -> None:
+        self.net.run_until_idle()
+
+    def wait_put(self, rid: int) -> KVLocation:
+        status, body = self.net.wait(rid)
+        if status != wire.E_OK:
+            raise IOError(f"PUT failed with status {status}")
+        return KVLocation.decode(body)
+
+    def wait_value(self, rid: int) -> bytes | None:
+        status, body = self.net.wait(rid)
+        if status == wire.E_NOENT:
+            return None
+        if status != wire.E_OK:
+            raise IOError(f"GET failed with status {status}")
+        return decode_record(body)[1]

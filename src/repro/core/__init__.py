@@ -13,6 +13,7 @@ Layers (paper section in parens):
 """
 
 from repro.core.cache_table import CacheTable
+from repro.core.client import ClusterClient, ShardConnection
 from repro.core.dds_server import DDSClient, DDSStorageServer, ServerConfig
 from repro.core.file_service import FileServiceRunner, SegmentFS
 from repro.core.host_lib import DDSFrontEnd
@@ -23,7 +24,8 @@ from repro.core.traffic import (ApplicationSignature, FiveTuple,
                                 TrafficDirector)
 
 __all__ = [
-    "CacheTable", "DDSClient", "DDSStorageServer", "ServerConfig",
+    "CacheTable", "ClusterClient", "ShardConnection",
+    "DDSClient", "DDSStorageServer", "ServerConfig",
     "FileServiceRunner", "SegmentFS", "DDSFrontEnd", "OffloadAPI",
     "OffloadEngine", "ReadOp", "WriteOp", "DMAEngine", "FaRMStyleRing",
     "LockRing", "ProgressiveRing", "ResponseRing", "ApplicationSignature",

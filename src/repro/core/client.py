@@ -1,0 +1,206 @@
+"""Cluster client: per-shard batching + pipelining over the §8.1 wire format.
+
+The single-server :class:`~repro.core.dds_server.DDSClient` sends one network
+message per call and blocks in ``wait``.  Serving heavy traffic needs the two
+client-side techniques the paper's benchmark driver uses (§8.1):
+
+  * **batching** — requests destined for the same shard are packed into one
+    network message (``encode_batch``), so the traffic director runs its
+    signature + predicate once per batch, not once per request;
+  * **pipelining** — the client keeps issuing batches without waiting for
+    responses; each shard's offload engine preserves per-connection request
+    order (Fig 13), so responses stream back in issue order per shard.
+
+Everything is cooperatively scheduled: ``pump()`` flushes pending batches,
+steps every shard, and drains responses — tests can single-step the whole
+cluster deterministically.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable
+
+from repro.core.dds_server import (DDSStorageServer, encode_app_read,
+                                   encode_app_write, encode_batch,
+                                   reassemble_responses)
+from repro.core.traffic import FLAG_SYN, FiveTuple, Packet
+
+if TYPE_CHECKING:  # import cycle: distributed.cluster imports core
+    from repro.distributed.cluster import DDSCluster
+
+
+@dataclass
+class ClientStats:
+    requests: int = 0
+    batches_sent: int = 0
+    messages_sent: int = 0
+    responses: int = 0
+
+
+class ShardConnection:
+    """One PEP-terminated flow to one shard (non-blocking enqueue/flush)."""
+
+    def __init__(self, server: DDSStorageServer, ip: str, port: int):
+        self.server = server
+        self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port)
+        self._seq = 1  # after SYN
+        self._pending: list[bytes] = []
+        self._rx = bytearray()
+        self.arrival_order: list[int] = []   # req ids in response order
+        server.director.ingress.push(Packet(self.flow, 0, b"", flags=FLAG_SYN))
+        server.director.step()
+
+    def enqueue(self, msg: bytes) -> None:
+        self._pending.append(msg)
+
+    def flush(self) -> int:
+        """Pack all pending messages into ONE network message (batching)."""
+        if not self._pending:
+            return 0
+        payload = encode_batch(self._pending)
+        n = len(self._pending)
+        self._pending.clear()
+        self.server.director.ingress.push(Packet(self.flow, self._seq, payload))
+        self._seq += len(payload)
+        return n
+
+    def collect(self, responses: dict[int, tuple[int, bytes]]) -> int:
+        """Drain OUR flow's packets; reassemble the segmented response stream.
+
+        The director's ``to_client`` wire carries every client's responses;
+        packets for other flows are re-queued untouched so several clients
+        can share one shard (each bounded pop cycle inspects the wire's
+        snapshot length once, so foreign packets are not spun on)."""
+        n = 0
+        mine = self.flow.reversed()
+        for _ in range(len(self.server.director.to_client)):
+            pkt = self.server.director.to_client.pop()
+            if pkt is None:
+                break
+            if pkt.flow != mine:
+                self.server.director.to_client.push(pkt)  # another client's
+                continue
+            self._rx += bytes(pkt.payload)
+            n += 1
+        reassemble_responses(self._rx, responses, self.arrival_order)
+        return n
+
+
+class ClusterClient:
+    """Batched, pipelined client for a :class:`DDSCluster`.
+
+    Requests are routed by cluster-global file id through the cluster's
+    consistent-hash placement (``cluster.locate``); applications with their
+    own keys (e.g. the KV store) route via ``send_raw(shard, build_msg)``.
+    """
+
+    _next_base_port = 40000          # distinct flows per client by default
+    _port_lock = threading.Lock()
+
+    def __init__(self, cluster: "DDSCluster", ip: str = "10.0.0.9",
+                 port: int | None = None):
+        self.cluster = cluster
+        if port is None:
+            # Each client needs its own source ports, or two clients' flows
+            # (and therefore their responses) become indistinguishable.
+            with ClusterClient._port_lock:
+                port = ClusterClient._next_base_port
+                ClusterClient._next_base_port += len(cluster.servers)
+        self.conns = [ShardConnection(srv, ip, port + i)
+                      for i, srv in enumerate(cluster.servers)]
+        self._next_rid = 1
+        self._rid_shard: dict[int, int] = {}
+        self._lock = threading.Lock()
+        self.responses: dict[int, tuple[int, bytes]] = {}
+        self.stats = ClientStats()
+
+    # -- request issue (buffered until the next flush/pump) -------------------------
+    def _rid(self, shard: int) -> int:
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        self._rid_shard[rid] = shard
+        self.stats.requests += 1
+        return rid
+
+    def read(self, gfid: int, offset: int, nbytes: int) -> int:
+        loc = self.cluster.locate(gfid)
+        rid = self._rid(loc.shard)
+        self.conns[loc.shard].enqueue(
+            encode_app_read(rid, loc.local_fid, offset, nbytes))
+        return rid
+
+    def write(self, gfid: int, offset: int, data: bytes) -> int:
+        loc = self.cluster.locate(gfid)
+        rid = self._rid(loc.shard)
+        self.conns[loc.shard].enqueue(
+            encode_app_write(rid, loc.local_fid, offset, data))
+        return rid
+
+    def send_raw(self, shard: int, build_msg: Callable[[int], bytes]) -> int:
+        """Route an application-defined message to an explicit shard."""
+        rid = self._rid(shard)
+        self.conns[shard].enqueue(build_msg(rid))
+        return rid
+
+    # -- pipelined scheduling ---------------------------------------------------------
+    def flush(self) -> int:
+        """Send one batched message per shard with buffered requests."""
+        sent = 0
+        for conn in self.conns:
+            n = conn.flush()
+            if n:
+                self.stats.batches_sent += 1
+                self.stats.messages_sent += n
+                sent += n
+        return sent
+
+    def pump(self) -> int:
+        """One cooperative step: flush -> step every shard -> drain responses."""
+        work = self.flush()
+        work += self.cluster.pump()
+        before = len(self.responses)
+        for conn in self.conns:
+            conn.collect(self.responses)
+        got = len(self.responses) - before
+        self.stats.responses += got
+        return work + got
+
+    def outstanding(self) -> int:
+        return len(self._rid_shard) - len(
+            [r for r in self._rid_shard if r in self.responses])
+
+    def run_until_idle(self, max_iters: int = 200_000) -> None:
+        idle = 0
+        for _ in range(max_iters):
+            if self.pump() == 0:
+                for srv in self.cluster.servers:
+                    srv.device.drain()
+                idle += 1
+                if idle >= 3 and self.outstanding() == 0:
+                    return
+                if idle >= 8:
+                    return  # idle with requests genuinely unanswerable
+            else:
+                idle = 0
+        raise TimeoutError("cluster client did not go idle")
+
+    # -- response access ----------------------------------------------------------------
+    def wait(self, rid: int, max_iters: int = 200_000) -> tuple[int, bytes]:
+        for _ in range(max_iters):
+            if rid in self.responses:
+                self._rid_shard.pop(rid, None)
+                return self.responses.pop(rid)
+            if self.pump() == 0:
+                for srv in self.cluster.servers:
+                    srv.device.drain()
+        raise TimeoutError(f"no response for request {rid}")
+
+    def wait_many(self, rids: list[int],
+                  max_iters: int = 200_000) -> dict[int, tuple[int, bytes]]:
+        out: dict[int, tuple[int, bytes]] = {}
+        for rid in rids:
+            out[rid] = self.wait(rid, max_iters)
+        return out

@@ -66,6 +66,29 @@ def decode_batch(payload: bytes) -> list[bytes]:
     return out
 
 
+def reassemble_responses(rx: bytearray, responses: dict,
+                         order: list | None = None) -> int:
+    """Peel complete APP_RESP_HDR-framed responses off a client rx buffer.
+
+    Shared by every client (single-server and cluster shard connections) so
+    the framing logic lives in exactly one place.  Consumed bytes are
+    deleted from ``rx``; a trailing partial response is left for the next
+    call.  Returns the number of responses extracted."""
+    n = 0
+    while len(rx) >= APP_RESP_HDR.size:
+        req_id, status, nbytes = APP_RESP_HDR.unpack_from(rx, 0)
+        total = APP_RESP_HDR.size + nbytes
+        if len(rx) < total:
+            break
+        body = bytes(rx[APP_RESP_HDR.size : total])
+        del rx[:total]
+        responses[req_id] = (status, body)
+        if order is not None:
+            order.append(req_id)
+        n += 1
+    return n
+
+
 def default_off_pred(payload: bytes, table) -> tuple[list[bytes], list[bytes]]:
     """The paper's simple example: reads -> DPU, writes -> host (§6.1)."""
     host, dpu = [], []
@@ -224,13 +247,18 @@ class _HostApp:
                 srv.director.host_response(host_flow, resp)
                 return
             if action[0] == "w":
-                _, req_id, file_id, offset, data = action
+                # ('w', req_id, fid, off, data[, resp_body]) — the optional
+                # 6th element is echoed in the write ack (e.g. a KV PUT
+                # returning the record's on-disk location, §9.2).
+                _, req_id, file_id, offset, data = action[:5]
+                ack_body = action[5] if len(action) > 5 else b""
                 rid = srv.frontend.write_file(file_id, offset, data)
-                self._inflight[rid] = (host_flow, APP_WRITE, req_id, len(data))
+                self._inflight[rid] = (host_flow, APP_WRITE, req_id,
+                                       len(data), ack_body)
                 return
             _, req_id, file_id, offset, nbytes = action
             rid = srv.frontend.read_file(file_id, offset, nbytes)
-            self._inflight[rid] = (host_flow, APP_READ, req_id, nbytes)
+            self._inflight[rid] = (host_flow, APP_READ, req_id, nbytes, b"")
             return
         typ, req_id, file_id, offset, nbytes = APP_HDR.unpack_from(m, 0)
         if typ == APP_WRITE:
@@ -238,7 +266,7 @@ class _HostApp:
             rid = srv.frontend.write_file(file_id, offset, data)
         else:
             rid = srv.frontend.read_file(file_id, offset, nbytes)
-        self._inflight[rid] = (host_flow, typ, req_id, nbytes)
+        self._inflight[rid] = (host_flow, typ, req_id, nbytes, b"")
 
     def poll_completions(self) -> int:
         srv = self.server
@@ -248,9 +276,14 @@ class _HostApp:
                 info = self._inflight.pop(c.request_id, None)
                 if info is None:
                     continue
-                host_flow, typ, req_id, nbytes = info
+                host_flow, typ, req_id, nbytes, ack_body = info
                 srv.host_cpu_busy_s += self.HOST_NET_US * 1e-6  # response path
-                body = c.data if typ == APP_READ and c.error == wire.E_OK else b""
+                if c.error != wire.E_OK:
+                    body = b""
+                elif typ == APP_READ:
+                    body = c.data
+                else:
+                    body = ack_body
                 resp = APP_RESP_HDR.pack(req_id, c.error, len(body)) + body
                 srv.director.host_response(host_flow, resp)
                 n += 1
@@ -315,14 +348,7 @@ class DDSClient:
                 break
             self._rx_buf += bytes(pkt.payload)
             n += 1
-        while len(self._rx_buf) >= APP_RESP_HDR.size:
-            req_id, status, nbytes = APP_RESP_HDR.unpack_from(self._rx_buf, 0)
-            total = APP_RESP_HDR.size + nbytes
-            if len(self._rx_buf) < total:
-                break
-            body = bytes(self._rx_buf[APP_RESP_HDR.size : total])
-            del self._rx_buf[:total]
-            self.responses[req_id] = (status, body)
+        reassemble_responses(self._rx_buf, self.responses)
         return n
 
     def wait(self, rid: int, max_iters: int = 200_000) -> tuple[int, bytes]:

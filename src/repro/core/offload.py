@@ -64,7 +64,12 @@ class OffloadAPI:
     non-default message types (integration hook, cf. §9's "hundreds of lines
     of code" adoption).  It returns one of:
       ('r', req_id, file_id, offset, nbytes)   -- host file read, then respond
-      ('w', req_id, file_id, offset, data)     -- host file write, then ack
+      ('w', req_id, file_id, offset, data[, resp_body])
+                                               -- host file write, then ack;
+                                                  the optional 6th element is
+                                                  the ack's response body
+                                                  (e.g. a KV PUT returning
+                                                  the record location, §9.2)
       ('resp', req_id, status, body)           -- immediate response
     """
     off_pred: Callable[[bytes, CacheTable | None], tuple[list[bytes], list[bytes]]]

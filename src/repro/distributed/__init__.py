@@ -1,1 +1,7 @@
-"""Distribution layer: sharding rules, fault tolerance, elasticity."""
+"""Distribution layer: sharding rules, fault tolerance, elasticity, and the
+multi-server DDS cluster (consistent-hash sharded storage scale-out)."""
+
+from repro.distributed.cluster import (DDSCluster, FileLocation, HashRing,
+                                       stable_hash)
+
+__all__ = ["DDSCluster", "FileLocation", "HashRing", "stable_hash"]

@@ -1,0 +1,180 @@
+"""Sharded multi-server DDS cluster: scale-out behind consistent hashing.
+
+The paper's deployable unit is ONE storage server host + DPU (Fig 6);
+production disaggregated stores run MANY of them behind a thin routing
+layer (cf. BPF-oF and disaggregated-DBMS designs in PAPERS.md).  This
+module provides that layer:
+
+``HashRing``
+    Consistent hashing with virtual nodes.  Placement is stable across
+    processes (blake2b, not the salted builtin ``hash``) and adding a shard
+    only remaps ~1/N of the key space — the property that makes scale-out
+    cheap.
+
+``DDSCluster``
+    N independent :class:`DDSStorageServer` instances ("shards"), each with
+    its own DPU, traffic director, offload engine and RAM-backed device.
+    Files are placed by consistent-hashing their *cluster-global* file id;
+    the cluster keeps the global->(shard, local-id) mapping, playing the
+    (rarely-consulted, control-plane) metadata service of disaggregated
+    designs.  ``pump()``/``run_until_idle()`` drive every shard one step so
+    multi-server interleavings stay deterministic and testable.
+
+Client-side batching/pipelining lives in :mod:`repro.core.client`; the
+§9.2 KV application on top of the cluster lives in
+:mod:`repro.apps.kv_store`.
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+from dataclasses import dataclass, field, replace
+from typing import Callable, Iterable
+
+from repro.core.dds_server import DDSStorageServer, ServerConfig
+from repro.core.offload import OffloadAPI
+
+
+def stable_hash(key: object, salt: bytes = b"") -> int:
+    """64-bit process-stable hash of ints/bytes/strs (builtin hash is salted)."""
+    if isinstance(key, int):
+        raw = key.to_bytes(16, "little", signed=True)
+    elif isinstance(key, bytes):
+        raw = key
+    else:
+        raw = str(key).encode()
+    return int.from_bytes(hashlib.blake2b(salt + raw, digest_size=8).digest(),
+                          "little")
+
+
+class HashRing:
+    """Consistent-hash ring over integer shard ids with virtual nodes."""
+
+    def __init__(self, num_shards: int, vnodes: int = 64):
+        if num_shards <= 0:
+            raise ValueError("num_shards must be positive")
+        self.num_shards = num_shards
+        self.vnodes = vnodes
+        self._points: list[int] = []
+        self._owners: list[int] = []
+        for shard in range(num_shards):
+            for v in range(vnodes):
+                p = stable_hash(f"shard-{shard}-vnode-{v}")
+                i = bisect.bisect_left(self._points, p)
+                self._points.insert(i, p)
+                self._owners.insert(i, shard)
+
+    def shard_for(self, key: object) -> int:
+        h = stable_hash(key, salt=b"key:")
+        i = bisect.bisect_right(self._points, h)
+        if i == len(self._points):
+            i = 0  # wrap around the ring
+        return self._owners[i]
+
+    def distribution(self, keys: Iterable[object]) -> dict[int, int]:
+        out: dict[int, int] = {s: 0 for s in range(self.num_shards)}
+        for k in keys:
+            out[self.shard_for(k)] += 1
+        return out
+
+
+@dataclass
+class ClusterStats:
+    """Aggregated across shards (per-shard stats stay on each server)."""
+    offloaded_completed: int = 0
+    bounced_to_host: int = 0
+    host_responses: int = 0
+    dpu_time_s: float = 0.0
+    host_cpu_busy_s: float = 0.0
+    per_shard_busy_s: list[float] = field(default_factory=list)
+
+
+@dataclass
+class FileLocation:
+    """Where a cluster-global file id actually lives."""
+    shard: int
+    local_fid: int
+
+
+class DDSCluster:
+    """N DDS storage servers behind consistent-hash file-id sharding."""
+
+    def __init__(self, num_shards: int = 2,
+                 config: ServerConfig | None = None,
+                 api_factory: Callable[[int], OffloadAPI | None] | None = None,
+                 vnodes: int = 64):
+        self.num_shards = num_shards
+        base = config or ServerConfig()
+        self.ring = HashRing(num_shards, vnodes)
+        self.servers: list[DDSStorageServer] = []
+        for i in range(num_shards):
+            # Each shard listens on its own port so application signatures
+            # stay per-server, exactly as N separate Fig-6 boxes would.
+            cfg = replace(base, server_port=base.server_port + i)
+            api = api_factory(i) if api_factory is not None else None
+            self.servers.append(DDSStorageServer(cfg, api))
+        self._files: dict[int, FileLocation] = {}
+        self._next_fid = 1
+
+    # -- control plane: cluster-global files ---------------------------------------
+    def create_file(self, name: str) -> int:
+        """Create a file on the shard the ring assigns; return a GLOBAL id."""
+        gfid = self._next_fid
+        self._next_fid += 1
+        shard = self.ring.shard_for(gfid)
+        lfid = self.servers[shard].frontend.create_file(f"{name}@{gfid}")
+        self._files[gfid] = FileLocation(shard, lfid)
+        return gfid
+
+    def locate(self, gfid: int) -> FileLocation:
+        loc = self._files.get(gfid)
+        if loc is None:
+            raise KeyError(f"unknown cluster file id {gfid}")
+        return loc
+
+    def shard_for_file(self, gfid: int) -> int:
+        return self.locate(gfid).shard
+
+    def write_sync(self, gfid: int, offset: int, data: bytes) -> None:
+        """Host-side bulk load (e.g. benchmark setup), bypassing the network."""
+        loc = self.locate(gfid)
+        self.servers[loc.shard].frontend.write_sync(loc.local_fid, offset, data)
+        self.servers[loc.shard].run_until_idle()
+
+    # -- cooperative event loop over every shard ------------------------------------
+    def pump(self) -> int:
+        work = 0
+        for srv in self.servers:
+            work += srv.pump()
+        return work
+
+    def run_until_idle(self, max_iters: int = 200_000) -> None:
+        idle = 0
+        for _ in range(max_iters):
+            if self.pump() == 0:
+                for srv in self.servers:
+                    srv.device.drain()
+                idle += 1
+                if idle >= 3:
+                    return
+            else:
+                idle = 0
+        raise TimeoutError("cluster did not go idle")
+
+    # -- aggregate accounting ---------------------------------------------------------
+    def stats(self) -> ClusterStats:
+        st = ClusterStats()
+        for srv in self.servers:
+            st.offloaded_completed += srv.offload.stats.completed
+            st.bounced_to_host += srv.offload.stats.bounced_to_host
+            st.host_responses += srv.director.stats.resp_from_host
+            st.dpu_time_s += srv.director.stats.modeled_time_s
+            st.host_cpu_busy_s += srv.host_cpu_busy_s
+            st.per_shard_busy_s.append(srv.director.stats.modeled_time_s
+                                       + srv.host_cpu_busy_s)
+        return st
+
+    def makespan_s(self) -> float:
+        """Modeled completion time: the busiest shard bounds the cluster."""
+        return max(self.stats().per_shard_busy_s, default=0.0)

@@ -33,6 +33,19 @@ from repro.optim.compression import (compress_tree, decompress_tree,
                                      init_compression)
 
 
+def _shard_map(f, *, mesh, axis_names, check_vma, in_specs, out_specs):
+    """jax.shard_map appeared in jax 0.5; fall back to the experimental API
+    (manual over ``axis_names`` only => the rest of the mesh goes in ``auto``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, axis_names=axis_names,
+                             check_vma=check_vma,
+                             in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma, auto=auto)
+
+
 @dataclass
 class TrainConfig:
     peak_lr: float = 3e-4
@@ -176,7 +189,7 @@ def make_compressed_pod_train_fn(api: ModelAPI, tcfg: TrainConfig,
                        for k in batch}
         err_specs = jax.tree_util.tree_map(
             lambda _: jax.sharding.PartitionSpec("pod"), params)
-        fn = jax.shard_map(
+        fn = _shard_map(
             per_pod, mesh=mesh, axis_names={"pod"}, check_vma=False,
             in_specs=(pod_specs, err_specs, batch_specs),
             out_specs=(pod_specs, err_specs,

@@ -1,0 +1,172 @@
+"""Deterministic stand-in for the slice of `hypothesis` this suite uses.
+
+CI installs the real thing (``pip install -e .[test]``); hermetic containers
+without network access fall back to this shim so the five property-test
+modules still collect and run.  It implements only the API surface the tests
+exercise — ``given``/``settings`` plus the ``integers``/``booleans``/
+``binary``/``lists``/``tuples``/``sampled_from``/``data`` strategies — with a
+seeded PRNG per example and **no shrinking**: a failing example reports its
+example index so it can be replayed.
+
+conftest.py registers this module as ``hypothesis`` in ``sys.modules`` only
+when the real package is absent.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    """A strategy is just a seeded-draw function."""
+
+    def __init__(self, draw, name="strategy"):
+        self._draw = draw
+        self._name = name
+
+    def do_draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def __repr__(self):
+        return f"<fallback {self._name}>"
+
+
+def integers(min_value=0, max_value=1 << 30) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.randint(min_value, max_value), "integers")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda r: bool(r.getrandbits(1)), "booleans")
+
+
+def binary(min_size=0, max_size=64) -> SearchStrategy:
+    return SearchStrategy(
+        lambda r: bytes(r.getrandbits(8) for _ in range(r.randint(min_size, max_size))),
+        "binary")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda r: elements[r.randrange(len(elements))],
+                          "sampled_from")
+
+
+def lists(elements: SearchStrategy, min_size=0, max_size=16) -> SearchStrategy:
+    return SearchStrategy(
+        lambda r: [elements.do_draw(r) for _ in range(r.randint(min_size, max_size))],
+        "lists")
+
+
+def tuples(*elems: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda r: tuple(e.do_draw(r) for e in elems), "tuples")
+
+
+class DataObject:
+    """Interactive-draw handle (the argument ``st.data()`` tests receive)."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.do_draw(self._rnd)
+
+
+class _DataStrategy(SearchStrategy):
+    def __init__(self):
+        super().__init__(lambda r: DataObject(r), "data")
+
+
+def data() -> _DataStrategy:
+    return _DataStrategy()
+
+
+def _seed_for(func_name: str, example: int) -> int:
+    return zlib.crc32(f"dds:{func_name}:{example}".encode())
+
+
+def given(*strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Right-align positional strategies onto the test's parameters, run
+    ``max_examples`` deterministic examples, re-raise on first failure."""
+
+    def decorate(func):
+        params = list(inspect.signature(func).parameters)
+        npos = len(strategies)
+        pos_names = params[len(params) - npos:] if npos else []
+
+        def wrapper(*args, **kwargs):
+            # settings() may have decorated either the wrapper (settings
+            # above given) or the raw function (settings below given).
+            max_examples = getattr(wrapper, "_max_examples",
+                                   getattr(func, "_max_examples",
+                                           DEFAULT_MAX_EXAMPLES))
+            for i in range(max_examples):
+                rnd = random.Random(_seed_for(func.__qualname__, i))
+                drawn = dict(zip(pos_names,
+                                 (s.do_draw(rnd) for s in strategies)))
+                for name, s in kw_strategies.items():
+                    drawn[name] = s.do_draw(rnd)
+                try:
+                    func(*args, **drawn, **kwargs)
+                except _UnsatisfiedAssumption:
+                    continue  # assume() failed: discard this example
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} of {func.__qualname__} "
+                        f"(deterministic seed {_seed_for(func.__qualname__, i)}): "
+                        f"{e!r}") from e
+
+        wrapper.__name__ = func.__name__
+        wrapper.__qualname__ = func.__qualname__
+        wrapper.__doc__ = func.__doc__
+        wrapper.__module__ = func.__module__
+        covered = set(pos_names) | set(kw_strategies)
+        wrapper.__signature__ = inspect.Signature(
+            [p for n, p in inspect.signature(func).parameters.items()
+             if n not in covered])
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Works above or below ``@given`` (attribute is read lazily)."""
+
+    def decorate(func):
+        func._max_examples = max_examples
+        return func
+
+    return decorate
+
+
+def assume(condition) -> bool:
+    """Weak `assume`: abandon the example silently when unsatisfied."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def build_modules() -> tuple[types.ModuleType, types.ModuleType]:
+    """Create importable ``hypothesis`` + ``hypothesis.strategies`` modules."""
+    strategies = types.ModuleType("hypothesis.strategies")
+    for fn in (integers, booleans, binary, sampled_from, lists, tuples, data):
+        setattr(strategies, fn.__name__, fn)
+    strategies.SearchStrategy = SearchStrategy
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strategies
+    hyp.__version__ = "0.0-dds-fallback"
+    hyp.__is_dds_fallback__ = True
+    return hyp, strategies

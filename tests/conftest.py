@@ -2,3 +2,16 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests use hypothesis; hermetic containers without network access
+# fall back to the deterministic shim in _hypothesis_fallback (CI installs
+# the real package via `pip install -e .[test]`).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+
+    _hyp, _strategies = _hypothesis_fallback.build_modules()
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _strategies

@@ -61,6 +61,8 @@ for arch in ("tinyllama_1p1b", "granite_moe_3b_a800m"):
                            jax.ShapeDtypeStruct((), jnp.int32))
         compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # jax < 0.5 returns a one-element list
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     out[arch] = {
         "flops": float(cost.get("flops", 0)),
@@ -148,6 +150,10 @@ print(json.dumps({"losses": losses, "s8_allgathers": n_s8}))
 
 @pytest.mark.slow
 def test_compressed_pod_grads_trains_and_uses_int8_wire():
+    import jax
+    if not hasattr(jax, "shard_map"):
+        pytest.skip("partial-manual shard_map needs jax>=0.5 "
+                    "(experimental auto mode crashes XLA here)")
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PYTHONPATH"] = os.path.abspath(src)

@@ -52,6 +52,7 @@ def _tiny_trainer(ckpt=True, ckpt_every=4):
     return Trainer(api, tcfg, pipe, checkpoint_mgr=cm, ckpt_every=ckpt_every)
 
 
+@pytest.mark.slow
 def test_crash_restart_resumes_from_checkpoint():
     trainer = _tiny_trainer()
     failures = {6: "host3"}  # crash at step 6 (after the step-4 checkpoint)

@@ -64,6 +64,7 @@ def test_prefill_decode_finite(arch):
     assert bool(jnp.all(jnp.isfinite(logits_d.astype(jnp.float32))))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["tinyllama_1p1b", "rwkv6_7b",
                                   "zamba2_1p2b", "gemma3_4b"])
 def test_decode_matches_forward(arch):

@@ -82,6 +82,7 @@ def test_kv_block_versions_respected():
     assert got[:1024] == b"v2" * 512             # freshest version came back
 
 
+@pytest.mark.slow
 def test_paged_decode_matches_dense():
     """lm_decode_step_paged == lm_decode_step over the same prefix."""
     import dataclasses
