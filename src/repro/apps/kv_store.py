@@ -115,7 +115,9 @@ class ShardedKVStore:
             for m in decode_batch(payload):
                 if m and m[0] == KV_GET:
                     _, rid, klen = GET_HDR.unpack_from(m, 0)
-                    key = m[GET_HDR.size : GET_HDR.size + klen]
+                    # decode_batch hands out memoryviews; the cache table
+                    # needs a hashable key, so materialize ONLY the key.
+                    key = bytes(m[GET_HDR.size : GET_HDR.size + klen])
                     if table is not None and table.lookup(key) is not None:
                         dpu.append(m)
                         continue
@@ -126,7 +128,7 @@ class ShardedKVStore:
             if not msg or msg[0] != KV_GET:
                 return None
             _, rid, klen = GET_HDR.unpack_from(msg, 0)
-            key = msg[GET_HDR.size : GET_HDR.size + klen]
+            key = bytes(msg[GET_HDR.size : GET_HDR.size + klen])
             loc: KVLocation | None = table.lookup(key) if table else None
             if loc is None:
                 return None

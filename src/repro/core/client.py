@@ -22,9 +22,9 @@ import threading
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Callable
 
-from repro.core.dds_server import (DDSStorageServer, encode_app_read,
-                                   encode_app_write, encode_batch,
-                                   reassemble_responses)
+from repro.core.dds_server import (DDSStorageServer, drain_client_flow,
+                                   encode_app_read, encode_app_write,
+                                   encode_batch)
 from repro.core.traffic import FLAG_SYN, FiveTuple, Packet
 
 if TYPE_CHECKING:  # import cycle: distributed.cluster imports core
@@ -45,6 +45,7 @@ class ShardConnection:
     def __init__(self, server: DDSStorageServer, ip: str, port: int):
         self.server = server
         self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port)
+        self._resp_flow = self.flow.reversed()
         self._seq = 1  # after SYN
         self._pending: list[bytes] = []
         self._rx = bytearray()
@@ -69,23 +70,12 @@ class ShardConnection:
     def collect(self, responses: dict[int, tuple[int, bytes]]) -> int:
         """Drain OUR flow's packets; reassemble the segmented response stream.
 
-        The director's ``to_client`` wire carries every client's responses;
-        packets for other flows are re-queued untouched so several clients
-        can share one shard (each bounded pop cycle inspects the wire's
-        snapshot length once, so foreign packets are not spun on)."""
-        n = 0
-        mine = self.flow.reversed()
-        for _ in range(len(self.server.director.to_client)):
-            pkt = self.server.director.to_client.pop()
-            if pkt is None:
-                break
-            if pkt.flow != mine:
-                self.server.director.to_client.push(pkt)  # another client's
-                continue
-            self._rx += bytes(pkt.payload)
-            n += 1
-        reassemble_responses(self._rx, responses, self.arrival_order)
-        return n
+        The director's ``to_client`` wire is demuxed per flow, so this is an
+        O(1) swap of our own queue — other clients' traffic is never touched
+        (the old shared wire forced a pop-and-requeue scan past every other
+        client's packets on every drain)."""
+        return drain_client_flow(self.server.director, self._resp_flow,
+                                 self._rx, responses, self.arrival_order)
 
 
 class ClusterClient:
@@ -112,6 +102,7 @@ class ClusterClient:
                       for i, srv in enumerate(cluster.servers)]
         self._next_rid = 1
         self._rid_shard: dict[int, int] = {}
+        self._outstanding = 0          # issued, response not yet collected
         self._lock = threading.Lock()
         self.responses: dict[int, tuple[int, bytes]] = {}
         self.stats = ClientStats()
@@ -121,6 +112,7 @@ class ClusterClient:
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
+            self._outstanding += 1
         self._rid_shard[rid] = shard
         self.stats.requests += 1
         return rid
@@ -131,6 +123,30 @@ class ClusterClient:
         self.conns[loc.shard].enqueue(
             encode_app_read(rid, loc.local_fid, offset, nbytes))
         return rid
+
+    def read_many(self, reads: list[tuple[int, int, int]]) -> list[int]:
+        """Issue a burst of ``(gfid, offset, nbytes)`` reads in one pass.
+
+        The §8.1 driver issues thousands of requests per pipeline round; a
+        per-call lock + dict update per request is pure overhead, so the rid
+        range is reserved once and per-shard bookkeeping is appended in bulk.
+        """
+        locate = self.cluster.locate
+        conns = self.conns
+        rid_shard = self._rid_shard
+        n = len(reads)
+        with self._lock:
+            first = self._next_rid
+            self._next_rid += n
+            self._outstanding += n
+        rids = list(range(first, first + n))
+        for rid, (gfid, offset, nbytes) in zip(rids, reads):
+            loc = locate(gfid)
+            rid_shard[rid] = loc.shard
+            conns[loc.shard].enqueue(
+                encode_app_read(rid, loc.local_fid, offset, nbytes))
+        self.stats.requests += n
+        return rids
 
     def write(self, gfid: int, offset: int, data: bytes) -> int:
         loc = self.cluster.locate(gfid)
@@ -161,16 +177,25 @@ class ClusterClient:
         """One cooperative step: flush -> step every shard -> drain responses."""
         work = self.flush()
         work += self.cluster.pump()
+        return work + self.poll()
+
+    def poll(self) -> int:
+        """Drain THIS client's responses without stepping the cluster.
+
+        With several clients sharing a cluster, one driver pumps the shards
+        once per scheduling round and every client just polls its own
+        demuxed flows — instead of each client re-stepping all N servers."""
         before = len(self.responses)
         for conn in self.conns:
             conn.collect(self.responses)
         got = len(self.responses) - before
         self.stats.responses += got
-        return work + got
+        self._outstanding -= got
+        return got
 
     def outstanding(self) -> int:
-        return len(self._rid_shard) - len(
-            [r for r in self._rid_shard if r in self.responses])
+        """Issued-but-unanswered requests — an O(1) counter, not a dict scan."""
+        return self._outstanding
 
     def run_until_idle(self, max_iters: int = 200_000) -> None:
         idle = 0
@@ -200,7 +225,28 @@ class ClusterClient:
 
     def wait_many(self, rids: list[int],
                   max_iters: int = 200_000) -> dict[int, tuple[int, bytes]]:
-        out: dict[int, tuple[int, bytes]] = {}
-        for rid in rids:
-            out[rid] = self.wait(rid, max_iters)
-        return out
+        """Wait for ALL rids, harvesting whichever completes first.
+
+        Pumps once per iteration while collecting every arrived rid — the
+        old serial per-rid ``wait`` loop head-of-line blocked on the first
+        rid even when later rids (on other shards) had long completed."""
+        got: dict[int, tuple[int, bytes]] = {}
+        pending = set(rids)
+        pending -= self._harvest(pending, got)
+        for _ in range(max_iters):
+            if not pending:
+                return {rid: got[rid] for rid in rids}  # caller's order
+            if self.pump() == 0:
+                for srv in self.cluster.servers:
+                    srv.device.drain()
+            pending -= self._harvest(pending, got)
+        raise TimeoutError(f"no response for requests {sorted(pending)[:8]}...")
+
+    def _harvest(self, pending: set[int],
+                 got: dict[int, tuple[int, bytes]]) -> set[int]:
+        """Move every already-answered rid out of ``self.responses``."""
+        done = pending & self.responses.keys()
+        for rid in done:
+            got[rid] = self.responses.pop(rid)
+            self._rid_shard.pop(rid, None)
+        return done

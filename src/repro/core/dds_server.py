@@ -56,12 +56,24 @@ def encode_batch(msgs: list[bytes]) -> bytes:
     return b"".join(struct.pack("<I", len(m)) + m for m in msgs)
 
 
-def decode_batch(payload: bytes) -> list[bytes]:
-    out, off = [], 0
-    while off < len(payload):
-        (n,) = struct.unpack_from("<I", payload, off)
+_BATCH_LEN = struct.Struct("<I")
+
+
+def decode_batch(payload) -> list[memoryview]:
+    """Split a batched network message into per-message ZERO-COPY views.
+
+    Messages are ``memoryview`` slices of the packet buffer — header fields
+    unpack in place (``Struct.unpack_from`` accepts views) and payload bytes
+    are never duplicated on the decode path.  Callers that need a hashable
+    key (cache-table lookups) convert just that field with ``bytes(...)``.
+    """
+    mv = payload if isinstance(payload, memoryview) else memoryview(payload)
+    out, off, end = [], 0, len(mv)
+    unpack = _BATCH_LEN.unpack_from
+    while off < end:
+        (n,) = unpack(mv, off)
         off += 4
-        out.append(payload[off : off + n])
+        out.append(mv[off : off + n])
         off += n
     return out
 
@@ -71,22 +83,57 @@ def reassemble_responses(rx: bytearray, responses: dict,
     """Peel complete APP_RESP_HDR-framed responses off a client rx buffer.
 
     Shared by every client (single-server and cluster shard connections) so
-    the framing logic lives in exactly one place.  Consumed bytes are
-    deleted from ``rx``; a trailing partial response is left for the next
+    the framing logic lives in exactly one place.  The buffer is parsed with
+    a running offset and consumed bytes are trimmed ONCE at the end (the old
+    per-response ``del rx[:total]`` made a buffer of n small responses cost
+    O(n^2) byte moves); a trailing partial response is left for the next
     call.  Returns the number of responses extracted."""
     n = 0
-    while len(rx) >= APP_RESP_HDR.size:
-        req_id, status, nbytes = APP_RESP_HDR.unpack_from(rx, 0)
-        total = APP_RESP_HDR.size + nbytes
-        if len(rx) < total:
+    off, end = 0, len(rx)
+    hdr_size = APP_RESP_HDR.size
+    unpack = APP_RESP_HDR.unpack_from
+    mv = memoryview(rx)
+    while end - off >= hdr_size:
+        req_id, status, nbytes = unpack(mv, off)
+        total = hdr_size + nbytes
+        if end - off < total:
             break
-        body = bytes(rx[APP_RESP_HDR.size : total])
-        del rx[:total]
-        responses[req_id] = (status, body)
+        responses[req_id] = (status, bytes(mv[off + hdr_size : off + total]))
         if order is not None:
             order.append(req_id)
+        off += total
         n += 1
+    # A bytearray with an exported view cannot be resized: release first.
+    mv.release()
+    if off:
+        del rx[:off]
     return n
+
+
+def drain_client_flow(director, resp_flow, rx: bytearray, responses: dict,
+                      order: list | None = None) -> int:
+    """THE response-drain implementation every client shares.
+
+    Takes this flow's (possibly segmented) packets off the director's
+    demuxed ``to_client`` wire in one O(1) swap — no scanning past other
+    clients' traffic — appends their payloads to the connection rx buffer,
+    and reassembles completed responses.  Returns packets drained."""
+    pkts = director.to_client.drain_flow(resp_flow)
+    if not pkts:
+        return 0
+    release: list[int] = []
+    pool = None
+    for pkt in pkts:
+        rx += pkt.payload
+        ref = pkt.pool_ref
+        if ref is not None:   # TX-completion: reclaim the pool block
+            pkt.pool_ref = None
+            pool = ref[0]
+            release.append(ref[1])
+    if release:
+        pool.release_many(release)  # one lock round for the whole drain
+    reassemble_responses(rx, responses, order)
+    return len(pkts)
 
 
 def default_off_pred(payload: bytes, table) -> tuple[list[bytes], list[bytes]]:
@@ -116,6 +163,15 @@ def app_response_header(msg: bytes, op: ReadOp, err: int) -> bytes:
     return APP_RESP_HDR.pack(req_id, err, op.size if err == wire.E_OK else 0)
 
 
+def default_prepare_read(msg, table) -> tuple[ReadOp, bytes] | None:
+    """Fused OffFunc + ok-response-header: ONE header parse per request."""
+    typ, req_id, file_id, offset, nbytes = APP_HDR.unpack_from(msg, 0)
+    if typ != APP_READ:
+        return None
+    return (ReadOp(file_id, offset, nbytes),
+            APP_RESP_HDR.pack(req_id, wire.E_OK, nbytes))
+
+
 @dataclass
 class ServerConfig:
     device_capacity: int = 1 << 28          # 256 MiB RAM "SSD"
@@ -141,7 +197,8 @@ class DDSStorageServer:
         self.fs = SegmentFS(self.device, cfg.segment_size)
         self.dma = DMAEngine()
         self.cache_table = CacheTable(cfg.cache_items)
-        self.api = api or OffloadAPI(default_off_pred, default_off_func)
+        self.api = api or OffloadAPI(default_off_pred, default_off_func,
+                                     prepare_read=default_prepare_read)
         # Traffic director: signature matches any client talking to our port.
         sig = (ApplicationSignature(dst_port=cfg.server_port)
                if cfg.offload_enabled else
@@ -176,18 +233,22 @@ class DDSStorageServer:
 
     # -- cooperative event loop ---------------------------------------------------------
     def pump(self) -> int:
-        work = 0
-        for _ in range(64):
-            if not self.director.step():
-                break
-            work += 1
-        work += self.offload.step()
-        work += self.host_app.step()
-        work += self.file_service.step()
-        self.device.poll()
-        work += self.offload.complete_pending()
-        work += self.host_app.poll_completions()
-        return work
+        work = self.director.step_n(64)   # whole ingress burst, one lock round
+        work += self.offload.step()       # polls device + completes internally
+        host_work = self.host_app.step()
+        # The host path (file service rings + completion polling) only runs
+        # when it can have work; the offloaded fast path never pays for it.
+        if host_work or self._host_path_busy():
+            work += self.file_service.step()
+            self.device.poll()
+            work += self.offload.complete_pending()
+            work += self.host_app.poll_completions()
+        return work + host_work
+
+    def _host_path_busy(self) -> bool:
+        return (self.host_app.busy()
+                or self.frontend.any_outstanding()
+                or self.file_service.busy())
 
     def run_until_idle(self, max_iters: int = 200_000) -> None:
         idle = 0
@@ -221,6 +282,10 @@ class _HostApp:
         self._inflight: dict[int, tuple] = {}  # rid -> (host_flow, app req)
         self._files_ready = False
 
+    def busy(self) -> bool:
+        """True while host requests are in flight (pump must keep stepping)."""
+        return bool(self._inflight)
+
     def step(self) -> int:
         return self.server.director.drain_host_wire(self._deliver)
 
@@ -230,7 +295,10 @@ class _HostApp:
         if host_flow.src_ip == "dpu-proxy":
             msgs = [payload]          # PEP split connection: one app message
         else:
-            msgs = decode_batch(payload)  # hw-forwarded original batch
+            # hw-forwarded original batch; the HOST app owns its messages
+            # (it indexes/hashes them), so materialize real bytes here —
+            # host-path copies are exactly what offloading avoids.
+            msgs = [bytes(m) for m in decode_batch(payload)]
         for m in msgs:
             self._execute(host_flow, m)
 
@@ -297,6 +365,7 @@ class DDSClient:
                  port: int = 31337):
         self.server = server
         self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port)
+        self._resp_flow = self.flow.reversed()
         self._seq = 1  # after SYN
         self._next_req = 1
         self._lock = threading.Lock()
@@ -340,16 +409,10 @@ class DDSClient:
 
     # -- response collection ---------------------------------------------------------
     def collect(self) -> int:
-        """Drain the client wire, reassembling (possibly segmented) responses."""
-        n = 0
-        while True:
-            pkt = self.server.director.to_client.pop()
-            if pkt is None:
-                break
-            self._rx_buf += bytes(pkt.payload)
-            n += 1
-        reassemble_responses(self._rx_buf, self.responses)
-        return n
+        """Drain OUR flow's responses off the demuxed client wire (shared
+        implementation with the cluster's shard connections)."""
+        return drain_client_flow(self.server.director, self._resp_flow,
+                                 self._rx_buf, self.responses)
 
     def wait(self, rid: int, max_iters: int = 200_000) -> tuple[int, bytes]:
         for _ in range(max_iters):

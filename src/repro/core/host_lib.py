@@ -117,8 +117,7 @@ class NotificationGroup:
 
     @property
     def outstanding(self) -> int:
-        with self._lock:
-            return len(self._ops)
+        return len(self._ops)  # atomic len read; no lock on the poll path
 
 
 class DDSFrontEnd:
@@ -159,6 +158,13 @@ class DDSFrontEnd:
 
     def poll_wait(self, poll: int, timeout_s: float = 0.0) -> list[Completion]:
         return self._groups[poll].poll_wait(timeout_s)
+
+    def any_outstanding(self) -> bool:
+        """True while any notification group has un-polled operations."""
+        for g in self._groups.values():
+            if g.outstanding:
+                return True
+        return False
 
     # -- control plane ----------------------------------------------------------------
     def _sync_call(self, req: wire.Request) -> Completion:

@@ -41,14 +41,14 @@ MTU = 1500
 PKT_HEADROOM = 64  # L2-L4 placeholder space per packet buffer
 
 
-@dataclass
+@dataclass(slots=True)
 class ReadOp:
     file_id: int
     offset: int
     size: int
 
 
-@dataclass
+@dataclass(slots=True)
 class WriteOp:
     file_id: int
     offset: int
@@ -78,55 +78,152 @@ class OffloadAPI:
     invalidate: Callable[[ReadOp], list[object]] | None = None
     response_header: Callable[[bytes, "ReadOp", int], bytes] | None = None
     host_handler: Callable[[bytes], tuple] | None = None
+    # Optional fused fast path: one call returning (ReadOp, ok_header) — or
+    # None to fall back to the host — so the engine parses each request
+    # header once instead of twice (OffFunc + response_header both unpack).
+    prepare_read: Callable[[bytes, CacheTable | None],
+                           tuple["ReadOp", bytes] | None] | None = None
 
 
-class MemPool:
-    """Pool of DMA-accessible huge pages with a first-fit free list.
+SLAB_MIN_SHIFT = 6  # smallest size class: 64 B (one cache line)
+
+
+class SlabPool:
+    """Pool of DMA-accessible huge pages with a size-classed slab allocator.
 
     ``allocate`` returns ``(offset, memoryview)`` carved out of one large
     pinned region; the view is handed to the storage driver as the I/O
     destination and later referenced (not copied) by packet buffers.
+
+    Requests are rounded up to power-of-two size classes (64 B minimum).
+    Each class keeps a LIFO stack of freed offsets, so allocate and release
+    are O(1): pop the class stack, else bump-allocate fresh space, else —
+    only when both fail — fall back over the (constantly many, <= log2 size)
+    larger classes.  A live-allocation map records each block's actual class,
+    so a block borrowed from a larger class is returned to it intact and an
+    allocate/release sequence can never corrupt a neighboring allocation.
+    Replaces the old first-fit free list whose release path re-sorted and
+    coalesced the whole list on EVERY call.
     """
 
     def __init__(self, size: int = 1 << 24):
         self.size = size
         self.buf = np.zeros(size, dtype=np.uint8)
-        self._free: list[tuple[int, int]] = [(0, size)]  # (off, len)
+        self._mv = memoryview(self.buf)
+        self._nclasses = max((size - 1).bit_length() - SLAB_MIN_SHIFT + 1, 1)
+        self._free: list[list[int]] = [[] for _ in range(self._nclasses)]
+        self._live: dict[int, tuple[int, int]] = {}  # off -> (class, req n)
+        self._bump = 0          # end of the slab-committed prefix
         self._lock = threading.Lock()
         self.allocs = 0
         self.failed = 0
+        self._live_committed = 0  # class-rounded bytes of live blocks
+        self._live_requested = 0  # caller-requested bytes of live blocks
+
+    @staticmethod
+    def class_for(n: int) -> int:
+        """Index of the smallest size class holding ``n`` bytes."""
+        return max((n - 1).bit_length() - SLAB_MIN_SHIFT, 0)
+
+    @staticmethod
+    def class_size(cls: int) -> int:
+        return 1 << (SLAB_MIN_SHIFT + cls)
 
     def allocate(self, n: int) -> tuple[int, memoryview] | None:
-        n = (n + 63) & ~63  # cache-line align
-        with self._lock:
-            for i, (off, ln) in enumerate(self._free):
-                if ln >= n:
-                    if ln == n:
-                        self._free.pop(i)
-                    else:
-                        self._free[i] = (off + n, ln - n)
-                    self.allocs += 1
-                    return off, memoryview(self.buf)[off : off + n]
-            self.failed += 1
+        if n <= 0 or n > self.size:
+            with self._lock:
+                self.failed += 1
             return None
+        cls = (n - 1).bit_length() - SLAB_MIN_SHIFT  # class_for(n), inlined
+        if cls < 0:
+            cls = 0
+        cs = 1 << (SLAB_MIN_SHIFT + cls)
+        with self._lock:
+            free = self._free[cls]
+            if free:
+                off = free.pop()
+            elif self._bump + cs <= self.size:
+                off = self._bump
+                self._bump += cs
+            else:
+                # Exhausted: borrow from a larger class (bounded scan over
+                # at most log2(size) classes; blocks are NOT split, the map
+                # below returns them to their true class on release).
+                for c2 in range(cls + 1, self._nclasses):
+                    if self._free[c2]:
+                        off = self._free[c2].pop()
+                        cls = c2
+                        cs = 1 << (SLAB_MIN_SHIFT + c2)
+                        break
+                else:
+                    if not self._live and cs <= self.size:
+                        # Pool is COMPLETELY free but carved into smaller
+                        # classes: reset the slab map (O(#classes)) so any
+                        # class is satisfiable again.  Blocks are never
+                        # split, so without this a small-read phase would
+                        # permanently starve later large reads.
+                        for fl in self._free:
+                            fl.clear()
+                        self._bump = 0
+                        off = 0
+                        self._bump = cs
+                    else:
+                        self.failed += 1
+                        return None
+            self._live[off] = (cls, n)
+            self._live_committed += cs
+            self._live_requested += n
+            self.allocs += 1
+            return off, self._mv[off : off + n]
 
     def release(self, off: int, n: int) -> None:
-        n = (n + 63) & ~63
         with self._lock:
-            self._free.append((off, n))
-            # Coalesce adjacent ranges (keep the list small).
-            self._free.sort()
-            merged: list[tuple[int, int]] = []
-            for o, l in self._free:
-                if merged and merged[-1][0] + merged[-1][1] == o:
-                    merged[-1] = (merged[-1][0], merged[-1][1] + l)
-                else:
-                    merged.append((o, l))
-            self._free = merged
+            self._release_locked(off)
+
+    def release_many(self, offs: list[int]) -> None:
+        """Return a burst of blocks under ONE lock round (TX-batch reclaim)."""
+        with self._lock:
+            for off in offs:
+                self._release_locked(off)
+
+    def _release_locked(self, off: int) -> None:
+        entry = self._live.pop(off, None)
+        if entry is None:
+            raise ValueError(f"release of unallocated offset {off}")
+        cls, req = entry
+        self._free[cls].append(off)
+        self._live_committed -= 1 << (SLAB_MIN_SHIFT + cls)
+        self._live_requested -= req
 
     def in_use(self) -> int:
         with self._lock:
-            return self.size - sum(l for _, l in self._free)
+            return self._live_committed
+
+    def occupancy(self) -> dict:
+        """Fragmentation + per-class occupancy snapshot (observability)."""
+        with self._lock:
+            classes = {
+                self.class_size(c): {"live": 0, "free": len(self._free[c])}
+                for c in range(self._nclasses)
+                if self._free[c]
+            }
+            for cls, _req in self._live.values():
+                ent = classes.setdefault(self.class_size(cls),
+                                         {"live": 0, "free": 0})
+                ent["live"] += 1
+            return {
+                "classes": classes,
+                "live_bytes": self._live_requested,
+                "committed_bytes": self._live_committed,
+                "internal_frag_bytes": (self._live_committed
+                                        - self._live_requested),
+                "bump_remaining": self.size - self._bump,
+            }
+
+
+# Backwards-compatible alias: the pool kept its public contract
+# (``allocate -> (off, memoryview) | None``, ``release``, ``in_use``).
+MemPool = SlabPool
 
 
 PENDING = 0
@@ -134,17 +231,22 @@ COMPLETE = 1
 FAILED = 2
 
 
-@dataclass
+@dataclass(slots=True)
 class _Context:
     """One slot of the context ring (§6.2)."""
     client: FiveTuple | None = None
     read_op: ReadOp | None = None
+    raw: bytes = b""         # the request message (error responses need it)
     status: int = COMPLETE   # empty slots look complete & consumed
     pool_off: int = 0
     pool_len: int = 0
     buf: memoryview | None = None
     app_hdr: bytes = b""
     consumed: bool = True
+
+    def mark(self, err: int) -> None:
+        """Device-completion callback (bound method: no per-op closure)."""
+        self.status = COMPLETE if err == wire.E_OK else FAILED
 
 
 @dataclass
@@ -172,7 +274,7 @@ class OffloadEngine:
         self.api = api
         self.cache_table = cache_table
         self.ring_size = ring_size
-        self.pool = MemPool(pool_size)
+        self.pool = SlabPool(pool_size)
         self.zero_copy = zero_copy
         self.app_header = app_header or (lambda req, op, err: b"")
         self.mtu = mtu
@@ -183,43 +285,78 @@ class OffloadEngine:
 
     # -- Fig 13 main loop --------------------------------------------------------------
     def step(self, max_requests: int = 64) -> int:
-        """Pull requests from the traffic director and execute them."""
+        """Pull requests from the traffic director and execute them.
+
+        ``complete_pending`` runs once per batch (and again when the context
+        ring fills up, to reclaim consumed slots before bouncing), not once
+        per request — completions only materialize when the device polls.
+        """
         work = 0
-        reqs: list[tuple[FiveTuple, bytes]] = []
-        while self.director.offload_queue and len(reqs) < max_requests:
-            reqs.append(self.director.offload_queue.popleft())
-        i = 0
-        while i < len(reqs):
-            self.complete_pending()
-            client, raw = reqs[i]
-            if self._tail - self._head >= self.ring_size:
-                # Ring fully occupied: send this and the REST to the host.
-                for c2, r2 in reqs[i:]:
-                    self._bounce_to_host(c2, r2)
-                break
-            read_op = self.api.off_func(raw, self.cache_table)
-            if read_op is None:
-                self._bounce_to_host(client, raw)
-                i += 1
-                continue
-            alloc = self.pool.allocate(PKT_HEADROOM + read_op.size)
+        queue = self.director.offload_queue
+        if not queue:
+            if self._head == self._tail:
+                return 0  # nothing offloaded, nothing in flight
+            self.fs.device.poll()
+            return self.complete_pending()
+        if len(queue) <= max_requests:
+            reqs = list(queue)      # C-speed bulk grab of the whole burst
+            queue.clear()
+        else:
+            reqs = [queue.popleft() for _ in range(max_requests)]
+        # Hot loop: hoist per-request attribute lookups out of the loop and
+        # fold per-request stats into ONE update after the batch.
+        off_func = self.api.off_func
+        prepare = self.api.prepare_read
+        table = self.cache_table
+        allocate = self.pool.allocate
+        app_header = self.app_header
+        submit_read = self.fs.submit_read
+        ring, ring_size = self._ring, self.ring_size
+        zero_copy = self.zero_copy
+        tail = self._tail
+        for i, (client, raw) in enumerate(reqs):
+            if tail - self._head >= ring_size:
+                self._tail = tail
+                self.fs.device.poll()
+                self.complete_pending()  # reclaim consumed contexts first
+                if tail - self._head >= ring_size:
+                    # Ring fully occupied: send this and the REST to the host.
+                    for c2, r2 in reqs[i:]:
+                        self._bounce_to_host(c2, r2)
+                    break
+            if prepare is not None:
+                # fused path: ONE header parse yields the op and its header
+                prepped = prepare(raw, table)
+                if prepped is None:
+                    self._bounce_to_host(client, raw)
+                    continue
+                read_op, ok_hdr = prepped
+            else:
+                read_op = off_func(raw, table)
+                if read_op is None:
+                    self._bounce_to_host(client, raw)
+                    continue
+                ok_hdr = None
+            alloc = allocate(PKT_HEADROOM + read_op.size)
             if alloc is None:
                 self._bounce_to_host(client, raw)
-                i += 1
                 continue
             off, view = alloc
-            ctx = self._ring[self._tail % self.ring_size]
+            ctx = ring[tail % ring_size]
             ctx.client = client
             ctx.read_op = read_op
+            ctx.raw = raw
             ctx.status = PENDING
             ctx.pool_off, ctx.pool_len = off, PKT_HEADROOM + read_op.size
             ctx.buf = view
-            ctx.app_hdr = self.app_header(raw, read_op, wire.E_OK)
+            ctx.app_hdr = (ok_hdr if ok_hdr is not None
+                           else app_header(raw, read_op, wire.E_OK))
             ctx.consumed = False
-            self._tail += 1
+            tail += 1
+            self._tail = tail
             # Destination = pool memory; the device writes it exactly once.
             dest = view[PKT_HEADROOM : PKT_HEADROOM + read_op.size]
-            if not self.zero_copy:
+            if not zero_copy:
                 scratch = bytearray(read_op.size)
 
                 def done(err: int, ctx=ctx, scratch=scratch):
@@ -231,19 +368,13 @@ class OffloadEngine:
                 self.fs.submit_read(read_op.file_id, read_op.offset,
                                     read_op.size, memoryview(scratch), done)
             else:
-                self.fs.submit_read(
-                    read_op.file_id, read_op.offset, read_op.size, dest,
-                    lambda err, ctx=ctx: self._mark(ctx, err))
-            self.stats.offloaded += 1
+                submit_read(read_op.file_id, read_op.offset, read_op.size,
+                            dest, ctx.mark)
             work += 1
-            i += 1
+        self._tail = tail
+        self.stats.offloaded += work
         self.fs.device.poll()
-        self.complete_pending()
-        return work
-
-    @staticmethod
-    def _mark(ctx: _Context, err: int) -> None:
-        ctx.status = COMPLETE if err == wire.E_OK else FAILED
+        return work + self.complete_pending()
 
     def _bounce_to_host(self, client: FiveTuple, raw: bytes) -> None:
         conn = self.director._conn(client)
@@ -252,24 +383,61 @@ class OffloadEngine:
 
     # -- ordered completion (Fig 13 CompletePending) --------------------------------
     def complete_pending(self) -> int:
+        """Consume the completed prefix; responses leave in request order.
+
+        Back-to-back completions for the SAME client are coalesced into one
+        ``dpu_response`` burst (one sequence-stamp pass + one wire lock
+        round per run of contexts instead of per response).
+        """
         done = 0
-        while self._head != self._tail:
-            ctx = self._ring[self._head % self.ring_size]
+        head, tail = self._head, self._tail
+        if head == tail:
+            return 0
+        ring, ring_size = self._ring, self.ring_size
+        stats = self.stats
+        pool = self.pool
+        completed = failed = bytes_served = 0
+        burst_client = None
+        burst: list[Packet] = []
+        burst_n = 0
+        dpu_response = self.director.dpu_response
+        while head != tail:
+            ctx = ring[head % ring_size]
             if ctx.status == PENDING:
                 break  # preserve response order
             if not ctx.consumed:
                 pkts = self._create_pkts(ctx)
-                self.director.dpu_response(ctx.client, pkts)
-                self.pool.release(ctx.pool_off, ctx.pool_len)
                 if ctx.status == COMPLETE:
-                    self.stats.completed += 1
-                    self.stats.bytes_served += ctx.read_op.size
+                    # Indirect packets reference pool memory: ownership rides
+                    # on the last packet and is released at TX-consumption
+                    # (Fig 12) — releasing here would let a later read
+                    # overwrite a response the client has not drained yet.
+                    pkts[-1].pool_ref = (pool, ctx.pool_off, ctx.pool_len)
+                    completed += 1
+                    bytes_served += ctx.read_op.size
                 else:
-                    self.stats.failed += 1
+                    # Error responses carry only header bytes — the pool
+                    # block is unreferenced and can be reclaimed now.
+                    pool.release(ctx.pool_off, ctx.pool_len)
+                    failed += 1
+                if ctx.client is burst_client:
+                    burst.extend(pkts)
+                    burst_n += 1
+                else:
+                    if burst:
+                        dpu_response(burst_client, burst, burst_n)
+                    burst_client, burst, burst_n = ctx.client, pkts, 1
                 ctx.consumed = True
                 ctx.buf = None
-            self._head += 1
+                ctx.raw = b""
+            head += 1
             done += 1
+        self._head = head
+        if burst:
+            dpu_response(burst_client, burst, burst_n)
+        stats.completed += completed
+        stats.failed += failed
+        stats.bytes_served += bytes_served
         return done
 
     def _create_pkts(self, ctx: _Context) -> list[Packet]:
@@ -280,18 +448,25 @@ class OffloadEngine:
         """
         hdr = ctx.app_hdr
         if ctx.status != COMPLETE:
-            hdr = self.app_header(b"", ctx.read_op, wire.E_IO)
+            # Frame the error from the ORIGINAL request so it carries the
+            # real request id — a b"" fallback would answer req_id 0 and the
+            # caller's wait() would never resolve.
+            hdr = self.app_header(ctx.raw, ctx.read_op, wire.E_IO)
             pkt = Packet(ctx.client, 0, hdr)
             self.stats.packets += 1
             return [pkt]
         total = ctx.read_op.size
-        data = ctx.buf[PKT_HEADROOM : PKT_HEADROOM + total]
-        pkts: list[Packet] = []
         # First packet carries the app header; place it in the buffer headroom
         # immediately before the data so header+data are one contiguous slice.
         h = len(hdr)
         assert h <= PKT_HEADROOM
         ctx.buf[PKT_HEADROOM - h : PKT_HEADROOM] = hdr
+        if h + total <= self.mtu:  # common case: one indirect packet
+            self.stats.packets += 1
+            return [Packet(ctx.client, 0,
+                           ctx.buf[PKT_HEADROOM - h : PKT_HEADROOM + total])]
+        data = ctx.buf[PKT_HEADROOM : PKT_HEADROOM + total]
+        pkts: list[Packet] = []
         first_len = min(self.mtu, h + total)
         pkts.append(Packet(ctx.client, 0,
                            ctx.buf[PKT_HEADROOM - h : PKT_HEADROOM - h + first_len]))

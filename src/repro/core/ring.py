@@ -473,14 +473,23 @@ def frame(msg: bytes) -> bytes:
     return FRAME_HDR.pack(len(msg)) + msg
 
 
-def unframe_batch(batch: bytes) -> list[bytes]:
-    """Split a consumed batch back into individual framed messages."""
+def unframe_batch(batch) -> list[memoryview]:
+    """Split a consumed batch back into individual framed messages.
+
+    Zero-copy: returns ``memoryview`` slices over the batch buffer (a
+    consumer's whole ``[head, tail)`` DMA read is split without duplicating
+    any message bytes).  Views compare equal to ``bytes`` and unpack in
+    place; callers that store or hash a message materialize it themselves.
+    """
+    mv = batch if isinstance(batch, memoryview) else memoryview(batch)
     out = []
     off = 0
-    n = len(batch)
+    n = len(mv)
+    unpack = FRAME_HDR.unpack_from
+    hdr = FRAME_HDR.size
     while off < n:
-        (sz,) = FRAME_HDR.unpack_from(batch, off)
-        off += FRAME_HDR.size
-        out.append(batch[off : off + sz])
+        (sz,) = unpack(mv, off)
+        off += hdr
+        out.append(mv[off : off + sz])
         off += sz
     return out

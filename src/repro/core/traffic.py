@@ -57,22 +57,44 @@ class FiveTuple:
     dst_port: int
     proto: str = "tcp"
 
+    def __post_init__(self):
+        # Flows key every hot-path dict (connections, demux queues); caching
+        # the hash beats re-tupling five fields on each lookup.
+        object.__setattr__(self, "_hash", hash(
+            (self.src_ip, self.src_port, self.dst_ip, self.dst_port,
+             self.proto)))
+
+    def __hash__(self) -> int:
+        return self._hash
+
     def reversed(self) -> "FiveTuple":
         return FiveTuple(self.dst_ip, self.dst_port, self.src_ip,
                          self.src_port, self.proto)
 
 
-@dataclass
+@dataclass(slots=True)
 class Packet:
     flow: FiveTuple
     seq: int                 # first byte's sequence number
     payload: bytes | memoryview
     flags: int = 0
     ack: int = 0
+    # Indirect-packet buffer ownership (Fig 12): ``(pool, off, len)`` set on
+    # the LAST packet referencing a pool allocation.  The wire consumer
+    # releases it AFTER copying the payload out — like a NIC TX-completion —
+    # so pool memory is never rewritten under an in-flight packet.
+    pool_ref: tuple | None = None
 
     @property
     def nbytes(self) -> int:
         return len(self.payload)
+
+    def consumed(self) -> None:
+        """Release the backing pool block (no-op for direct packets)."""
+        ref = self.pool_ref
+        if ref is not None:
+            self.pool_ref = None
+            ref[0].release(ref[1], ref[2])
 
 
 @dataclass
@@ -108,9 +130,94 @@ class Wire:
         with self._lock:
             return self._q.popleft() if self._q else None
 
+    def pop_many(self, n: int) -> list[Packet]:
+        """Pop up to ``n`` packets under ONE lock round (burst processing)."""
+        if not self._q:   # racy-but-safe emptiness peek: skip the lock
+            return []
+        with self._lock:
+            q = self._q
+            if not q:
+                return []
+            k = min(n, len(q))
+            return [q.popleft() for _ in range(k)]
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._q)
+
+
+class FlowDemuxWire:
+    """A wire demultiplexed by destination flow: per-flow FIFO queues.
+
+    The director's response wire carries every client's packets; a single
+    shared queue forces each client to pop-and-requeue everyone else's
+    traffic (O(clients x packets) per drain).  Demuxing gives each client an
+    O(1) ``pop_flow``/``drain_flow`` on its own queue while per-flow FIFO
+    order — the only order TCP guarantees — is preserved.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._q: dict[FiveTuple, deque[Packet]] = {}
+        self._lock = threading.Lock()
+        self._len = 0
+
+    def push(self, pkt: Packet) -> None:
+        with self._lock:
+            dq = self._q.get(pkt.flow)
+            if dq is None:
+                dq = self._q[pkt.flow] = deque()
+            dq.append(pkt)
+            self._len += 1
+
+    def push_many(self, flow: FiveTuple, pkts: list[Packet]) -> None:
+        """Append a burst for one flow under a single lock round."""
+        with self._lock:
+            dq = self._q.get(flow)
+            if dq is None:
+                dq = self._q[flow] = deque()
+            dq.extend(pkts)
+            self._len += len(pkts)
+
+    def pop_flow(self, flow: FiveTuple) -> Packet | None:
+        if not self._q.get(flow):   # racy-but-safe emptiness peek
+            return None
+        with self._lock:
+            dq = self._q.get(flow)
+            if not dq:
+                return None
+            self._len -= 1
+            return dq.popleft()
+
+    def drain_flow(self, flow: FiveTuple) -> list[Packet]:
+        """Take EVERY queued packet for ``flow`` in one O(1) swap."""
+        if not self._q.get(flow):   # racy-but-safe emptiness peek
+            return []
+        with self._lock:
+            dq = self._q.get(flow)
+            if not dq:
+                return []
+            out = list(dq)
+            dq.clear()
+            self._len -= len(out)
+            return out
+
+    def pop(self) -> Packet | None:
+        """Pop from any non-empty flow (per-flow FIFO; cross-flow unordered)."""
+        with self._lock:
+            for dq in self._q.values():
+                if dq:
+                    self._len -= 1
+                    return dq.popleft()
+            return None
+
+    def flows(self) -> list[FiveTuple]:
+        with self._lock:
+            return [f for f, dq in self._q.items() if dq]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return self._len
 
 
 class TCPReceiver:
@@ -159,6 +266,7 @@ class _PEPConnection:
     client_resp_seq: int = 0     # next byte we send toward the client
     host_next_seq: int = 0       # next byte on the DPU->host connection
     core: int = 0
+    resp_flow: FiveTuple | None = None  # cached reversed flow (response dst)
 
 
 @dataclass
@@ -192,10 +300,11 @@ class TrafficDirector:
         self.ingress = Wire("nic-ingress")
         self.to_host = Wire("dpu->host")
         self.from_host = Wire("host->dpu")
-        self.to_client = Wire("dpu->client")
+        self.to_client = FlowDemuxWire("dpu->client")
         self.offload_queue: deque[tuple[FiveTuple, bytes]] = deque()
         self._conns: dict[FiveTuple, _PEPConnection] = {}
         self._host_flow_of: dict[FiveTuple, FiveTuple] = {}
+        self._client_flow_of: dict[FiveTuple, FiveTuple] = {}  # reverse map
         self.stats = DirectorStats()
         self._lock = threading.Lock()
 
@@ -203,46 +312,71 @@ class TrafficDirector:
     def _conn(self, ft: FiveTuple) -> _PEPConnection:
         c = self._conns.get(ft)
         if c is None:
-            c = _PEPConnection(ft, core=rss_core(ft, self.ncores))
+            c = _PEPConnection(ft, core=rss_core(ft, self.ncores),
+                               resp_flow=ft.reversed())
             self._conns[ft] = c
             # Second connection of the split: DPU -> host, own seq space.
             host_flow = FiveTuple("dpu-proxy", 40000 + len(self._conns),
                                   "host", self.host_port, ft.proto)
             self._host_flow_of[ft] = host_flow
+            self._client_flow_of[host_flow] = ft
         return c
 
-    # -- ingress processing (one step = one packet) -----------------------------------
+    # -- ingress processing ---------------------------------------------------------
     def step(self) -> bool:
-        pkt = self.ingress.pop()
-        if pkt is None:
-            return False
-        # Stage 1: application signature, evaluated in NIC hardware (§5.3).
-        if not self.signature.matches(pkt.flow):
-            self.stats.hw_forwarded += 1
-            self.to_host.push(pkt)   # line-rate forward; no Arm-core latency
-            return True
-        conn = self._conn(pkt.flow)
-        self.stats.inspected += 1
-        self.stats.per_core_pkts[conn.core] = (
-            self.stats.per_core_pkts.get(conn.core, 0) + 1)
-        self.stats.modeled_time_s += self.per_pkt_cost
-        if pkt.flags & FLAG_SYN:
-            conn.client_next_seq = pkt.seq + 1
-            return True
-        if pkt.seq != conn.client_next_seq:
-            return True  # PEP handles client-side reliability; drop dup/ooo
-        conn.client_next_seq += pkt.nbytes
-        # Stage 2: the offload predicate inspects the payload.
-        host_msgs, dpu_msgs = self.off_pred(bytes(pkt.payload), self.cache_table)
-        for m in host_msgs:
-            self._send_to_host(conn, pkt.flow, m)
-        for m in dpu_msgs:
-            self.stats.to_dpu += 1
-            self.offload_queue.append((pkt.flow, m))
-        if host_msgs and not dpu_msgs:
-            # matched the signature but fully host-bound: paid the round trip
-            self.stats.modeled_time_s += PREDICATE_FAIL_RTT_S - self.per_pkt_cost
-        return True
+        """Process ONE ingress packet (kept for single-step tests)."""
+        return self.step_n(1) > 0
+
+    def step_n(self, budget: int = 64) -> int:
+        """Process an ingress burst under one lock round (§6.1 batching).
+
+        Per-packet accounting (inspected/hw-forwarded counts, modeled Arm
+        time) is accumulated locally and folded into ``stats`` once per
+        burst, so the bookkeeping cost is amortized across the batch.
+        Returns the number of packets processed.
+        """
+        pkts = self.ingress.pop_many(budget)
+        if not pkts:
+            return 0
+        st = self.stats
+        off_q = self.offload_queue
+        inspected = hw_forwarded = to_dpu = 0
+        modeled = 0.0
+        for pkt in pkts:
+            # Stage 1: application signature, evaluated in NIC hardware (§5.3).
+            if not self.signature.matches(pkt.flow):
+                hw_forwarded += 1
+                self.to_host.push(pkt)  # line-rate forward; no Arm latency
+                continue
+            conn = self._conn(pkt.flow)
+            inspected += 1
+            st.per_core_pkts[conn.core] = (
+                st.per_core_pkts.get(conn.core, 0) + 1)
+            modeled += self.per_pkt_cost
+            if pkt.flags & FLAG_SYN:
+                conn.client_next_seq = pkt.seq + 1
+                continue
+            if pkt.seq != conn.client_next_seq:
+                continue  # PEP handles client-side reliability; drop dup/ooo
+            conn.client_next_seq += pkt.nbytes
+            # Stage 2: the offload predicate inspects the payload (zero-copy:
+            # the predicate sees the packet buffer itself, never a copy).
+            host_msgs, dpu_msgs = self.off_pred(pkt.payload, self.cache_table)
+            for m in host_msgs:
+                self._send_to_host(conn, pkt.flow, m)
+            if dpu_msgs:
+                to_dpu += len(dpu_msgs)
+                flow = pkt.flow
+                for m in dpu_msgs:
+                    off_q.append((flow, m))
+            elif host_msgs:
+                # matched the signature but fully host-bound: paid the round trip
+                modeled += PREDICATE_FAIL_RTT_S - self.per_pkt_cost
+        st.hw_forwarded += hw_forwarded
+        st.inspected += inspected
+        st.to_dpu += to_dpu
+        st.modeled_time_s += modeled
+        return len(pkts)
 
     def _send_to_host(self, conn: _PEPConnection, client_flow: FiveTuple,
                       msg: bytes) -> None:
@@ -259,40 +393,50 @@ class TrafficDirector:
 
     # -- response paths -----------------------------------------------------------------
     def host_response(self, host_flow: FiveTuple, msg: bytes) -> None:
-        """A response from the host app on the second connection."""
-        client_flow = next((cf for cf, hf in self._host_flow_of.items()
-                            if hf == host_flow), None)
-        if client_flow is None:
-            # Hardware-forwarded flow (no split): respond on the client flow.
-            client_flow = host_flow
+        """A response from the host app on the second connection.
+
+        The split connection is resolved with an O(1) reverse lookup; a flow
+        with no split (hardware-forwarded) responds on the client flow.
+        """
+        client_flow = self._client_flow_of.get(host_flow, host_flow)
         self._respond_to_client(client_flow, msg)
         self.stats.resp_from_host += 1
 
-    def dpu_response(self, client_flow: FiveTuple, packets: list[Packet]) -> None:
-        """Responses produced by the offload engine (already segmented)."""
+    def dpu_response(self, client_flow: FiveTuple, packets: list[Packet],
+                     responses: int = 1) -> None:
+        """Responses produced by the offload engine (already segmented).
+
+        A burst may carry the packets of several back-to-back responses for
+        one flow (``responses`` keeps the per-response stat exact): the
+        whole burst is stamped with contiguous sequence numbers and enqueued
+        on the client's demuxed queue in one lock round.
+        """
         conn = self._conn(client_flow)
+        resp_flow = conn.resp_flow
+        seq = conn.client_resp_seq
         for p in packets:
-            p.flow = client_flow.reversed()
-            p.seq = conn.client_resp_seq
-            conn.client_resp_seq += p.nbytes
-            self.to_client.push(p)
-        self.stats.resp_from_dpu += 1
+            p.flow = resp_flow
+            p.seq = seq
+            seq += len(p.payload)
+        conn.client_resp_seq = seq
+        self.to_client.push_many(resp_flow, packets)
+        self.stats.resp_from_dpu += responses
 
     def _respond_to_client(self, client_flow: FiveTuple, msg: bytes) -> None:
         conn = self._conn(client_flow)
-        self.to_client.push(Packet(client_flow.reversed(),
-                                   conn.client_resp_seq, msg))
+        self.to_client.push(Packet(conn.resp_flow, conn.client_resp_seq, msg))
         conn.client_resp_seq += len(msg)
 
     def drain_host_wire(self, deliver: Callable[[FiveTuple, bytes], None]) -> int:
         """Pump packets that crossed to the host into the host application."""
         n = 0
         while True:
-            pkt = self.to_host.pop()
-            if pkt is None:
+            pkts = self.to_host.pop_many(64)
+            if not pkts:
                 return n
-            deliver(pkt.flow, bytes(pkt.payload))
-            n += 1
+            for pkt in pkts:
+                deliver(pkt.flow, bytes(pkt.payload))
+            n += len(pkts)
 
 
 class NaiveSplitter:

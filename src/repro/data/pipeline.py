@@ -148,8 +148,10 @@ class RingPrefetcher:
             msgs = unframe_batch(self._carry) if self._carry else []
             if msgs:
                 first, rest = msgs[0], msgs[1:]
+                # unframe_batch returns views over _carry; materialize the
+                # re-framed remainder before _carry is rebound.
                 self._carry = b"".join(
-                    struct.pack("<I", len(m)) + m for m in rest)
+                    struct.pack("<I", len(m)) + bytes(m) for m in rest)
                 return self.deserialize(first)
             got = self.ring.consume(self.dma)
             if got is not None:

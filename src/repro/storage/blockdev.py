@@ -34,7 +34,7 @@ STATUS_EINVAL = 22
 STATUS_EIO = 5
 
 
-@dataclass
+@dataclass(slots=True)
 class IoOp:
     kind: str                      # "read" | "write"
     lba: int                       # byte offset on device
@@ -77,28 +77,36 @@ class BlockDevice:
         self.stats = BlockDeviceStats()
 
     # -- submission --------------------------------------------------------------
+    # deque.append is atomic under the GIL; poll() still serializes the
+    # claim of completion bursts, so submission needs no lock round.
     def submit_read(self, lba: int, nbytes: int, dest: memoryview,
                     on_complete: Callable[[int], None] | None = None) -> IoOp:
         op = IoOp("read", lba, nbytes, dest, on_complete)
-        self._submit(op)
+        if lba < 0 or lba + nbytes > self.capacity:
+            op.status = STATUS_EINVAL
+            if on_complete:
+                on_complete(STATUS_EINVAL)
+            return op
+        q = self._queue
+        q.append(op)
+        d = len(q)
+        if d > self.stats.max_queue_depth_seen:
+            self.stats.max_queue_depth_seen = d
         return op
 
     def submit_write(self, lba: int, data, on_complete: Callable[[int], None] | None = None) -> IoOp:
         op = IoOp("write", lba, len(data), data, on_complete)
-        self._submit(op)
-        return op
-
-    def _submit(self, op: IoOp) -> None:
-        if op.lba < 0 or op.lba + op.nbytes > self.capacity:
+        if lba < 0 or lba + op.nbytes > self.capacity:
             op.status = STATUS_EINVAL
-            if op.on_complete:
-                op.on_complete(op.status)
-            return
-        with self._lock:
-            self._queue.append(op)
-            d = len(self._queue)
-            if d > self.stats.max_queue_depth_seen:
-                self.stats.max_queue_depth_seen = d
+            if on_complete:
+                on_complete(STATUS_EINVAL)
+            return op
+        q = self._queue
+        q.append(op)
+        d = len(q)
+        if d > self.stats.max_queue_depth_seen:
+            self.stats.max_queue_depth_seen = d
+        return op
 
     def queue_len(self) -> int:
         with self._lock:
@@ -106,43 +114,56 @@ class BlockDevice:
 
     # -- completion --------------------------------------------------------------
     def poll(self, max_completions: int | None = None) -> int:
-        """Execute + complete up to ``max_completions`` queued ops, in order."""
+        """Execute + complete up to ``max_completions`` queued ops, in order.
+
+        The burst is claimed under ONE lock round; execution (and the
+        completion callbacks) run outside the lock."""
         budget = max_completions if max_completions is not None else self.queue_depth
-        done = 0
-        while done < budget:
-            with self._lock:
-                if not self._queue:
-                    break
-                op = self._queue.popleft()
-            self._execute(op)
-            done += 1
-        return done
+        if not self._queue:   # racy-but-safe emptiness peek: skip the lock
+            return 0
+        with self._lock:
+            q = self._queue
+            if not q:
+                return 0
+            k = min(budget, len(q))
+            ops = [q.popleft() for _ in range(k)]
+        # Inline completion loop: per-op stats folded into one update.
+        stats = self.stats
+        mem = self._mem
+        clock = self._clock_s
+        inv_bw = 1.0 / self.bandwidth_Bps
+        rlat, wlat = self.read_latency_s, self.write_latency_s
+        reads = writes = read_bytes = write_bytes = 0
+        for op in ops:
+            n = op.nbytes
+            if op.kind == "read":
+                clock += rlat + n * inv_bw
+                # Write straight into the caller's view (zero-copy contract)
+                op.buf[:n] = mem[op.lba : op.lba + n]
+                reads += 1
+                read_bytes += n
+            else:
+                clock += wlat + n * inv_bw
+                mem[op.lba : op.lba + n] = np.frombuffer(
+                    bytes(op.buf), dtype=np.uint8)
+                writes += 1
+                write_bytes += n
+            op.modeled_done_s = clock
+            op.status = STATUS_OK
+            cb = op.on_complete
+            if cb:
+                cb(STATUS_OK)
+        self._clock_s = clock
+        stats.modeled_busy_s = clock
+        stats.reads += reads
+        stats.writes += writes
+        stats.read_bytes += read_bytes
+        stats.write_bytes += write_bytes
+        return k
 
     def drain(self) -> None:
         while self.poll(1_000_000):
             pass
-
-    def _execute(self, op: IoOp) -> None:
-        lat = self.read_latency_s if op.kind == "read" else self.write_latency_s
-        self._clock_s += lat + op.nbytes / self.bandwidth_Bps
-        op.modeled_done_s = self._clock_s
-        self.stats.modeled_busy_s = self._clock_s
-        if op.kind == "read":
-            src = self._mem[op.lba : op.lba + op.nbytes]
-            dest = op.buf
-            # Write straight into the caller's view (zero-copy contract).
-            dest[: op.nbytes] = src.tobytes()
-            self.stats.reads += 1
-            self.stats.read_bytes += op.nbytes
-        else:
-            data = op.buf
-            self._mem[op.lba : op.lba + op.nbytes] = np.frombuffer(
-                bytes(data), dtype=np.uint8)
-            self.stats.writes += 1
-            self.stats.write_bytes += op.nbytes
-        op.status = STATUS_OK
-        if op.on_complete:
-            op.on_complete(op.status)
 
     # -- raw access for metadata bootstrap ----------------------------------------
     def raw_read(self, lba: int, nbytes: int) -> bytes:

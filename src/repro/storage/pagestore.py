@@ -189,7 +189,8 @@ class KVStoreServer:
         for m in decode_batch(payload):
             if m and m[0] == KV_GET:
                 _, rid, klen = KV_GET_HDR.unpack_from(m, 0)
-                key = m[KV_GET_HDR.size : KV_GET_HDR.size + klen]
+                # decode_batch returns memoryviews; the table key must hash
+                key = bytes(m[KV_GET_HDR.size : KV_GET_HDR.size + klen])
                 if table is not None and table.lookup(key) is not None:
                     dpu.append(m)      # on-disk record: the DPU serves it
                 else:
@@ -202,7 +203,7 @@ class KVStoreServer:
         if not msg or msg[0] != KV_GET:
             return None
         _, rid, klen = KV_GET_HDR.unpack_from(msg, 0)
-        key = msg[KV_GET_HDR.size : KV_GET_HDR.size + klen]
+        key = bytes(msg[KV_GET_HDR.size : KV_GET_HDR.size + klen])
         item: KVItem | None = table.lookup(key) if table else None
         if item is None:
             return None
