@@ -1,0 +1,328 @@
+"""Write-path ops/sec: the host-path data plane at CPython line rate.
+
+PR 2 rebuilt the offloaded *read* path (``fig_hotpath`` runs at
+``offloaded_frac: 1.0``); every write and cache-miss read still lands on the
+host path: DMA rings -> file service -> block device -> response delivery.
+This benchmark holds that path to the same standard with a **mixed,
+write-heavy KV workload** on the sharded §9.2 store:
+
+  * **PUT**  — host path end to end (request ring -> coalesced log append ->
+    ack), firing ``Cache`` (cache-on-write) so later GETs offload;
+  * **GET**  — only settled keys are fetched, so each GET is DPU-served from
+    the cache table (the §6 fast path stays hot while writes dominate);
+  * **DEL**  — host read-for-update, firing ``Invalidate``
+    (invalidate-on-read churn through the cache table).
+
+The driver pipelines rounds with depth 2 and only touches *settled* keys
+(acked two rounds ago), so the host/DPU split — and therefore the modeled
+per-request time — is fully deterministic: speedups must come from deleting
+wall-clock overhead, never from re-routing work.
+
+Results go to ``BENCH_writepath.json``.  Wall-clock numbers are calibrated
+exactly like ``fig_hotpath``: a fixed pure-Python reference loop is timed
+alongside, and committed numbers are rescaled by the machine-speed ratio
+before any gate applies.  Sections: ``baseline`` (pre-overhaul, recorded
+with ``--record-baseline``), ``current`` (``--record-current``),
+``last_run`` (always rewritten).
+
+Gates:
+
+  * full mode asserts >= ``FULL_SPEEDUP_GATE`` (2.0x) calibrated ops/sec
+    over the recorded baseline;
+  * ``--smoke`` (CI fast lane) runs a reduced config and fails on a >30%
+    calibrated regression vs the recorded ``current`` numbers;
+  * both modes assert the zero-copy write invariant
+    (``request_copies == 0``), that modeled time matches the recorded
+    reference (the simulator got faster, not the model), and that every
+    operation was answered.
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import struct
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, section  # noqa: E402
+from repro.apps.kv_store import KVClient, ShardedKVStore  # noqa: E402
+from repro.core.dds_server import ServerConfig  # noqa: E402
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_writepath.json")
+
+FULL_SPEEDUP_GATE = 2.0       # acceptance: overhaul >= 2x the pre-PR path
+SMOKE_REGRESSION_GATE = 0.70  # CI: fail below 70% of recorded current
+MODELED_DRIFT = 0.05          # modeled us/req must stay within 5%
+
+CONFIGS = {
+    "full": dict(shards=4, clients=2, warm_keys=96, rounds=12,
+                 puts=64, gets=40, dels=8, value_size=96),
+    "smoke": dict(shards=2, clients=1, warm_keys=48, rounds=5,
+                  puts=32, gets=20, dels=4, value_size=96),
+}
+
+
+def calibrate(iters: int = 200_000) -> float:
+    """Reference ops/sec of a fixed pure-Python loop (machine-speed proxy).
+
+    Identical in spirit to ``fig_hotpath.calibrate``: struct packing, dict
+    traffic and bytes slicing — the primitives the host path leans on.
+    """
+    pack = struct.Struct("<QII").pack
+    blob = bytes(range(256)) * 8
+    t0 = time.perf_counter()
+    d: dict[int, bytes] = {}
+    for i in range(iters):
+        d[i & 1023] = blob[i & 255 : (i & 255) + 64]
+        pack(i, i & 0xFFFF, 64)
+    dt = time.perf_counter() - t0
+    return iters / dt
+
+
+def _drain(clients, cluster, rids: set) -> None:
+    """Pump until every rid in ``rids`` has been answered (and popped)."""
+    for _ in range(2_000_000):
+        if not rids:
+            return
+        work = cluster.pump()
+        for cli in clients:
+            work += cli.net.poll()
+        for cli in clients:
+            resp = cli.net.responses
+            done = rids & resp.keys()
+            for rid in done:
+                resp.pop(rid)
+                cli.net._rid_shard.pop(rid, None)
+            rids -= done
+        if work == 0:
+            for srv in cluster.servers:
+                srv.device.drain()
+    raise TimeoutError(f"{len(rids)} requests never answered")
+
+
+def run_workload(cfg: dict) -> dict:
+    """Drive the pipelined mixed workload; return measured + modeled rates."""
+    store = ShardedKVStore(num_shards=cfg["shards"],
+                           config=ServerConfig(device_capacity=1 << 26,
+                                               cache_items=1 << 14))
+    cluster = store.cluster
+    clients = [KVClient(store) for _ in range(cfg["clients"])]
+    value = bytes(range(256))[: cfg["value_size"]]
+
+    # Warm set (untimed): PUT-acked keys whose GETs are guaranteed DPU-served.
+    settled: list[list[bytes]] = [[] for _ in clients]
+    warm_rids: set[int] = set()
+    for ci, cli in enumerate(clients):
+        for i in range(cfg["warm_keys"]):
+            key = b"w%d-%d" % (ci, i)
+            warm_rids.add(cli.put(key, value))
+            settled[ci].append(key)
+        cli.net.flush()
+    _drain(clients, cluster, warm_rids)
+
+    total = (cfg["rounds"] * cfg["clients"]
+             * (cfg["puts"] + cfg["gets"] + cfg["dels"]))
+    dpu_before = store.dpu_served_gets()
+    host_before = store.host_served_gets()
+    modeled_before = cluster.makespan_s()
+    gc.collect()
+    gc.disable()   # keep collector pauses out of the timed region
+    t0 = time.perf_counter()
+    # Pipeline depth 2: round r is issued while round r-1 is in flight;
+    # round r-2 is fully acked, so its keys are settled for GET/DEL.
+    pending: set[int] = set()     # rids of the PREVIOUS round
+    unsettle: list[list[list[bytes]]] = [[[] for _ in clients]]
+    for r in range(cfg["rounds"]):
+        round_rids: set[int] = set()
+        fresh = [[] for _ in clients]
+        for ci, cli in enumerate(clients):
+            pool = settled[ci]
+            # write-heavy: every 4th PUT overwrites a settled key (cache
+            # upsert), the rest append fresh keys
+            for j in range(cfg["puts"]):
+                if j % 4 == 3 and pool:
+                    key = pool[j % len(pool)]
+                else:
+                    key = b"c%dr%dp%d" % (ci, r, j)
+                    fresh[ci].append(key)
+                round_rids.add(cli.put(key, value))
+            for j in range(cfg["gets"]):
+                round_rids.add(cli.get(pool[j % len(pool)]))
+            for j in range(cfg["dels"]):
+                # churn: delete from the oldest settled keys, never re-read
+                round_rids.add(cli.delete(pool.pop(0)))
+            cli.net.flush()
+        unsettle.append(fresh)
+        # Wait for round r-1 (keeps r in flight => depth-2 pipelining).
+        while pending:
+            work = cluster.pump()
+            for cli in clients:
+                work += cli.net.poll()
+            for cli in clients:
+                resp = cli.net.responses
+                done = pending & resp.keys()
+                for rid in done:
+                    resp.pop(rid)
+                    cli.net._rid_shard.pop(rid, None)
+                pending -= done
+            if work == 0:
+                for srv in cluster.servers:
+                    srv.device.drain()
+        # Round r-1 acked: its fresh PUT keys are settled for round r+1.
+        if len(unsettle) >= 2:
+            for ci, keys in enumerate(unsettle[-2]):
+                settled[ci].extend(keys)
+        pending = round_rids
+    _drain(clients, cluster, pending)
+    elapsed = time.perf_counter() - t0
+    gc.enable()
+
+    dpu_gets = store.dpu_served_gets() - dpu_before
+    host_gets = store.host_served_gets() - host_before
+    copies = sum(s.file_service.stats.request_copies
+                 for s in cluster.servers)
+    assert copies == 0, f"zero-copy write invariant violated: {copies} copies"
+    writes = sum(s.file_service.stats.writes for s in cluster.servers)
+    assert writes > 0, "no host-path writes executed?"
+    modeled_s = cluster.makespan_s() - modeled_before
+    gets_total = cfg["rounds"] * cfg["clients"] * cfg["gets"]
+    return {
+        "requests": total,
+        "wall_s": elapsed,
+        "ops_per_s": total / elapsed,
+        "modeled_us_per_req": modeled_s / total * 1e6,
+        "dpu_get_frac": dpu_gets / max(gets_total, 1),
+        "host_gets": host_gets,
+        "fs_writes": writes,
+    }
+
+
+def load_json() -> dict:
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as fh:
+            return json.load(fh)
+    return {"schema": 1, "configs": CONFIGS}
+
+
+def save_json(doc: dict) -> None:
+    with open(JSON_PATH, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = ("--smoke" in argv
+             or os.environ.get("DDS_BENCH_SMOKE", "0") == "1")
+    record = ("baseline" if "--record-baseline" in argv else
+              "current" if "--record-current" in argv else None)
+    mode = "smoke" if smoke else "full"
+    cfg = CONFIGS[mode]
+
+    ops = cfg["puts"] + cfg["gets"] + cfg["dels"]
+    section(f"write path ({mode}: {cfg['shards']} shards, {cfg['clients']} "
+            f"clients, {cfg['rounds']}x{ops} mixed ops, "
+            f"{cfg['puts']}P/{cfg['gets']}G/{cfg['dels']}D)")
+    # Noise strategy: every workload rep is PAIRED with the calibration
+    # measured right around it (max of before/after), and the rep with the
+    # best *normalized* rate wins.  Pairing controls for machine-speed
+    # drift WITHIN a run (CPU throttling mid-benchmark skews a
+    # global-max-calibration scheme toward spurious failures); the
+    # committed number remains an (ops, calibration) pair from one moment
+    # in time, so cross-machine rescaling works exactly as in fig_hotpath.
+    reps = 2 if smoke else 4
+    calib, res = 0.0, None
+    c_before = calibrate()
+    for _ in range(reps):
+        r = run_workload(cfg)
+        c_after = calibrate()
+        c = max(c_before, c_after)
+        if res is None or r["ops_per_s"] / c > res["ops_per_s"] / calib:
+            calib, res = c, r
+        c_before = c_after
+    emit(f"writepath_{mode}", 1e6 / res["ops_per_s"],
+         f"tput={res['ops_per_s']:.0f}op/s "
+         f"modeled={res['modeled_us_per_req']:.2f}us/req "
+         f"dpu_gets={res['dpu_get_frac']:.2f}")
+
+    doc = load_json()
+    doc["configs"] = CONFIGS
+    res = {**res, "config": cfg}   # pin the workload the numbers came from
+    entry = {"calibration_ops_per_s": calib, mode: res}
+    if record:
+        doc.setdefault(record, {})["calibration_ops_per_s"] = calib
+        doc[record][mode] = res
+        print(f"# recorded {mode} measurement into '{record}'")
+    doc["last_run"] = {"mode": mode, **entry}
+    base, cur = doc.get("baseline", {}), doc.get("current", {})
+    if base.get("full") and cur.get("full"):
+        b = base["full"]["ops_per_s"] / base["calibration_ops_per_s"]
+        c = cur["full"]["ops_per_s"] / cur["calibration_ops_per_s"]
+        doc["speedup_full_calibrated"] = round(c / b, 3)
+        doc["speedup_full_raw"] = round(cur["full"]["ops_per_s"]
+                                        / base["full"]["ops_per_s"], 3)
+    save_json(doc)
+
+    def gate_ref(sec: dict, which: str):
+        """Recorded numbers are only comparable on the SAME workload."""
+        ref = sec.get(which)
+        if ref and ref.get("config") != cfg:
+            print(f"# recorded {which} numbers used a different workload "
+                  f"config; gate skipped — re-record with the new config")
+            return None
+        return ref
+
+    failures = []
+
+    def check_modeled(ref: dict) -> None:
+        """Modeled time is the physics; the overhaul must not move it."""
+        b, c = ref["modeled_us_per_req"], res["modeled_us_per_req"]
+        if abs(c - b) > MODELED_DRIFT * b:
+            failures.append(
+                f"modeled us/req drifted: {c:.3f} vs recorded {b:.3f}")
+
+    if not smoke and not record:
+        ref = gate_ref(doc.get("baseline", {}), "full")
+        if ref:
+            scale = calib / doc["baseline"]["calibration_ops_per_s"]
+            target = ref["ops_per_s"] * scale * FULL_SPEEDUP_GATE
+            ok = res["ops_per_s"] >= target
+            print(f"# speedup vs baseline (calibrated): "
+                  f"{res['ops_per_s'] / (ref['ops_per_s'] * scale):.2f}x "
+                  f"(gate {FULL_SPEEDUP_GATE:.1f}x) -> {'OK' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"write path below {FULL_SPEEDUP_GATE}x baseline: "
+                    f"{res['ops_per_s']:.0f} < {target:.0f} op/s")
+            check_modeled(ref)
+        else:
+            print("# no recorded baseline; gate skipped")
+    if smoke and not record:
+        ref = gate_ref(doc.get("current", {}), "smoke")
+        if ref:
+            scale = calib / doc["current"]["calibration_ops_per_s"]
+            target = ref["ops_per_s"] * scale * SMOKE_REGRESSION_GATE
+            ok = res["ops_per_s"] >= target
+            print(f"# smoke vs recorded current (calibrated): "
+                  f"{res['ops_per_s'] / (ref['ops_per_s'] * scale):.2f}x "
+                  f"(gate {SMOKE_REGRESSION_GATE:.2f}x) -> "
+                  f"{'OK' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"write path regressed >30% vs recorded current: "
+                    f"{res['ops_per_s']:.0f} < {target:.0f} op/s")
+            check_modeled(ref)
+        else:
+            print("# no recorded current numbers; gate skipped")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ from __future__ import annotations
 import bisect
 import struct
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 from repro.core import wire
 from repro.core.client import ClusterClient
@@ -64,8 +65,9 @@ def decode_record(data: bytes) -> tuple[bytes, bytes]:
     return k, v
 
 
-@dataclass(frozen=True)
-class KVLocation:
+class KVLocation(NamedTuple):
+    """Immutable record location; a NamedTuple (C-speed construction —
+    one is minted per PUT on the cache-on-write path)."""
     file_id: int
     offset: int
     size: int
@@ -134,6 +136,19 @@ class ShardedKVStore:
                 return None
             return ReadOp(loc.file_id, loc.offset, loc.size)
 
+        def prepare_read(msg, table) -> tuple[ReadOp, bytes] | None:
+            """Fused OffFunc + ok-response-header (one parse per GET),
+            mirroring the default app's fast path."""
+            if not msg or msg[0] != KV_GET:
+                return None
+            _, rid, klen = GET_HDR.unpack_from(msg, 0)
+            key = bytes(msg[GET_HDR.size : GET_HDR.size + klen])
+            loc: KVLocation | None = table.lookup(key) if table else None
+            if loc is None:
+                return None
+            return (ReadOp(loc.file_id, loc.offset, loc.size),
+                    APP_RESP_HDR.pack(rid, wire.E_OK, loc.size))
+
         def cache(op: WriteOp) -> list[tuple[object, object]]:
             if op.file_id != st.log_fid:
                 return []
@@ -193,9 +208,11 @@ class ShardedKVStore:
             typ = msg[0] if msg else 0
             if typ == KV_PUT:
                 _, req_id, klen, vlen = PUT_HDR.unpack_from(msg, 0)
-                key = msg[PUT_HDR.size : PUT_HDR.size + klen]
+                # msg may be a zero-copy view: the index key must be real
+                # bytes; the record join consumes the value view directly.
+                key = bytes(msg[PUT_HDR.size : PUT_HDR.size + klen])
                 value = msg[PUT_HDR.size + klen : PUT_HDR.size + klen + vlen]
-                rec = REC_HDR.pack(klen, vlen) + key + value
+                rec = b"".join((REC_HDR.pack(klen, vlen), key, value))
                 loc = KVLocation(st.log_fid, st.log_off, len(rec))
                 st.log_off += len(rec)
                 st.index[key] = loc
@@ -207,7 +224,7 @@ class ShardedKVStore:
                 return ("w", req_id, loc.file_id, loc.offset, rec, loc.encode())
             if typ == KV_GET:
                 _, req_id, klen = GET_HDR.unpack_from(msg, 0)
-                key = msg[GET_HDR.size : GET_HDR.size + klen]
+                key = bytes(msg[GET_HDR.size : GET_HDR.size + klen])
                 loc = st.index.get(key)
                 st.host_gets += 1
                 if loc is None:
@@ -215,7 +232,7 @@ class ShardedKVStore:
                 return ("r", req_id, loc.file_id, loc.offset, loc.size)
             if typ == KV_DEL:
                 _, req_id, klen = GET_HDR.unpack_from(msg, 0)
-                key = msg[GET_HDR.size : GET_HDR.size + klen]
+                key = bytes(msg[GET_HDR.size : GET_HDR.size + klen])
                 loc = st.index.pop(key, None)
                 if loc is None:
                     return ("resp", req_id, wire.E_NOENT, b"")
@@ -229,7 +246,8 @@ class ShardedKVStore:
         return OffloadAPI(off_pred, off_func, cache=cache,
                           invalidate=invalidate,
                           response_header=response_header,
-                          host_handler=host_handler)
+                          host_handler=host_handler,
+                          prepare_read=prepare_read)
 
     # -- observability -----------------------------------------------------------------
     def dpu_served_gets(self) -> int:
@@ -239,9 +257,17 @@ class ShardedKVStore:
         return sum(st.host_gets for st in self._states)
 
     def shard_stats(self) -> list[dict]:
+        """Per-shard stats, including the DPU cache table's counters.
+
+        ``cache`` surfaces :class:`~repro.core.cache_table.CacheTableStats`
+        (lookups/hits on the director's predicate path, inserts from
+        cache-on-write, deletes from invalidate-on-read, cuckoo kicks), so
+        an operator can see hit rate and insert pressure per shard."""
         return [{"puts": st.puts, "dels": st.dels, "host_gets": st.host_gets,
                  "dpu_gets": srv.offload.stats.completed,
-                 "log_bytes": st.log_off}
+                 "log_bytes": st.log_off,
+                 "cache": srv.cache_table.stats.as_dict(),
+                 "cache_items": len(srv.cache_table)}
                 for st, srv in zip(self._states, self.cluster.servers)]
 
 
@@ -249,21 +275,35 @@ class KVClient:
     """Key-routed client: batches/pipelines PUT/GET/DEL across shards."""
 
     def __init__(self, store: ShardedKVStore, ip: str = "10.0.0.9",
-                 port: int | None = None):
+                 port: int | None = None, shard_cache: int = 1 << 16):
         self.store = store
         self.net = ClusterClient(store.cluster, ip=ip, port=port)
+        # Consistent-hash placement is stable, so the key->shard mapping is
+        # cacheable: repeat traffic skips the blake2b ring walk (bounded to
+        # keep pathological key churn from growing without limit).
+        self._shard_of: dict[bytes, int] = {}
+        self._shard_cache = shard_cache
+
+    def _shard(self, key: bytes) -> int:
+        shard = self._shard_of.get(key)
+        if shard is None:
+            shard = self.store.shard_for_key(key)
+            if len(self._shard_of) >= self._shard_cache:
+                self._shard_of.clear()
+            self._shard_of[key] = shard
+        return shard
 
     def put(self, key: bytes, value: bytes) -> int:
-        shard = self.store.shard_for_key(key)
-        return self.net.send_raw(shard, lambda rid: encode_put(rid, key, value))
+        return self.net.send_raw(self._shard(key),
+                                 lambda rid: encode_put(rid, key, value))
 
     def get(self, key: bytes) -> int:
-        shard = self.store.shard_for_key(key)
-        return self.net.send_raw(shard, lambda rid: encode_get(rid, key))
+        return self.net.send_raw(self._shard(key),
+                                 lambda rid: encode_get(rid, key))
 
     def delete(self, key: bytes) -> int:
-        shard = self.store.shard_for_key(key)
-        return self.net.send_raw(shard, lambda rid: encode_del(rid, key))
+        return self.net.send_raw(self._shard(key),
+                                 lambda rid: encode_del(rid, key))
 
     # -- scheduling + typed waits -----------------------------------------------------
     def flush(self) -> int:

@@ -30,26 +30,30 @@ file-service writer thread in DDS, so this is not a scalability limit.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 from typing import Any, Iterator
 
-import numpy as np
+_EMPTY = 0xFFFFFFFFFFFFFFFF
+_MASK64 = 0xFFFFFFFFFFFFFFFF
 
-_EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+# 64-bit mix (splitmix64 finalizer) — cheap, good avalanche.  Pure-int
+# arithmetic: the table sits on BOTH hot paths (a lookup per directed
+# request in the offload predicate, an insert per cache-on-write), where a
+# numpy-scalar mix — ufunc dispatch + an errstate context manager per call —
+# cost ~10x the hash itself.
+_M1 = 0xBF58476D1CE4E5B9
+_M2 = 0x94D049BB133111EB
 
-# 64-bit mix (splitmix64 finalizer) — cheap, good avalanche.
-_M1 = np.uint64(0xBF58476D1CE4E5B9)
-_M2 = np.uint64(0x94D049BB133111EB)
 
-
-def _mix(x: np.uint64, seed: np.uint64) -> np.uint64:
-    with np.errstate(over="ignore"):
-        x = np.uint64(x) ^ seed
-        x ^= x >> np.uint64(30)
-        x *= _M1
-        x ^= x >> np.uint64(27)
-        x *= _M2
-        x ^= x >> np.uint64(31)
+def _mix(x: int, seed: int) -> int:
+    # callers pass 64-bit non-negative ints; xor/shift stay in range, only
+    # the multiplies need masking back to 64 bits
+    x ^= seed
+    x ^= x >> 30
+    x = (x * _M1) & _MASK64
+    x ^= x >> 27
+    x = (x * _M2) & _MASK64
+    x ^= x >> 31
     return x
 
 
@@ -62,6 +66,11 @@ class CacheTableStats:
     kicks: int = 0        # cuckoo relocations
     chain_inserts: int = 0
     full_rejections: int = 0
+
+    def as_dict(self) -> dict:
+        """Plain-dict snapshot for app-level stats surfaces (e.g. the KV
+        store's per-shard stats)."""
+        return asdict(self)
 
 
 class CacheTable:
@@ -79,56 +88,61 @@ class CacheTable:
         self.nbuckets = nbuckets
         self.slots = slots_per_bucket
         self.max_items = max_items
-        self._mask = np.uint64(nbuckets - 1)
-        self._seed1 = np.uint64(0x9E3779B97F4A7C15)
-        self._seed2 = np.uint64(0xC2B2AE3D27D4EB4F)
-        # In-line slot arrays (keys as uint64 fingerprints of the full key).
-        self._keys = np.full((nbuckets, slots_per_bucket), _EMPTY, dtype=np.uint64)
+        self._mask = nbuckets - 1
+        # In-line slot lists (keys as 64-bit int fingerprints of the full
+        # key).  Plain lists, not numpy rows: slot probes are single-element
+        # int compares, where numpy scalar indexing costs a boxing per probe.
+        self._keys: list[list[int]] = [[_EMPTY] * slots_per_bucket
+                                       for _ in range(nbuckets)]
         self._vals: list[list[Any]] = [[None] * slots_per_bucket for _ in range(nbuckets)]
         self._full_keys: list[list[Any]] = [[None] * slots_per_bucket for _ in range(nbuckets)]
         self._chains: list[dict[Any, Any]] = [dict() for _ in range(nbuckets)]
-        self._versions = np.zeros(nbuckets, dtype=np.uint64)  # seqlock
+        self._versions = [0] * nbuckets  # seqlock (even = stable)
         self._count = 0
         self._wlock = threading.Lock()
         self.stats = CacheTableStats()
 
     # -- hashing ---------------------------------------------------------------
-    def _hash_key(self, key: Any) -> np.uint64:
-        if isinstance(key, (int, np.integer)):
-            h = np.uint64(int(key) & 0xFFFFFFFFFFFFFFFF)
-        else:
-            h = np.uint64(hash(key) & 0xFFFFFFFFFFFFFFFF)
-        return _mix(h, np.uint64(0))
+    def _hash_key(self, key: Any) -> int:
+        if isinstance(key, int):
+            return _mix(key & _MASK64, 0)
+        return _mix(hash(key) & _MASK64, 0)
 
-    def _buckets_for(self, hk: np.uint64) -> tuple[int, int]:
-        b1 = int(_mix(hk, self._seed1) & self._mask)
-        b2 = int(_mix(hk, self._seed2) & self._mask)
+    def _buckets_for(self, hk: int) -> tuple[int, int]:
+        # ``hk`` is already splitmix-finalized, so its low and high halves
+        # are independently avalanche-mixed: deriving the two cuckoo
+        # buckets from disjoint bit ranges costs ZERO extra mixes (the
+        # old per-seed re-mix tripled the hashing cost of every
+        # lookup/insert/delete on the predicate hot path).
+        b1 = hk & self._mask
+        b2 = (hk >> 32) & self._mask
         if b2 == b1:
-            b2 = (b1 + 1) & int(self._mask)
+            b2 = (b1 + 1) & self._mask
         return b1, b2
 
     # -- read path (lock-free via seqlock) --------------------------------------
     def lookup(self, key: Any) -> Any | None:
         self.stats.lookups += 1
         hk = self._hash_key(key)
-        b1, b2 = self._buckets_for(hk)
-        for b in (b1, b2):
+        versions = self._versions
+        for b in self._buckets_for(hk):
             for _ in range(64):  # seqlock retry budget
-                v0 = int(self._versions[b])
+                v0 = versions[b]
                 if v0 & 1:
                     continue  # writer active in this bucket
                 found, val = self._probe(b, hk, key)
-                if int(self._versions[b]) == v0:
+                if versions[b] == v0:
                     if found:
                         self.stats.hits += 1
                         return val
                     break
         return None
 
-    def _probe(self, b: int, hk: np.uint64, key: Any) -> tuple[bool, Any]:
+    def _probe(self, b: int, hk: int, key: Any) -> tuple[bool, Any]:
         row = self._keys[b]
-        for s in range(self.slots):
-            if row[s] == hk and self._full_keys[b][s] == key:
+        full = self._full_keys[b]
+        for s, k in enumerate(row):
+            if k == hk and full[s] == key:
                 return True, self._vals[b][s]
         chain = self._chains[b]
         if key in chain:
@@ -143,26 +157,31 @@ class CacheTable:
 
     # -- write path (single writer: the file service) ---------------------------
     def _bucket_begin(self, b: int) -> None:
-        self._versions[b] += np.uint64(1)  # odd: writer active
+        self._versions[b] += 1  # odd: writer active
 
     def _bucket_end(self, b: int) -> None:
-        self._versions[b] += np.uint64(1)  # even: stable
+        self._versions[b] += 1  # even: stable
 
     def insert(self, key: Any, value: Any) -> bool:
         """Insert or update.  Returns False iff the table is at capacity."""
         with self._wlock:
             hk = self._hash_key(key)
             b1, b2 = self._buckets_for(hk)
-            # Update in place if present.
+            # ONE pass over both buckets: find an in-place update target and
+            # remember the first free slot for the (common) fresh-insert case.
+            free_b = free_s = -1
             for b in (b1, b2):
                 row = self._keys[b]
-                for s in range(self.slots):
-                    if row[s] == hk and self._full_keys[b][s] == key:
+                full = self._full_keys[b]
+                for s, k in enumerate(row):
+                    if k == hk and full[s] == key:
                         self._bucket_begin(b)
                         self._vals[b][s] = value
                         self._bucket_end(b)
                         self.stats.inserts += 1
                         return True
+                    if k == _EMPTY and free_b < 0:
+                        free_b, free_s = b, s
                 if key in self._chains[b]:
                     self._bucket_begin(b)
                     self._chains[b][key] = value
@@ -172,14 +191,12 @@ class CacheTable:
             if self._count >= self.max_items:
                 self.stats.full_rejections += 1
                 return False
-            # Try an empty in-line slot in either bucket.
-            for b in (b1, b2):
-                s = self._free_slot(b)
-                if s is not None:
-                    self._place(b, s, hk, key, value)
-                    self._count += 1
-                    self.stats.inserts += 1
-                    return True
+            # Take the empty in-line slot spotted during the update scan.
+            if free_b >= 0:
+                self._place(free_b, free_s, hk, key, value)
+                self._count += 1
+                self.stats.inserts += 1
+                return True
             # Cuckoo kicks with a bounded path; on failure, chain in-bucket.
             if self._kick_insert(b1, hk, key, value, budget=32):
                 self._count += 1
@@ -200,14 +217,14 @@ class CacheTable:
                 return s
         return None
 
-    def _place(self, b: int, s: int, hk: np.uint64, key: Any, value: Any) -> None:
+    def _place(self, b: int, s: int, hk: int, key: Any, value: Any) -> None:
         self._bucket_begin(b)
-        self._keys[b, s] = hk
+        self._keys[b][s] = hk
         self._full_keys[b][s] = key
         self._vals[b][s] = value
         self._bucket_end(b)
 
-    def _kick_insert(self, b: int, hk: np.uint64, key: Any, value: Any,
+    def _kick_insert(self, b: int, hk: int, key: Any, value: Any,
                      budget: int) -> bool:
         cur = (b, hk, key, value)
         for i in range(budget):
@@ -218,7 +235,7 @@ class CacheTable:
                 return True
             # Evict the slot this path landed on (round-robin by budget step).
             s = i % self.slots
-            vk = self._keys[b, s]
+            vk = self._keys[b][s]
             vfk, vv = self._full_keys[b][s], self._vals[b][s]
             self._place(b, s, hk, key, value)
             self.stats.kicks += 1
@@ -239,11 +256,12 @@ class CacheTable:
             b1, b2 = self._buckets_for(hk)
             for b in (b1, b2):
                 row = self._keys[b]
+                full = self._full_keys[b]
                 for s in range(self.slots):
-                    if row[s] == hk and self._full_keys[b][s] == key:
+                    if row[s] == hk and full[s] == key:
                         self._bucket_begin(b)
-                        self._keys[b, s] = _EMPTY
-                        self._full_keys[b][s] = None
+                        row[s] = _EMPTY
+                        full[s] = None
                         self._vals[b][s] = None
                         self._bucket_end(b)
                         self._count -= 1
@@ -259,9 +277,23 @@ class CacheTable:
             return False
 
     def items(self) -> Iterator[tuple[Any, Any]]:
+        """Stable snapshot of every (key, value) pair.
+
+        The whole table is materialized UNDER the writer lock and an
+        iterator over the snapshot returned.  The previous implementation
+        was a generator that scanned lazily while holding the lock: items
+        relocated by cuckoo kicks between ``next()`` calls could be yielded
+        twice or skipped, and any insert from the consuming thread's
+        call chain would deadlock on the non-reentrant writer lock.
+        """
         with self._wlock:
+            out: list[tuple[Any, Any]] = []
             for b in range(self.nbuckets):
+                row = self._keys[b]
+                full = self._full_keys[b]
+                vals = self._vals[b]
                 for s in range(self.slots):
-                    if self._keys[b, s] != _EMPTY:
-                        yield self._full_keys[b][s], self._vals[b][s]
-                yield from list(self._chains[b].items())
+                    if row[s] != _EMPTY:
+                        out.append((full[s], vals[s]))
+                out.extend(self._chains[b].items())
+        return iter(out)

@@ -47,8 +47,14 @@ def encode_app_read(req_id: int, file_id: int, offset: int, nbytes: int) -> byte
     return APP_HDR.pack(APP_READ, req_id, file_id, offset, nbytes)
 
 
-def encode_app_write(req_id: int, file_id: int, offset: int, data: bytes) -> bytes:
-    return APP_HDR.pack(APP_WRITE, req_id, file_id, offset, len(data)) + data
+def encode_app_write(req_id: int, file_id: int, offset: int, data) -> bytes:
+    """Encode a write request; ``data`` may be bytes or a memoryview.
+
+    ``join`` consumes buffer views directly, so a memoryview source is
+    copied exactly once — into the outgoing message — never materialized
+    into an intermediate ``bytes`` first."""
+    return b"".join((APP_HDR.pack(APP_WRITE, req_id, file_id, offset,
+                                  len(data)), data))
 
 
 def encode_batch(msgs: list[bytes]) -> bytes:
@@ -223,13 +229,15 @@ class DDSStorageServer:
         self.host_cpu_busy_s = 0.0   # modeled host CPU seconds consumed
 
     # -- §6.1 hooks: translate file-service ops into user Cache/Invalidate ----------
-    def _cache_on_write(self, req: wire.Request) -> None:
+    # (called with plain header fields: the file service's data plane keeps
+    # no per-request objects, see FileServiceRunner._submit_burst)
+    def _cache_on_write(self, file_id: int, offset: int, payload) -> None:
         if self.api.cache is not None:
-            self.offload.on_host_write(WriteOp(req.file_id, req.offset, req.payload))
+            self.offload.on_host_write(WriteOp(file_id, offset, payload))
 
-    def _invalidate_on_read(self, req: wire.Request) -> None:
+    def _invalidate_on_read(self, file_id: int, offset: int, nbytes: int) -> None:
         if self.api.invalidate is not None:
-            self.offload.on_host_read(ReadOp(req.file_id, req.offset, req.nbytes))
+            self.offload.on_host_read(ReadOp(file_id, offset, nbytes))
 
     # -- cooperative event loop ---------------------------------------------------------
     def pump(self) -> int:
@@ -280,6 +288,7 @@ class _HostApp:
     def __init__(self, server: DDSStorageServer):
         self.server = server
         self._inflight: dict[int, tuple] = {}  # rid -> (host_flow, app req)
+        self._burst: list[tuple] = []          # (host_flow, msg) drained batch
         self._files_ready = False
 
     def busy(self) -> bool:
@@ -287,74 +296,110 @@ class _HostApp:
         return bool(self._inflight)
 
     def step(self) -> int:
-        return self.server.director.drain_host_wire(self._deliver)
+        """Drain the host wire, then execute the WHOLE burst in one pass.
 
-    def _deliver(self, host_flow: FiveTuple, payload: bytes) -> None:
+        Collect-then-execute lets the file I/O of a burst issue through
+        ``DDSFrontEnd.submit_many`` (bulk rid reservation + one ring
+        reservation per group) instead of one ring round trip per message."""
+        n = self.server.director.drain_host_wire(self._collect)
+        if self._burst:
+            self._execute_burst()
+        return n
+
+    def _collect(self, host_flow: FiveTuple, payload) -> None:
         if not payload:
             return  # SYN/control packet hardware-forwarded to the host
+        burst = self._burst
         if host_flow.src_ip == "dpu-proxy":
-            msgs = [payload]          # PEP split connection: one app message
-        else:
-            # hw-forwarded original batch; the HOST app owns its messages
-            # (it indexes/hashes them), so materialize real bytes here —
-            # host-path copies are exactly what offloading avoids.
-            msgs = [bytes(m) for m in decode_batch(payload)]
-        for m in msgs:
-            self._execute(host_flow, m)
-
-    def _execute(self, host_flow: FiveTuple, m: bytes) -> None:
-        srv = self.server
-        srv.host_cpu_busy_s += (self.HOST_NET_US + self.HOST_APP_US) * 1e-6
-        typ = m[0] if m else 0
-        if typ not in (APP_READ, APP_WRITE) and srv.api.host_handler is not None:
-            action = srv.api.host_handler(m)
-            if action[0] == "resp":
-                _, req_id, status, body = action
-                srv.host_cpu_busy_s += self.HOST_NET_US * 1e-6
-                resp = APP_RESP_HDR.pack(req_id, status, len(body)) + body
-                srv.director.host_response(host_flow, resp)
-                return
-            if action[0] == "w":
-                # ('w', req_id, fid, off, data[, resp_body]) — the optional
-                # 6th element is echoed in the write ack (e.g. a KV PUT
-                # returning the record's on-disk location, §9.2).
-                _, req_id, file_id, offset, data = action[:5]
-                ack_body = action[5] if len(action) > 5 else b""
-                rid = srv.frontend.write_file(file_id, offset, data)
-                self._inflight[rid] = (host_flow, APP_WRITE, req_id,
-                                       len(data), ack_body)
-                return
-            _, req_id, file_id, offset, nbytes = action
-            rid = srv.frontend.read_file(file_id, offset, nbytes)
-            self._inflight[rid] = (host_flow, APP_READ, req_id, nbytes, b"")
+            # PEP split connection: one app message.  Keep it a zero-copy
+            # view — write payloads ride it into the request ring untouched.
+            burst.append((host_flow,
+                          payload if isinstance(payload, memoryview)
+                          else memoryview(payload)))
             return
-        typ, req_id, file_id, offset, nbytes = APP_HDR.unpack_from(m, 0)
-        if typ == APP_WRITE:
-            data = m[APP_HDR.size : APP_HDR.size + nbytes]
-            rid = srv.frontend.write_file(file_id, offset, data)
-        else:
-            rid = srv.frontend.read_file(file_id, offset, nbytes)
-        self._inflight[rid] = (host_flow, typ, req_id, nbytes, b"")
+        # hw-forwarded original batch; the HOST app owns its messages
+        # (it indexes/hashes them), so materialize real bytes here —
+        # host-path copies are exactly what offloading avoids.
+        for m in decode_batch(payload):
+            burst.append((host_flow, bytes(m)))
+
+    def _execute_burst(self) -> None:
+        msgs = self._burst
+        self._burst = []
+        srv = self.server
+        handler = srv.api.host_handler
+        hdr_size = APP_HDR.size
+        submits: list[tuple] = []   # ("w"|"r", file_id, offset, data|nbytes)
+        metas: list[tuple] = []     # (host_flow, typ, req_id, nbytes, ack)
+        responses: dict[FiveTuple, list] = {}  # immediate 'resp' actions
+        n_resp = 0
+        for host_flow, m in msgs:
+            typ = m[0] if m else 0
+            if typ not in (APP_READ, APP_WRITE) and handler is not None:
+                action = handler(m)
+                kind = action[0]
+                if kind == "resp":
+                    _, req_id, status, body = action
+                    n_resp += 1
+                    responses.setdefault(host_flow, []).append(
+                        APP_RESP_HDR.pack(req_id, status, len(body)) + body)
+                elif kind == "w":
+                    # ('w', req_id, fid, off, data[, resp_body]) — the
+                    # optional 6th element is echoed in the write ack (e.g.
+                    # a KV PUT returning its on-disk location, §9.2).
+                    _, req_id, file_id, offset, data = action[:5]
+                    submits.append(("w", file_id, offset, data))
+                    metas.append((host_flow, APP_WRITE, req_id, len(data),
+                                  action[5] if len(action) > 5 else b""))
+                else:
+                    _, req_id, file_id, offset, nbytes = action
+                    submits.append(("r", file_id, offset, nbytes))
+                    metas.append((host_flow, APP_READ, req_id, nbytes, b""))
+                continue
+            typ, req_id, file_id, offset, nbytes = APP_HDR.unpack_from(m, 0)
+            if typ == APP_WRITE:
+                submits.append(("w", file_id, offset,
+                                m[hdr_size : hdr_size + nbytes]))
+            else:
+                submits.append(("r", file_id, offset, nbytes))
+            metas.append((host_flow, typ, req_id, nbytes, b""))
+        # Modeled host CPU: network + app cost PER MESSAGE (batching the
+        # simulator does not change what the host cores would burn), plus
+        # the network cost of each immediate response.
+        srv.host_cpu_busy_s += ((self.HOST_NET_US + self.HOST_APP_US)
+                                * len(msgs) + self.HOST_NET_US * n_resp) * 1e-6
+        for flow, batch in responses.items():
+            srv.director.host_response_many(flow, batch)
+        if submits:
+            rids = srv.frontend.submit_many(submits)
+            inflight = self._inflight
+            for rid, meta in zip(rids, metas):
+                inflight[rid] = meta
 
     def poll_completions(self) -> int:
         srv = self.server
+        inflight = self._inflight
+        per_flow: dict[FiveTuple, list] = {}
         n = 0
         for gid in list(srv.frontend._groups):
             for c in srv.frontend.poll_wait(gid, 0.0):
-                info = self._inflight.pop(c.request_id, None)
+                info = inflight.pop(c.request_id, None)
                 if info is None:
                     continue
                 host_flow, typ, req_id, nbytes, ack_body = info
-                srv.host_cpu_busy_s += self.HOST_NET_US * 1e-6  # response path
                 if c.error != wire.E_OK:
                     body = b""
                 elif typ == APP_READ:
                     body = c.data
                 else:
                     body = ack_body
-                resp = APP_RESP_HDR.pack(req_id, c.error, len(body)) + body
-                srv.director.host_response(host_flow, resp)
+                per_flow.setdefault(host_flow, []).append(
+                    APP_RESP_HDR.pack(req_id, c.error, len(body)) + body)
                 n += 1
+        if n:
+            srv.host_cpu_busy_s += self.HOST_NET_US * 1e-6 * n  # response path
+            for flow, batch in per_flow.items():
+                srv.director.host_response_many(flow, batch)
         return n
 
 
@@ -405,6 +450,20 @@ class DDSClient:
                 else:
                     encoded.append(encode_app_write(rid, m[1], m[2], m[3]))
         self._send(encode_batch(encoded))
+        return rids
+
+    def write_many(self, writes: list[tuple]) -> list[int]:
+        """Issue a burst of ``(file_id, offset, data)`` writes in ONE
+        network message — the write-side mirror of the cluster client's
+        ``read_many``: one rid-range reservation, one batched send."""
+        n = len(writes)
+        with self._lock:
+            first = self._next_req
+            self._next_req += n
+        rids = list(range(first, first + n))
+        self._send(encode_batch([encode_app_write(rid, fid, off, data)
+                                 for rid, (fid, off, data)
+                                 in zip(rids, writes)]))
         return rids
 
     # -- response collection ---------------------------------------------------------

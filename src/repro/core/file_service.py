@@ -35,6 +35,16 @@ Two layers live here:
     DPU-local reads, with the destination pointing into ITS pre-allocated
     packet memory instead.
 
+    * Execution is BATCHED end to end (the PR-3 host-path overhaul):
+      ``consume_batch`` drains every available ring batch under one IncHead
+      doorbell; a burst's requests are decoded inline (no per-request
+      object); adjacent same-file writes coalesce into scatter-gather
+      ``submit_writev`` runs; completions arrive through a flat
+      cookie -> slots in-flight table reaped in bulk from the device's
+      completion queue (no per-op closure); and delivery publishes a run of
+      responses with one gathered DMA write + one doorbell
+      (``publish_batch``).  See README "Host path & write model".
+
 The runner is cooperatively scheduled (``step()``) so tests and benchmarks
 are deterministic; ``start()`` wraps it in a thread for the live system.
 """
@@ -43,14 +53,16 @@ from __future__ import annotations
 
 import json
 import threading
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
 from repro.core import wire
-from repro.core.ring import DMAEngine, ProgressiveRing, Region, ResponseRing, unframe_batch, frame
-from repro.storage.blockdev import BlockDevice
+from repro.core.ring import (FRAME_HDR, DMAEngine, ProgressiveRing, Region,
+                             ResponseRing, frame, unframe_batch)
+from repro.storage.blockdev import STATUS_PENDING, BlockDevice
 
 META_SEGMENT = 0
 
@@ -276,20 +288,122 @@ class SegmentFS:
             self.device.submit_write(phys, mv[pos : pos + n], done_one)
             pos += n
 
+    # -- cookie-based data plane (closure-free burst execution) ----------------------
+    #
+    # The runner's burst pipeline uses these instead of the callback forms:
+    # completion arrives through the device's completion queue
+    # (``device.reap()``) tagged with ``cookie``.  The device completes ops
+    # of one queue IN ORDER, so a multi-run operation rides its cookie on
+    # the LAST run only — when it pops out of the completion queue every
+    # earlier run has already executed.  Returns ``wire.E_OK`` when
+    # submitted (a completion WILL arrive) or an errno when rejected
+    # synchronously (no completion follows).
+
+    def submit_read_c(self, file_id: int, offset: int, size: int,
+                      dest: memoryview, cookie: int) -> int:
+        f = self.files.get(file_id)
+        if f is None:
+            return wire.E_NOENT
+        if offset + size > f.size:
+            return wire.E_INVAL
+        seg_sz = self.segment_size
+        if size > 0 and offset // seg_sz == (offset + size - 1) // seg_sz:
+            phys = f.segments[offset // seg_sz] * seg_sz + offset % seg_sz
+            self.device.submit_read(phys, size, dest, cookie=cookie)
+            return wire.E_OK
+        if size == 0:
+            self.device.push_completion(cookie)
+            return wire.E_OK
+        runs = self.translate(file_id, offset, size)
+        pos = 0
+        last = len(runs) - 1
+        for i, (phys, n) in enumerate(runs):
+            op = self.device.submit_read(phys, n, dest[pos : pos + n],
+                                         cookie=cookie if i == last else None)
+            if op.status != STATUS_PENDING and i != last:
+                # A non-final run rejected synchronously would otherwise be
+                # invisible (its cookie-less rejection notifies no one and
+                # the final run would complete the op E_OK): fail the whole
+                # op on the cookie and submit nothing further.
+                self.device.push_completion(cookie, op.status)
+                return wire.E_OK
+            pos += n
+        return wire.E_OK
+
+    def submit_writev(self, file_id: int, offset: int, bufs: list,
+                      cookie: int) -> int:
+        """Gathered write: ``bufs`` land back to back at ``offset``.
+
+        One capacity check + one translate for the WHOLE run, then one
+        scatter-gather device submission per physical (segment-aligned)
+        run — a burst of k coalesced request payloads costs O(runs) device
+        ops instead of O(k).  Buffer views are never joined: each run's
+        slice list streams straight into the device (zero-copy).
+        """
+        total = 0
+        for b in bufs:
+            total += len(b)
+        try:
+            self.ensure_capacity(file_id, offset + total)
+            runs = self.translate(file_id, offset, total)
+        except FSError as e:
+            return e.errno
+        if not runs:
+            self.device.push_completion(cookie)
+            return wire.E_OK
+        bi = 0       # current buffer index / position for the run walk
+        bpos = 0
+        last = len(runs) - 1
+        for ri, (phys, n) in enumerate(runs):
+            chunks = []
+            need = n
+            while need > 0:
+                b = bufs[bi]
+                avail = len(b) - bpos
+                if bpos == 0 and avail <= need:
+                    chunks.append(b)          # whole buffer: no slicing at all
+                    need -= avail
+                    bi += 1
+                    continue
+                mv = b if isinstance(b, memoryview) else memoryview(b)
+                take = avail if avail <= need else need
+                chunks.append(mv[bpos : bpos + take])
+                need -= take
+                if take == avail:
+                    bi += 1
+                    bpos = 0
+                else:
+                    bpos += take
+            op = self.device.submit_writev(phys, chunks,
+                                           cookie=cookie if ri == last else None)
+            if op.status != STATUS_PENDING and ri != last:
+                # Same shared-fate rule as submit_read_c: a rejected
+                # non-final run fails the whole op on the cookie.
+                self.device.push_completion(cookie, op.status)
+                return wire.E_OK
+        return wire.E_OK
+
 
 # ---------------------------------------------------------------------------
 # The DPU-side runner for host-issued file operations.
 # ---------------------------------------------------------------------------
 
 
-@dataclass
+@dataclass(slots=True)
 class _PendingResp:
-    """A pre-allocated response slot in the DPU response buffer."""
+    """A pre-allocated response slot in the DPU response buffer.
+
+    ``done`` is the in-memory mirror of the §4.3 E_PENDING protocol: a slot
+    starts pending and flips when its response header (real error code) is
+    written by ``_finish`` — the delivery scan checks the flag instead of
+    DMA-reading the status word back out of the response buffer.
+    """
     group_id: int
     off: int           # start offset in the group's response buffer (virtual)
     size: int          # full response size (header + payload)
     request_id: int
     pad: bool = False  # wrap-padding slot: space only, never delivered
+    done: bool = False
 
 
 @dataclass
@@ -305,8 +419,8 @@ class _GroupState:
     tail_a: int = 0  # allocated
     tail_b: int = 0  # buffered (completed prefix)
     tail_c: int = 0  # delivered to host
-    pending: list[_PendingResp] = field(default_factory=list)
-    ready: list[_PendingResp] = field(default_factory=list)  # completed, undelivered
+    pending: deque = field(default_factory=deque)  # _PendingResp, alloc order
+    ready: deque = field(default_factory=deque)    # completed, undelivered
     interrupt: Callable[[], None] | None = None  # "DPU driver interrupt"
 
 
@@ -323,6 +437,9 @@ class FileServiceStats:
     request_copies: int = 0   # nonzero only with zero_copy=False
     response_copies: int = 0
     shed_requests: int = 0    # dropped under un-drained-ring overload
+    write_submits: int = 0    # gathered writev submissions issued
+    coalesced_writes: int = 0  # write requests that rode an earlier submit
+    completion_batches: int = 0  # non-empty device completion reaps
 
 
 class FileServiceRunner:
@@ -332,8 +449,8 @@ class FileServiceRunner:
                  resp_buf_size: int = 1 << 22,
                  delivery_batch: int = 1,
                  zero_copy: bool = True,
-                 cache_hook: Callable[[wire.Request], None] | None = None,
-                 invalidate_hook: Callable[[wire.Request], None] | None = None):
+                 cache_hook: Callable[[int, int, object], None] | None = None,
+                 invalidate_hook: Callable[[int, int, int], None] | None = None):
         self.fs = fs
         self.dma = dma or DMAEngine()
         self.resp_buf_size = resp_buf_size
@@ -343,9 +460,19 @@ class FileServiceRunner:
         self.invalidate_hook = invalidate_hook
         self.groups: dict[int, _GroupState] = {}
         self.stats = FileServiceStats()
+        # Flat in-flight table: completion cookie -> (group, ((slot, req), ...)).
+        # Replaces the per-op ``on_done`` lambda closures: the device's
+        # completion queue is reaped in bulk and each cookie finishes its
+        # whole run of response slots in one grouped pass.
+        self._inflight: dict[int, tuple] = {}
+        self._cookie = 1
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._lock = threading.Lock()
+        # step() may be entered from the service thread AND from a
+        # co-resident producer's ring-full on_retry (host_lib.submit_many):
+        # serialize whole steps so the pipeline never runs two consumers.
+        self._step_lock = threading.Lock()
 
     # -- registration (host lib calls this when a notification group is made) -----
     def register_group(self, group_id: int, req_ring: ProgressiveRing,
@@ -362,15 +489,17 @@ class FileServiceRunner:
     # -- cooperative scheduling -----------------------------------------------------
     def step(self) -> int:
         """One iteration: fetch -> submit -> complete -> deliver. Returns work."""
-        work = 0
-        with self._lock:
-            groups = list(self.groups.values())
-        for g in groups:
-            work += self._fetch_and_submit(g)
-        self.fs.device.poll()
-        for g in groups:
-            work += self._deliver(g)
-        return work
+        with self._step_lock:
+            work = 0
+            with self._lock:
+                groups = list(self.groups.values())
+            for g in groups:
+                work += self._fetch_and_submit(g)
+            self.fs.device.poll()
+            work += self._reap_completions()
+            for g in groups:
+                work += self._deliver(g)
+            return work
 
     def run_until_idle(self, max_iters: int = 100_000) -> None:
         idle = 0
@@ -411,29 +540,130 @@ class FileServiceRunner:
 
     # -- request path -----------------------------------------------------------------
     def _fetch_and_submit(self, g: _GroupState) -> int:
-        """Consume EVERY available batch this step (one loop, reused until
-        the ring is drained), splitting each batch zero-copy."""
-        work = 0
-        while True:
-            batch = g.req_ring.consume(self.dma)
-            if batch is None:
-                return work
+        """Consume EVERY available batch in one burst (single IncHead
+        doorbell), splitting each batch zero-copy and submitting the whole
+        decoded run through the coalescing write pipeline."""
+        batches = g.req_ring.consume_batch(self.dma)
+        for batch in batches:
             # Land the batch in the DPU request buffer (the DMA destination).
             # Size >= host ring guarantees in-flight requests never overlap.
             cap = len(g.req_buf.buf)
             pos = g.req_buf_tail % cap
-            first = min(len(batch), cap - pos)
-            g.req_buf.write(pos, batch[:first])
-            if first < len(batch):
-                g.req_buf.write(0, batch[first:])
-            g.req_buf_tail += len(batch)
-            for raw in unframe_batch(batch):
-                self._submit_one(g, wire.decode_request(raw))
-            work += 1
+            n = len(batch)
+            first = min(n, cap - pos)
+            mv = memoryview(batch)
+            g.req_buf.write(pos, mv[:first])
+            if first < n:
+                g.req_buf.write(0, mv[first:])
+            g.req_buf_tail += n
+            self._submit_burst(g, unframe_batch(batch))
+        return len(batches)
 
-    def _submit_one(self, g: _GroupState, req: wire.Request) -> None:
-        self.stats.requests += 1
-        resp_size = wire.response_size_for(req)
+    def _submit_burst(self, g: _GroupState, raws: list) -> None:
+        """Execute a burst of raw framed requests.
+
+        Headers are unpacked inline (no per-request ``Request`` object on
+        the data plane) and write payloads stay zero-copy views of the
+        consumed batch.  Adjacent same-file writes (``offset == previous
+        end``) coalesce into ONE :meth:`SegmentFS.submit_writev`
+        scatter-gather submission — each request still gets its own
+        pre-allocated response slot (acks stay per-request and ordered),
+        but a run of k appends costs one capacity check, one translate and
+        O(segment runs) device ops instead of k.  A read or control op
+        flushes the pending run first, so device submission order — and
+        therefore read-your-writes within a burst — is preserved.
+        """
+        stats = self.stats
+        stats.requests += len(raws)
+        zero_copy = self.zero_copy
+        cache_hook = self.cache_hook
+        invalidate_hook = self.invalidate_hook
+        unpack = wire.REQ_HDR.unpack_from
+        hdr_size = wire.REQ_HDR.size
+        resp_hdr_size = wire.RESP_HDR.size
+        wv_file = -1      # pending coalesced write run
+        wv_off = 0
+        wv_end = 0
+        wv_bufs: list = []
+        wv_slots: list = []
+        for raw in raws:
+            op, rid, fid, off, nbytes = unpack(raw, 0)
+            if op == wire.OP_WRITE:
+                slot = self._alloc_slot(g, rid, resp_hdr_size)
+                if slot is None:
+                    continue  # E_NOSPC backpressure, completed inline
+                data = raw[hdr_size : hdr_size + nbytes]
+                stats.writes += 1
+                stats.write_bytes += nbytes
+                if not zero_copy:
+                    data = bytes(data)  # defensive copy zero-copy mode avoids
+                    stats.request_copies += 1
+                if wv_slots and fid == wv_file and off == wv_end:
+                    wv_bufs.append(data)
+                    wv_slots.append(slot)
+                    wv_end += nbytes
+                else:
+                    if wv_slots:
+                        self._flush_writev(g, wv_file, wv_off, wv_bufs, wv_slots)
+                    wv_file, wv_off = fid, off
+                    wv_end = off + nbytes
+                    wv_bufs = [data]
+                    wv_slots = [slot]
+                if cache_hook:
+                    cache_hook(fid, off, data)  # cache-on-write (§6.1)
+                continue
+            # Reads/control ops must hit the device AFTER writes queued
+            # before them in the burst: flush the pending run first.
+            if wv_slots:
+                self._flush_writev(g, wv_file, wv_off, wv_bufs, wv_slots)
+                wv_bufs = []
+                wv_slots = []
+            if op == wire.OP_READ:
+                slot = self._alloc_slot(g, rid, resp_hdr_size + nbytes)
+                if slot is None:
+                    continue
+                stats.reads += 1
+                stats.read_bytes += nbytes
+                if not zero_copy:
+                    # Straw-man: read into scratch, copy to the response later.
+                    scratch = bytearray(nbytes)
+
+                    def on_done(err: int, g=g, slot=slot, nbytes=nbytes,
+                                scratch=scratch):
+                        if err == wire.E_OK:
+                            view = self._resp_payload_view(g, slot.off, nbytes)
+                            view[:] = scratch  # the copy zero-copy removes
+                            self.stats.response_copies += 1
+                        self._finish(g, slot, err)
+
+                    self.fs.submit_read(fid, off, nbytes,
+                                        memoryview(scratch), on_done)
+                else:
+                    dest = self._resp_payload_view(g, slot.off, nbytes)
+                    ck = self._cookie
+                    self._cookie = ck + 1
+                    err = self.fs.submit_read_c(fid, off, nbytes, dest, ck)
+                    if err != wire.E_OK:
+                        self._finish(g, slot, err)
+                    else:
+                        self._inflight[ck] = (g, (slot,))
+                if invalidate_hook:
+                    invalidate_hook(fid, off, nbytes)  # invalidate-on-read
+            else:
+                req = wire.Request(op, rid, fid, off, nbytes,
+                                   raw[hdr_size:])
+                slot = self._alloc_slot(g, rid, wire.response_size_for(req))
+                if slot is not None:
+                    self._control_op(g, slot, req)
+        if wv_slots:
+            self._flush_writev(g, wv_file, wv_off, wv_bufs, wv_slots)
+
+    def _alloc_slot(self, g: _GroupState, rid: int,
+                    resp_size: int) -> _PendingResp | None:
+        """Advance TailA over a pre-allocated response slot (§4.3).
+
+        Returns None when the response-buffer ring is out of space — the
+        request was answered inline with E_NOSPC (backpressure path)."""
         cap = len(g.resp_buf.buf)
         # Keep each response contiguous: pad TailA to the wrap boundary when
         # the slot would cross it (pad slots occupy space, deliver nothing).
@@ -441,68 +671,64 @@ class FileServiceRunner:
         if pos + resp_size > cap:
             pad = cap - pos
             if g.tail_a + pad - g.tail_c > cap:
-                self._complete_inline(g, req, wire.E_NOSPC, b"")
-                return
+                self._complete_inline(g, rid, wire.E_NOSPC, b"")
+                return None
             g.pending.append(_PendingResp(g.group_id, g.tail_a, pad,
-                                          0, pad=True))
+                                          0, pad=True, done=True))
             g.tail_a += pad
         # Backpressure: the response buffer is a ring in virtual offsets.
         if g.tail_a + resp_size - g.tail_c > cap:
-            self._complete_inline(g, req, wire.E_NOSPC, b"")
-            return
+            self._complete_inline(g, rid, wire.E_NOSPC, b"")
+            return None
         off = g.tail_a
         g.tail_a += resp_size  # pre-allocate response space (advance TailA)
-        slot = _PendingResp(g.group_id, off, resp_size, req.request_id)
+        slot = _PendingResp(g.group_id, off, resp_size, rid)
         g.pending.append(slot)
-        self._write_resp_header(g, off, req.request_id, wire.E_PENDING,
-                                resp_size - wire.RESP_HDR.size)
-        if req.op == wire.OP_READ:
-            self.stats.reads += 1
-            self.stats.read_bytes += req.nbytes
-            dest = self._resp_payload_view(g, off, req.nbytes)
-            if not self.zero_copy:
-                # Straw-man: read into a scratch buffer, copy to response later.
-                scratch = bytearray(req.nbytes)
+        return slot
 
-                def on_done(err: int, g=g, off=off, req=req, scratch=scratch):
-                    if err == wire.E_OK:
-                        view = self._resp_payload_view(g, off, req.nbytes)
-                        view[:] = scratch  # the extra copy zero-copy removes
-                        self.stats.response_copies += 1
-                    self._finish(g, off, req, err)
+    def _flush_writev(self, g: _GroupState, file_id: int, offset: int,
+                      bufs: list, slots: list) -> None:
+        """Submit a coalesced write run under ONE completion cookie."""
+        ck = self._cookie
+        self._cookie = ck + 1
+        err = self.fs.submit_writev(file_id, offset, bufs, ck)
+        if err != wire.E_OK:
+            # Rejected synchronously (no completion follows): the whole run
+            # shares the verdict — coalesced appends have a shared fate.
+            for slot in slots:
+                self._finish(g, slot, err)
+            return
+        self._inflight[ck] = (g, tuple(slots))
+        self.stats.write_submits += 1
+        self.stats.coalesced_writes += len(slots) - 1
 
-                self.fs.submit_read(req.file_id, req.offset, req.nbytes,
-                                    memoryview(scratch), on_done)
-            else:
-                self.fs.submit_read(
-                    req.file_id, req.offset, req.nbytes, dest,
-                    lambda err, g=g, off=off, req=req: self._finish(g, off, req, err))
-            if self.invalidate_hook:
-                self.invalidate_hook(req)  # invalidate-on-read (§6.1)
-        elif req.op == wire.OP_WRITE:
-            self.stats.writes += 1
-            self.stats.write_bytes += len(req.payload)
-            data = req.payload
-            if not self.zero_copy:
-                data = bytes(data)  # defensive copy the zero-copy path avoids
-                self.stats.request_copies += 1
-            self.fs.submit_write(
-                req.file_id, req.offset, data,
-                lambda err, g=g, off=off, req=req: self._finish(g, off, req, err))
-            if self.cache_hook:
-                self.cache_hook(req)  # cache-on-write (§6.1)
-        else:
-            self._control_op(g, off, req)
+    def _reap_completions(self) -> int:
+        """Batch-poll device completions into grouped ``_finish`` runs."""
+        done = self.fs.device.reap()
+        if not done:
+            return 0
+        inflight = self._inflight
+        finish = self._finish
+        for cookie, status in done:
+            g, slots = inflight.pop(cookie)
+            err = (wire.E_OK if status == 0 else
+                   wire.E_INVAL if status == wire.E_INVAL else wire.E_IO)
+            for slot in slots:
+                finish(g, slot, err)
+        self.stats.completion_batches += 1
+        return len(done)
 
-    def _control_op(self, g: _GroupState, off: int, req: wire.Request) -> None:
+    def _control_op(self, g: _GroupState, slot: _PendingResp,
+                    req: wire.Request) -> None:
         self.stats.control_ops += 1
         err, payload = wire.E_OK, b""
         try:
             if req.op == wire.OP_CREATE_FILE:
-                fid = self.fs.create_file(req.payload.decode(), req.file_id)
+                fid = self.fs.create_file(bytes(req.payload).decode(),
+                                          req.file_id)
                 payload = fid.to_bytes(4, "little")
             elif req.op == wire.OP_CREATE_DIR:
-                did = self.fs.create_dir(req.payload.decode())
+                did = self.fs.create_dir(bytes(req.payload).decode())
                 payload = did.to_bytes(4, "little")
             elif req.op == wire.OP_DELETE_FILE:
                 self.fs.delete_file(req.file_id)
@@ -517,20 +743,20 @@ class FileServiceRunner:
                 err = wire.E_INVAL
         except FSError as e:
             err = e.errno
-        expect = wire.response_size_for(req) - wire.RESP_HDR.size
+        expect = slot.size - wire.RESP_HDR.size
         payload = payload.ljust(expect, b"\x00")
-        view = self._resp_payload_view(g, off, expect)
+        view = self._resp_payload_view(g, slot.off, expect)
         view[:] = payload
-        self._finish(g, off, req, err)
+        self._finish(g, slot, err)
 
-    def _complete_inline(self, g: _GroupState, req: wire.Request, err: int,
+    def _complete_inline(self, g: _GroupState, rid: int, err: int,
                          payload: bytes, spin: int = 100_000) -> None:
         """Emergency completion bypassing pre-allocation (backpressure path).
 
         Bounded: if the host never drains its response ring, the request is
         SHED (load shedding, counted) rather than deadlocking the service
         thread — the host library surfaces the gap as a timeout."""
-        resp = wire.Response(req.request_id, err, len(payload), payload).encode()
+        resp = wire.Response(rid, err, len(payload), payload).encode()
         for _ in range(spin):
             if g.resp_ring.produce(self.dma, frame(resp)):
                 if g.interrupt:
@@ -543,7 +769,7 @@ class FileServiceRunner:
         cap = len(g.resp_buf.buf)
         pos = voff % cap
         assert pos + n <= cap, "response crosses buffer wrap (sized to avoid)"
-        return memoryview(g.resp_buf.buf)[pos : pos + n].cast("B")
+        return g.resp_buf._mv[pos : pos + n]
 
     def _resp_payload_view(self, g: _GroupState, off: int, n: int) -> memoryview:
         return self._resp_view(g, off + wire.RESP_HDR.size, n)
@@ -553,66 +779,59 @@ class FileServiceRunner:
         hdr = wire.RESP_HDR.pack(rid, err, nbytes)
         self._resp_view(g, off, wire.RESP_HDR.size)[:] = hdr
 
-    def _read_resp_error(self, g: _GroupState, off: int) -> int:
-        raw = bytes(self._resp_view(g, off, wire.RESP_HDR.size))
-        return wire.RESP_HDR.unpack(raw)[1]
-
-    def _finish(self, g: _GroupState, off: int, req: wire.Request, err: int) -> None:
-        """I/O completion: flip the pre-allocated response's status in place."""
-        n = wire.response_size_for(req) - wire.RESP_HDR.size
-        self._write_resp_header(g, off, req.request_id, err, n)
+    def _finish(self, g: _GroupState, slot: _PendingResp, err: int) -> None:
+        """I/O completion: write the final response header and flip the
+        slot's pending flag (the in-memory E_PENDING -> status transition
+        of §4.3) so the delivery scan picks it up in order."""
+        self._write_resp_header(g, slot.off, slot.request_id, err,
+                                slot.size - wire.RESP_HDR.size)
+        slot.done = True
 
     # -- delivery (TailB/TailC discipline) ------------------------------------------
     def _deliver(self, g: _GroupState) -> int:
         # Advance TailB over the contiguous completed prefix (ordered
         # execution); completed slots queue for delivery in order.
-        while g.pending:
-            slot = g.pending[0]
-            if (not slot.pad
-                    and self._read_resp_error(g, slot.off) == wire.E_PENDING):
+        pending = g.pending
+        while pending:
+            slot = pending[0]
+            if not slot.done:
                 break
-            g.pending.pop(0)
+            pending.popleft()
             g.tail_b = slot.off + slot.size
             if not slot.pad:
                 g.ready.append(slot)
         if g.tail_b - g.tail_c < self.delivery_batch or not g.ready:
             return 0
-        # One DMA write delivers as many ready responses as the host ring
-        # accepts; TailC advances to the end of the delivered prefix.
-        parts: list[bytes] = []
+        # ONE gathered DMA write + ONE doorbell deliver as many ready
+        # responses as the host ring accepts: frame headers interleave with
+        # memoryviews of the response buffer, so response bytes move exactly
+        # once (DPU response buffer -> host ring).  TailC advances to the
+        # end of the delivered prefix.
         space = g.resp_ring.free_space(self.dma)
+        parts: list = []
+        hdr_n = FRAME_HDR.size
+        pack = FRAME_HDR.pack
         used = 0
         take = 0
+        last = None
         for slot in g.ready:
-            body = bytes(self._resp_view(g, slot.off, slot.size))
-            fr = frame(body)
-            if used + len(fr) > space:
+            need = used + hdr_n + slot.size
+            if need > space:
                 break
-            parts.append(fr)
-            used += len(fr)
+            parts.append(pack(slot.size))
+            parts.append(self._resp_view(g, slot.off, slot.size))
+            used = need
             take += 1
-        if not parts:
+            last = slot
+        if not take:
             return 0  # host ring full; retry next step
-        if not g.resp_ring.produce(self.dma, b"".join(parts)):
+        if not g.resp_ring.publish_batch(self.dma, parts, used):
             return 0
-        last = g.ready[take - 1]
         g.tail_c = last.off + last.size
-        del g.ready[:take]
+        for _ in range(take):
+            g.ready.popleft()
         self.stats.response_batches += 1
         self.stats.responses_delivered += take
         if g.interrupt:
             g.interrupt()
         return 1
-
-
-def _split_responses(chunk: bytes) -> list[bytes]:
-    """Split a contiguous [TailC, TailB) range into individual responses."""
-    out = []
-    off = 0
-    n = len(chunk)
-    while off < n:
-        rid, err, nbytes = wire.RESP_HDR.unpack_from(chunk, off)
-        total = wire.RESP_HDR.size + nbytes
-        out.append(chunk[off : off + total])
-        off += total
-    return out

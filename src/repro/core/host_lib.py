@@ -17,18 +17,28 @@ encoded per Fig 9 and shipped to the DPU file service over the DMA rings of
 
 from __future__ import annotations
 
+import struct
 import threading
 from dataclasses import dataclass, field
 from typing import Sequence
 
 from repro.core import wire
 from repro.core.file_service import FileServiceRunner
-from repro.core.ring import ProgressiveRing, ResponseRing, frame, unframe_batch
+from repro.core.ring import (FRAME_HDR, ProgressiveRing, ResponseRing, frame,
+                             unframe_batch)
 
 INVALID_HANDLE = -1
 
+# Frame length + request header, packed in ONE struct call ("<I" + "<BQIQI";
+# little-endian structs concatenate without padding, so the fused bytes are
+# identical to frame-then-header).  Guard the duplication: a change to
+# either canonical struct must fail loudly here, not desync the wire.
+_FRAMED_REQ = struct.Struct(FRAME_HDR.format + wire.REQ_HDR.format.lstrip("<"))
+_REQ_SIZE = wire.REQ_HDR.size
+assert _FRAMED_REQ.size == FRAME_HDR.size + _REQ_SIZE
 
-@dataclass
+
+@dataclass(slots=True)
 class _Op:
     """Book-kept in its notification group until the completion is polled."""
     request_id: int
@@ -42,7 +52,7 @@ class _Op:
     data: bytes = b""
 
 
-@dataclass
+@dataclass(slots=True)
 class Completion:
     request_id: int
     op: int
@@ -79,28 +89,46 @@ class NotificationGroup:
             self._next_rid += 1
             return rid
 
+    def next_request_ids(self, n: int) -> int:
+        """Reserve ``n`` consecutive request ids in one lock round."""
+        with self._lock:
+            first = self._next_rid
+            self._next_rid += n
+            return first
+
+    def book_many(self, ops: list[_Op]) -> None:
+        with self._lock:
+            book = self._ops
+            for op in ops:
+                book[op.request_id] = op
+
     def _drain_ring(self) -> list[Completion]:
         got: list[Completion] = []
+        unpack = wire.RESP_HDR.unpack_from
+        hdr = wire.RESP_HDR.size
+        pop = self._ops.pop
         while True:
             claimed = self.resp_ring.try_claim()
             if claimed is None:
                 break
             _, raw = claimed
-            for msg in unframe_batch(raw):
-                resp = wire.decode_response(msg)
-                with self._lock:
-                    op = self._ops.pop(resp.request_id, None)
+            msgs = unframe_batch(raw)
+            # One header unpack per message, ONE lock round per claimed
+            # chunk to pop the whole batch's bookkeeping.
+            heads = [unpack(m, 0) for m in msgs]
+            with self._lock:
+                ops = [pop(h[0], None) for h in heads]
+            for (rid, err, nbytes), msg, op in zip(heads, msgs, ops):
                 if op is None:
                     continue  # response for an op another thread owns? (popped)
-                data = resp.payload
+                data = bytes(msg[hdr : hdr + nbytes]) if nbytes else b""
                 if op.op == wire.OP_READ and op.scatter is not None:
                     pos = 0  # scattered read: split into destination buffers
                     for buf in op.scatter:
                         n = min(len(buf), len(data) - pos)
                         buf[:n] = data[pos : pos + n]
                         pos += n
-                got.append(Completion(resp.request_id, op.op, op.file_id,
-                                      resp.error, resp.nbytes,
+                got.append(Completion(rid, op.op, op.file_id, err, nbytes,
                                       data if op.scatter is None else b""))
         return got
 
@@ -212,9 +240,10 @@ class DDSFrontEnd:
         """Non-blocking single read; returns the request id."""
         g = self._group_for(file_handle)
         rid = g.next_request_id()
-        req = wire.Request(wire.OP_READ, rid, file_handle, offset, nbytes)
         g.book(_Op(rid, wire.OP_READ, file_handle, offset, nbytes))
-        g.req_ring.insert(frame(req.encode()))
+        g.req_ring.insert_v((
+            _FRAMED_REQ.pack(_REQ_SIZE, wire.OP_READ, rid, file_handle,
+                             offset, nbytes),))
         return rid
 
     def read_file_scatter(self, file_handle: int, offset: int,
@@ -223,25 +252,93 @@ class DDSFrontEnd:
         g = self._group_for(file_handle)
         rid = g.next_request_id()
         total = sum(len(b) for b in bufs)
-        req = wire.Request(wire.OP_READ, rid, file_handle, offset, total)
         g.book(_Op(rid, wire.OP_READ, file_handle, offset, total, scatter=bufs))
-        g.req_ring.insert(frame(req.encode()))
+        g.req_ring.insert_v((
+            _FRAMED_REQ.pack(_REQ_SIZE, wire.OP_READ, rid, file_handle,
+                             offset, total),))
         return rid
 
-    def write_file(self, file_handle: int, offset: int, data: bytes) -> int:
-        """Non-blocking single write; data inlined in the request (Fig 9)."""
+    def write_file(self, file_handle: int, offset: int, data) -> int:
+        """Non-blocking single write; data inlined in the request (Fig 9).
+
+        ``data`` may be ``bytes`` or a ``memoryview``: the gathered ring
+        insert copies it exactly once — straight into the request ring (the
+        DMA source).  No defensive copy, no header+payload join."""
         g = self._group_for(file_handle)
         rid = g.next_request_id()
-        req = wire.Request(wire.OP_WRITE, rid, file_handle, offset,
-                           len(data), bytes(data))
-        g.book(_Op(rid, wire.OP_WRITE, file_handle, offset, len(data)))
-        g.req_ring.insert(frame(req.encode()))
+        n = len(data)
+        g.book(_Op(rid, wire.OP_WRITE, file_handle, offset, n))
+        g.req_ring.insert_v((
+            _FRAMED_REQ.pack(_REQ_SIZE + n, wire.OP_WRITE, rid, file_handle,
+                             offset, n),
+            data))
         return rid
+
+    def submit_many(self, ops: Sequence[tuple]) -> list[int]:
+        """Issue a burst of data-plane ops with ONE ring reservation per
+        notification group.
+
+        ``ops`` entries are ``("w", file_handle, offset, data)`` or
+        ``("r", file_handle, offset, nbytes)``.  Request ids are reserved in
+        bulk, bookkeeping is appended in bulk, and each group's messages go
+        through :meth:`ProgressiveRing.insert_burst` — one tail CAS and one
+        progress publish per burst chunk instead of per request.  Returns
+        the request ids in op order.
+        """
+        per_group: dict[int, tuple[NotificationGroup, list, list, list]] = {}
+        order: list[tuple[NotificationGroup, tuple]] = []
+        for op in ops:
+            gid = self._file_group.get(op[1], self._control_group)
+            ent = per_group.get(gid)
+            if ent is None:
+                ent = per_group[gid] = (self._groups[gid], [], [], [0])
+            ent[3][0] += 1
+            order.append((ent[0], op))
+        rid_of: dict[int, int] = {}
+        for gid, (g, msgs, books, count) in per_group.items():
+            rid_of[gid] = g.next_request_ids(count[0])
+        rids: list[int] = []
+        pack = _FRAMED_REQ.pack
+        hdr_size = _REQ_SIZE
+        for g, op in order:
+            gid = g.group_id
+            rid = rid_of[gid]
+            rid_of[gid] = rid + 1
+            rids.append(rid)
+            kind, fh, offset, arg = op
+            _, msgs, books, _n = per_group[gid]
+            if kind == "w":
+                n = len(arg)
+                books.append(_Op(rid, wire.OP_WRITE, fh, offset, n))
+                msgs.append((pack(hdr_size + n, wire.OP_WRITE, rid, fh,
+                                  offset, n), arg))
+            else:
+                books.append(_Op(rid, wire.OP_READ, fh, offset, arg))
+                msgs.append((pack(hdr_size, wire.OP_READ, rid, fh,
+                                  offset, arg),))
+        for g, msgs, books, _n in per_group.values():
+            g.book_many(books)
+            # Co-resident backpressure: when a burst chunk finds the ring
+            # full, step the DPU service so the consumer drains (a blind
+            # spin would deadlock a cooperative single-thread setup).
+            g.req_ring.insert_burst(msgs, on_retry=self.service.step)
+        return rids
 
     def write_file_gather(self, file_handle: int, offset: int,
                           bufs: Sequence[bytes]) -> int:
-        """Gathered write: an array of source buffers, one file I/O."""
-        return self.write_file(file_handle, offset, b"".join(bufs))
+        """Gathered write: an array of source buffers, one file I/O.
+
+        True scatter-gather — every buffer is copied once into the request
+        ring; they are never joined into an intermediate buffer."""
+        g = self._group_for(file_handle)
+        rid = g.next_request_id()
+        total = sum(len(b) for b in bufs)
+        g.book(_Op(rid, wire.OP_WRITE, file_handle, offset, total))
+        g.req_ring.insert_v((
+            _FRAMED_REQ.pack(_REQ_SIZE + total, wire.OP_WRITE, rid,
+                             file_handle, offset, total),
+            *bufs))
+        return rid
 
     # -- convenience synchronous wrappers (drive the co-resident service) ----------
     def _max_io(self, file_handle: int) -> int:

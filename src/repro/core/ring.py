@@ -52,25 +52,45 @@ POINTER_AREA = 3 * CACHE_LINE
 class Region:
     """A named flat memory region (host DRAM or DPU DDR)."""
 
-    __slots__ = ("name", "buf")
+    __slots__ = ("name", "buf", "_u64", "_mv")
 
     def __init__(self, name: str, size: int):
         self.name = name
         self.buf = np.zeros(size, dtype=np.uint8)
+        # Cached u64 view of the buffer: pointer slots are cache-line
+        # aligned, so u64 loads/stores index this view directly instead of
+        # re-slicing + re-viewing on every access (the rings poll pointers
+        # on every step).
+        self._u64 = self.buf.view(np.uint64) if size % 8 == 0 else None
+        # Cached byte view: memoryview slice-assignment copies straight
+        # from any bytes-like source at C speed — no numpy ufunc dispatch
+        # per (typically tiny) message copy.
+        self._mv = memoryview(self.buf)
 
     def __len__(self) -> int:
         return len(self.buf)
 
     # Local (same-side) accessors -------------------------------------------------
     def load_u64(self, off: int) -> int:
+        # fast path only for the aligned pointer slots; unaligned offsets
+        # fall through rather than silently truncating off >> 3
+        if self._u64 is not None and not off & 7:
+            return int(self._u64[off >> 3])
         return int(self.buf[off : off + 8].view(np.uint64)[0])
 
     def store_u64(self, off: int, val: int) -> None:
-        self.buf[off : off + 8].view(np.uint64)[0] = np.uint64(val)
+        if self._u64 is not None and not off & 7:
+            self._u64[off >> 3] = val
+        else:
+            self.buf[off : off + 8].view(np.uint64)[0] = np.uint64(val)
 
     def write(self, off: int, data) -> None:
+        # Zero-copy staging: bytes, bytearray and (contiguous) memoryview
+        # sources all copy straight into the backing buffer — no
+        # intermediate bytes() materialization, no numpy dispatch.
         n = len(data)
-        self.buf[off : off + n] = np.frombuffer(bytes(data), dtype=np.uint8)
+        if n:
+            self._mv[off : off + n] = data
 
     def read(self, off: int, n: int) -> bytes:
         return self.buf[off : off + n].tobytes()
@@ -138,6 +158,20 @@ class DMAEngine:
         a = struct.unpack_from("<Q", raw, 0)[0]
         b = struct.unpack_from("<Q", raw, CACHE_LINE)[0]
         return a, b
+
+    def write_gather(self, dst: Region, items) -> None:
+        """ONE accounted DMA transaction scattering ``(off, data)`` pairs.
+
+        Models an SGL descriptor: the DPU posts a single DMA covering every
+        element of a response burst, paying one PCIe transaction latency
+        for the whole scatter list instead of one per message.
+        """
+        total = 0
+        for _, d in items:
+            total += len(d)
+        self._account(False, total)
+        for off, d in items:
+            dst.write(off, d)
 
     def read_u64(self, src: Region, off: int) -> int:
         return struct.unpack("<Q", self.read(src, off, 8))[0]
@@ -211,23 +245,49 @@ class ProgressiveRing:
         # Pointers start at 0 (monotonically increasing virtual offsets).
 
     # -- producer side (host threads), Fig 8a --------------------------------
-    def try_insert(self, msg: bytes) -> str:
-        n = len(msg)
-        assert 0 < n <= self.max_progress, "message exceeds max allowable progress"
+    def _reserve(self, n: int) -> int | None:
+        """CAS-reserve ``[tail, tail+n)``; returns the old tail or None."""
         tail = self._atom.load(self.base + OFF_TAIL)
         head = self._atom.load(self.base + OFF_HEAD)
         if tail - head + n > self.max_progress:
-            return RETRY  # insertions are outpacing consumption
-        # CAS loop: reserve [tail, tail+n) on the ring.
+            return None  # insertions are outpacing consumption
         while True:
             if not self._atom.compare_and_swap(self.base + OFF_TAIL, tail, tail + n):
                 tail = self._atom.load(self.base + OFF_TAIL)
                 head = self._atom.load(self.base + OFF_HEAD)
                 if tail - head + n > self.max_progress:
-                    return RETRY
+                    return None
                 continue
-            break
+            return tail
+
+    def try_insert(self, msg: bytes) -> str:
+        n = len(msg)
+        assert 0 < n <= self.max_progress, "message exceeds max allowable progress"
+        tail = self._reserve(n)
+        if tail is None:
+            return RETRY
         self._copy_in(tail, msg)                      # lock-free data path
+        self._atom.fetch_add(self.base + OFF_PROG, n)  # publish completion
+        return OK
+
+    def try_insert_v(self, parts) -> str:
+        """Gathered insert: copy each part of ONE message straight into the
+        ring data area (wrap-aware), with a single reservation and a single
+        progress publish.  Producers build a message from (frame header,
+        request header, payload view) without ever joining them into an
+        intermediate buffer — the ring copy is the only copy the host pays
+        (§4.2: write data is inlined into the request, Fig 9)."""
+        n = 0
+        for p in parts:
+            n += len(p)
+        assert 0 < n <= self.max_progress, "message exceeds max allowable progress"
+        tail = self._reserve(n)
+        if tail is None:
+            return RETRY
+        voff = tail
+        for p in parts:
+            self._copy_in(voff, p)
+            voff += len(p)
         self._atom.fetch_add(self.base + OFF_PROG, n)  # publish completion
         return OK
 
@@ -236,6 +296,60 @@ class ProgressiveRing:
             if self.try_insert(msg) == OK:
                 return
         raise TimeoutError(f"ring {self.name}: insert retry budget exhausted")
+
+    def insert_v(self, parts, spin: int = 1_000_000) -> None:
+        for _ in range(spin):
+            if self.try_insert_v(parts) == OK:
+                return
+        raise TimeoutError(f"ring {self.name}: insert retry budget exhausted")
+
+    def insert_burst(self, msgs: list, spin: int = 1_000_000,
+                     on_retry=None) -> None:
+        """Insert a burst of gathered messages with ONE reservation.
+
+        ``msgs`` is a list of part-tuples (each a complete framed message).
+        The tail CAS and the progress publish are paid once per contiguous
+        chunk instead of once per message — the §4.1 batching effect applied
+        to the producer side.  Bursts larger than ``max_progress`` fall back
+        to chunking: each chunk is reserved and published atomically, so
+        consumers always see whole messages and FIFO order is preserved.
+
+        ``on_retry`` is invoked when a reservation fails (ring full) —
+        co-resident callers pass the DPU service's ``step`` so the consumer
+        actually drains between retries instead of a blind spin.
+        """
+        i = 0
+        n_msgs = len(msgs)
+        while i < n_msgs:
+            total = 0
+            j = i
+            while j < n_msgs:
+                sz = 0
+                for p in msgs[j]:
+                    sz += len(p)
+                if total and total + sz > self.max_progress:
+                    break
+                total += sz
+                j += 1
+            assert total <= self.max_progress, \
+                "single message exceeds max allowable progress"
+            tail = None
+            for _ in range(spin):
+                tail = self._reserve(total)
+                if tail is not None:
+                    break
+                if on_retry is not None:
+                    on_retry()
+            if tail is None:
+                raise TimeoutError(
+                    f"ring {self.name}: insert retry budget exhausted")
+            voff = tail
+            for k in range(i, j):
+                for p in msgs[k]:
+                    self._copy_in(voff, p)
+                    voff += len(p)
+            self._atom.fetch_add(self.base + OFF_PROG, total)
+            i = j
 
     def _copy_in(self, voff: int, msg: bytes) -> None:
         cap = self.capacity
@@ -261,6 +375,31 @@ class ProgressiveRing:
         # keep the atomics view coherent for local producers
         self._atom.store(self.base + OFF_HEAD, tail)
         return batch
+
+    def consume_batch(self, dma: DMAEngine, max_rounds: int = 8) -> list[bytes]:
+        """Burst consume: drain every available ``[head, tail)`` batch and
+        publish ONE IncHead doorbell for the whole burst.
+
+        Each round still pays the single progress/tail pair read (Fig 8b
+        line 1 — that read is the poll), but the consumption publish — the
+        DMA write producers wait on — is issued once per burst instead of
+        once per batch, and the consumer-side head bookkeeping is local
+        until then.  Returns the list of raw batches (possibly empty).
+        """
+        head = self._atom.load(self.base + OFF_HEAD)  # consumer-owned
+        start = head
+        batches: list[bytes] = []
+        for _ in range(max_rounds):
+            prog, tail = dma.read_u64_pair(self.host, self.base + OFF_PROG)
+            if prog != tail or tail == head:
+                break  # some producer mid-insert, or nothing new
+            batches.append(self._dma_read_range(dma, head, tail - head))
+            head = tail
+        if head != start:
+            # One doorbell covers every batch consumed this burst.
+            dma.write_u64(self.host, self.base + OFF_HEAD, head)
+            self._atom.store(self.base + OFF_HEAD, head)
+        return batches
 
     def _dma_read_range(self, dma: DMAEngine, voff: int, n: int) -> bytes:
         cap = self.capacity
@@ -326,6 +465,45 @@ class ResponseRing:
             dma.write(self.host, self._data0, batch[first:])
         dma.write_u64(self.host, self.base + OFF_TAIL, tail + n)
         self._atom.store(self.base + OFF_TAIL, tail + n)
+        return True
+
+    def publish_batch(self, dma: DMAEngine, parts, total: int | None = None) -> bool:
+        """Deliver a burst of response fragments with ONE gathered DMA write
+        and ONE tail doorbell.
+
+        ``parts`` is a flat sequence of bytes-like fragments (frame headers
+        interleaved with response-buffer memoryviews); nothing is joined or
+        copied on the DPU side — each fragment lands straight in the host
+        ring (the response DMA is the only copy).  All-or-nothing: returns
+        False without side effects when the burst exceeds free space.
+        """
+        if total is None:
+            total = 0
+            for p in parts:
+                total += len(p)
+        if total == 0:
+            return True
+        if self.free_space(dma) < total:
+            return False
+        tail = self._atom.load(self.base + OFF_TAIL)
+        cap = self.capacity
+        data0 = self._data0
+        items = []
+        voff = tail
+        for p in parts:
+            n = len(p)
+            pos = voff % cap
+            first = min(n, cap - pos)
+            if first == n:
+                items.append((data0 + pos, p))
+            else:  # fragment wraps the ring
+                mv = p if isinstance(p, memoryview) else memoryview(p)
+                items.append((data0 + pos, mv[:first]))
+                items.append((data0, mv[first:]))
+            voff += n
+        dma.write_gather(self.host, items)   # one accounted DMA transaction
+        dma.write_u64(self.host, self.base + OFF_TAIL, tail + total)  # doorbell
+        self._atom.store(self.base + OFF_TAIL, tail + total)
         return True
 
     # -- host consumers ---------------------------------------------------------

@@ -126,6 +126,11 @@ class Wire:
         with self._lock:
             self._q.append(pkt)
 
+    def push_many(self, pkts: list[Packet]) -> None:
+        """Append a burst under a single lock round."""
+        with self._lock:
+            self._q.extend(pkts)
+
     def pop(self) -> Packet | None:
         with self._lock:
             return self._q.popleft() if self._q else None
@@ -362,8 +367,8 @@ class TrafficDirector:
             # Stage 2: the offload predicate inspects the payload (zero-copy:
             # the predicate sees the packet buffer itself, never a copy).
             host_msgs, dpu_msgs = self.off_pred(pkt.payload, self.cache_table)
-            for m in host_msgs:
-                self._send_to_host(conn, pkt.flow, m)
+            if host_msgs:
+                self._send_to_host_many(conn, pkt.flow, host_msgs)
             if dpu_msgs:
                 to_dpu += len(dpu_msgs)
                 flow = pkt.flow
@@ -391,6 +396,22 @@ class TrafficDirector:
         self.stats.to_host += 1
         self.stats.modeled_time_s += ARM_FORWARD_LATENCY_S
 
+    def _send_to_host_many(self, conn: _PEPConnection, client_flow: FiveTuple,
+                           msgs: list) -> None:
+        """Burst form of ``_send_to_host``: each message still becomes its
+        own packet on the split connection (same protocol, same per-message
+        modeled Arm forwarding cost), but the wire is taken once."""
+        host_flow = self._host_flow_of[client_flow]
+        seq = conn.host_next_seq
+        pkts = []
+        for m in msgs:
+            pkts.append(Packet(host_flow, seq, m))
+            seq += len(m)
+        conn.host_next_seq = seq
+        self.to_host.push_many(pkts)
+        self.stats.to_host += len(msgs)
+        self.stats.modeled_time_s += ARM_FORWARD_LATENCY_S * len(msgs)
+
     # -- response paths -----------------------------------------------------------------
     def host_response(self, host_flow: FiveTuple, msg: bytes) -> None:
         """A response from the host app on the second connection.
@@ -401,6 +422,24 @@ class TrafficDirector:
         client_flow = self._client_flow_of.get(host_flow, host_flow)
         self._respond_to_client(client_flow, msg)
         self.stats.resp_from_host += 1
+
+    def host_response_many(self, host_flow: FiveTuple, msgs: list) -> None:
+        """A burst of host responses for ONE split connection.
+
+        Sequence numbers are stamped in one pass and the packets enqueued
+        on the client's demuxed queue under a single lock round — the
+        response-side mirror of ``dpu_response``'s burst handling."""
+        client_flow = self._client_flow_of.get(host_flow, host_flow)
+        conn = self._conn(client_flow)
+        resp_flow = conn.resp_flow
+        seq = conn.client_resp_seq
+        pkts = []
+        for msg in msgs:
+            pkts.append(Packet(resp_flow, seq, msg))
+            seq += len(msg)
+        conn.client_resp_seq = seq
+        self.to_client.push_many(resp_flow, pkts)
+        self.stats.resp_from_host += len(msgs)
 
     def dpu_response(self, client_flow: FiveTuple, packets: list[Packet],
                      responses: int = 1) -> None:
@@ -428,14 +467,19 @@ class TrafficDirector:
         conn.client_resp_seq += len(msg)
 
     def drain_host_wire(self, deliver: Callable[[FiveTuple, bytes], None]) -> int:
-        """Pump packets that crossed to the host into the host application."""
+        """Pump packets that crossed to the host into the host application.
+
+        Payloads are handed over as-is (possibly ``memoryview`` slices of
+        the client's packet buffer): whether to materialize is the host
+        application's call — the write path rides views all the way into
+        the request ring (zero-copy end to end)."""
         n = 0
         while True:
             pkts = self.to_host.pop_many(64)
             if not pkts:
                 return n
             for pkt in pkts:
-                deliver(pkt.flow, bytes(pkt.payload))
+                deliver(pkt.flow, pkt.payload)
             n += len(pkts)
 
 

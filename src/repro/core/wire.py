@@ -40,27 +40,35 @@ REQ_HDR = struct.Struct("<BQIQI")
 RESP_HDR = struct.Struct("<QII")
 
 
-@dataclass
+@dataclass(slots=True)
 class Request:
     op: int
     request_id: int
     file_id: int
     offset: int
     nbytes: int
-    payload: bytes = b""
+    payload: bytes | memoryview = b""
 
     def encode(self) -> bytes:
-        return REQ_HDR.pack(self.op, self.request_id, self.file_id,
-                            self.offset, self.nbytes) + self.payload
+        # join() accepts memoryview payloads without materializing them first
+        return b"".join((REQ_HDR.pack(self.op, self.request_id, self.file_id,
+                                      self.offset, self.nbytes), self.payload))
 
 
 def decode_request(raw: bytes | memoryview) -> Request:
+    """Decode a request; the payload stays a zero-copy view of ``raw``.
+
+    The consumer's whole-batch DMA read owns the bytes; write payloads ride
+    as ``memoryview`` slices all the way into ``submit_writev`` (§4.3
+    "Eliminating data copies").  Callers needing ``str``/hashable payloads
+    (control ops) materialize explicitly.
+    """
     op, rid, fid, off, nbytes = REQ_HDR.unpack_from(raw, 0)
-    payload = bytes(raw[REQ_HDR.size:])
+    payload = (raw if isinstance(raw, memoryview) else memoryview(raw))[REQ_HDR.size:]
     return Request(op, rid, fid, off, nbytes, payload)
 
 
-@dataclass
+@dataclass(slots=True)
 class Response:
     request_id: int
     error: int

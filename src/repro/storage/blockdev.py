@@ -36,13 +36,14 @@ STATUS_EIO = 5
 
 @dataclass(slots=True)
 class IoOp:
-    kind: str                      # "read" | "write"
+    kind: str                      # "read" | "write" | "writev"
     lba: int                       # byte offset on device
     nbytes: int
-    buf: memoryview | bytes | None
+    buf: memoryview | bytes | list | None   # writev: list of buffer views
     on_complete: Callable[[int], None] | None
     status: int = STATUS_PENDING
     modeled_done_s: float = 0.0
+    cookie: int | None = None      # completion-queue tag (see ``reap``)
 
 
 @dataclass
@@ -71,7 +72,9 @@ class BlockDevice:
         self.bandwidth_Bps = bandwidth_Bps
         self.queue_depth = queue_depth
         self._mem = np.zeros(capacity, dtype=np.uint8)
+        self._memv = memoryview(self._mem)  # C-speed byte copies in poll()
         self._queue: deque[IoOp] = deque()
+        self._cookie_done: list[tuple[int, int]] = []  # completion queue
         self._lock = threading.Lock()
         self._clock_s = 0.0  # modeled device clock
         self.stats = BlockDeviceStats()
@@ -79,13 +82,19 @@ class BlockDevice:
     # -- submission --------------------------------------------------------------
     # deque.append is atomic under the GIL; poll() still serializes the
     # claim of completion bursts, so submission needs no lock round.
-    def submit_read(self, lba: int, nbytes: int, dest: memoryview,
-                    on_complete: Callable[[int], None] | None = None) -> IoOp:
-        op = IoOp("read", lba, nbytes, dest, on_complete)
-        if lba < 0 or lba + nbytes > self.capacity:
+    #
+    # Completion delivery is either a per-op ``on_complete`` callback OR a
+    # ``cookie``: cookie-tagged completions are queued and handed back in
+    # bulk by ``reap()`` — the NVMe completion-queue shape, which lets the
+    # file service process a whole burst of completions without a Python
+    # closure per submitted op.
+    def _enqueue(self, op: IoOp) -> IoOp:
+        if op.lba < 0 or op.lba + op.nbytes > self.capacity:
             op.status = STATUS_EINVAL
-            if on_complete:
-                on_complete(STATUS_EINVAL)
+            if op.on_complete:
+                op.on_complete(STATUS_EINVAL)
+            elif op.cookie is not None:
+                self._cookie_done.append((op.cookie, STATUS_EINVAL))
             return op
         q = self._queue
         q.append(op)
@@ -94,19 +103,36 @@ class BlockDevice:
             self.stats.max_queue_depth_seen = d
         return op
 
-    def submit_write(self, lba: int, data, on_complete: Callable[[int], None] | None = None) -> IoOp:
-        op = IoOp("write", lba, len(data), data, on_complete)
-        if lba < 0 or lba + op.nbytes > self.capacity:
-            op.status = STATUS_EINVAL
-            if on_complete:
-                on_complete(STATUS_EINVAL)
-            return op
-        q = self._queue
-        q.append(op)
-        d = len(q)
-        if d > self.stats.max_queue_depth_seen:
-            self.stats.max_queue_depth_seen = d
-        return op
+    def submit_read(self, lba: int, nbytes: int, dest: memoryview,
+                    on_complete: Callable[[int], None] | None = None,
+                    cookie: int | None = None) -> IoOp:
+        return self._enqueue(IoOp("read", lba, nbytes, dest, on_complete,
+                                  cookie=cookie))
+
+    def submit_write(self, lba: int, data,
+                     on_complete: Callable[[int], None] | None = None,
+                     cookie: int | None = None) -> IoOp:
+        return self._enqueue(IoOp("write", lba, len(data), data, on_complete,
+                                  cookie=cookie))
+
+    def submit_writev(self, lba: int, bufs: list,
+                      on_complete: Callable[[int], None] | None = None,
+                      cookie: int | None = None) -> IoOp:
+        """Scatter-gather write: one device op covering ``bufs`` back to back.
+
+        Models an NVMe SGL submission — one queue entry (one base latency)
+        for a run of coalesced buffers; bytes stream from each view without
+        an intermediate join.
+        """
+        nbytes = 0
+        for b in bufs:
+            nbytes += len(b)
+        return self._enqueue(IoOp("writev", lba, nbytes, bufs, on_complete,
+                                  cookie=cookie))
+
+    def push_completion(self, cookie: int, status: int = STATUS_OK) -> None:
+        """Synchronous completion for ops with no device work (empty I/O)."""
+        self._cookie_done.append((cookie, status))
 
     def queue_len(self) -> int:
         with self._lock:
@@ -130,22 +156,34 @@ class BlockDevice:
         # Inline completion loop: per-op stats folded into one update.
         stats = self.stats
         mem = self._mem
+        memv = self._memv
         clock = self._clock_s
         inv_bw = 1.0 / self.bandwidth_Bps
         rlat, wlat = self.read_latency_s, self.write_latency_s
         reads = writes = read_bytes = write_bytes = 0
+        cookie_done = self._cookie_done
         for op in ops:
             n = op.nbytes
-            if op.kind == "read":
+            kind = op.kind
+            if kind == "read":
                 clock += rlat + n * inv_bw
                 # Write straight into the caller's view (zero-copy contract)
                 op.buf[:n] = mem[op.lba : op.lba + n]
                 reads += 1
                 read_bytes += n
-            else:
+            elif kind == "write":
                 clock += wlat + n * inv_bw
-                mem[op.lba : op.lba + n] = np.frombuffer(
-                    bytes(op.buf), dtype=np.uint8)
+                # Read straight from the caller's buffer view (zero-copy)
+                memv[op.lba : op.lba + n] = op.buf
+                writes += 1
+                write_bytes += n
+            else:  # writev: one op, bytes streamed from each gathered view
+                clock += wlat + n * inv_bw
+                pos = op.lba
+                for b in op.buf:
+                    ln = len(b)
+                    memv[pos : pos + ln] = b
+                    pos += ln
                 writes += 1
                 write_bytes += n
             op.modeled_done_s = clock
@@ -153,6 +191,8 @@ class BlockDevice:
             cb = op.on_complete
             if cb:
                 cb(STATUS_OK)
+            elif op.cookie is not None:
+                cookie_done.append((op.cookie, STATUS_OK))
         self._clock_s = clock
         stats.modeled_busy_s = clock
         stats.reads += reads
@@ -160,6 +200,14 @@ class BlockDevice:
         stats.read_bytes += read_bytes
         stats.write_bytes += write_bytes
         return k
+
+    def reap(self) -> list[tuple[int, int]]:
+        """Drain the cookie completion queue: ``[(cookie, status), ...]``."""
+        out = self._cookie_done
+        if not out:
+            return out
+        self._cookie_done = []
+        return out
 
     def drain(self) -> None:
         while self.poll(1_000_000):

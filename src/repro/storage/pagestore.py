@@ -230,7 +230,8 @@ class KVStoreServer:
         """GETs for tail-resident records execute on the host (§9.2/§2)."""
         if msg and msg[0] == KV_GET:
             _, req_id, klen = KV_GET_HDR.unpack_from(msg, 0)
-            key = msg[KV_GET_HDR.size : KV_GET_HDR.size + klen]
+            # msg may be a zero-copy view; dict keys must be real bytes
+            key = bytes(msg[KV_GET_HDR.size : KV_GET_HDR.size + klen])
             with self._lock:
                 val = self._tail.get(key)
             if val is not None:
