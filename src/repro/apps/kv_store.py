@@ -113,14 +113,28 @@ class ShardedKVStore:
         st = self._states[shard]
 
         def off_pred(payload: bytes, table) -> tuple[list[bytes], list[bytes]]:
-            host, dpu = [], []
-            for m in decode_batch(payload):
+            """Route a network batch: cached GETs -> DPU, the rest -> host.
+
+            The whole batch's GET keys are probed with ONE
+            :meth:`~repro.core.cache_table.CacheTable.lookup_many` burst
+            (single stats round) instead of a lock/stats round per key;
+            relative message order within each output list is preserved
+            (PUT-then-DEL of one key must reach the host in order)."""
+            msgs = decode_batch(payload)
+            # decode_batch hands out memoryviews; the cache table needs a
+            # hashable key, so materialize ONLY the keys.
+            keys = []
+            hdr = GET_HDR.size
+            for m in msgs:
                 if m and m[0] == KV_GET:
-                    _, rid, klen = GET_HDR.unpack_from(m, 0)
-                    # decode_batch hands out memoryviews; the cache table
-                    # needs a hashable key, so materialize ONLY the key.
-                    key = bytes(m[GET_HDR.size : GET_HDR.size + klen])
-                    if table is not None and table.lookup(key) is not None:
+                    klen = GET_HDR.unpack_from(m, 0)[2]
+                    keys.append(bytes(m[hdr : hdr + klen]))
+            hits = iter(table.lookup_many(keys)) if (table is not None and keys) \
+                else iter(())
+            host, dpu = [], []
+            for m in msgs:
+                if m and m[0] == KV_GET and table is not None:
+                    if next(hits) is not None:
                         dpu.append(m)
                         continue
                 host.append(m)
@@ -304,6 +318,27 @@ class KVClient:
     def delete(self, key: bytes) -> int:
         return self.net.send_raw(self._shard(key),
                                  lambda rid: encode_del(rid, key))
+
+    # -- burst issue (mirrors ClusterClient.read_many/write_many) ---------------------
+    def _send_many(self, keys: list, encode) -> list[int]:
+        shard = self._shard
+        return self.net.issue_many([shard(k) for k in keys],
+                                   lambda rid, i: encode(rid, keys[i]))
+
+    def get_many(self, keys: list) -> list[int]:
+        """Issue a burst of GETs: one rid-range reservation, no per-op
+        closure — the KV mirror of the cluster client's ``read_many``."""
+        return self._send_many(keys, encode_get)
+
+    def delete_many(self, keys: list) -> list[int]:
+        return self._send_many(keys, encode_del)
+
+    def put_many(self, items: list) -> list[int]:
+        """Issue a burst of ``(key, value)`` PUTs in one pass."""
+        shard = self._shard
+        return self.net.issue_many(
+            [shard(k) for k, _ in items],
+            lambda rid, i: encode_put(rid, items[i][0], items[i][1]))
 
     # -- scheduling + typed waits -----------------------------------------------------
     def flush(self) -> int:

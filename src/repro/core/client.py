@@ -51,6 +51,7 @@ class ShardConnection:
         self._rx = bytearray()
         self.arrival_order: list[int] = []   # req ids in response order
         server.director.ingress.push(Packet(self.flow, 0, b"", flags=FLAG_SYN))
+        server.signal()
         server.director.step()
 
     def enqueue(self, msg: bytes) -> None:
@@ -65,6 +66,7 @@ class ShardConnection:
         self._pending.clear()
         self.server.director.ingress.push(Packet(self.flow, self._seq, payload))
         self._seq += len(payload)
+        self.server.signal()   # client send: mark the target shard runnable
         return n
 
     def collect(self, responses: dict[int, tuple[int, bytes]]) -> int:
@@ -103,16 +105,56 @@ class ClusterClient:
         self._next_rid = 1
         self._rid_shard: dict[int, int] = {}
         self._outstanding = 0          # issued, response not yet collected
+        # Per-shard issued-minus-collected counts: ``poll`` harvests ONLY
+        # shards with outstanding requests, and ``flush`` visits only dirty
+        # (buffered-but-unsent) connections — client-side mirrors of the
+        # cluster's ready-set scheduling, so idle shards cost nothing.
+        self._shard_outstanding = [0] * len(self.conns)
+        self._dirty: list[int] = []    # shard indices with pending messages
+        self._dirty_flag = [False] * len(self.conns)
         self._lock = threading.Lock()
         self.responses: dict[int, tuple[int, bytes]] = {}
         self.stats = ClientStats()
 
     # -- request issue (buffered until the next flush/pump) -------------------------
+    def _enqueue(self, shard: int, msg: bytes) -> None:
+        self.conns[shard].enqueue(msg)
+        if not self._dirty_flag[shard]:
+            self._dirty_flag[shard] = True
+            self._dirty.append(shard)
+
+    def reserve_rids(self, shards: list[int]) -> list[int]:
+        """Reserve one rid per target shard in ONE lock round.
+
+        The shared bulk-issue path under :meth:`read_many`/:meth:`write_many`
+        and application burst clients (e.g. the KV store's ``get_many``):
+        rid range, outstanding counters and the rid->shard map are all
+        updated in bulk, so a pipeline round of thousands of requests skips
+        the per-call lock + dict churn."""
+        n = len(shards)
+        rid_shard = self._rid_shard
+        with self._lock:
+            # The per-shard counters gate response harvesting (poll skips
+            # shards reading 0), so their updates stay under the client
+            # lock — a lost `+= 1` against a concurrent poll() decrement
+            # would park a shard with a response still queued.
+            first = self._next_rid
+            self._next_rid += n
+            self._outstanding += n
+            outs = self._shard_outstanding
+            rids = list(range(first, first + n))
+            for rid, shard in zip(rids, shards):
+                rid_shard[rid] = shard
+                outs[shard] += 1
+        self.stats.requests += n
+        return rids
+
     def _rid(self, shard: int) -> int:
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
             self._outstanding += 1
+            self._shard_outstanding[shard] += 1
         self._rid_shard[rid] = shard
         self.stats.requests += 1
         return rid
@@ -120,78 +162,80 @@ class ClusterClient:
     def read(self, gfid: int, offset: int, nbytes: int) -> int:
         loc = self.cluster.locate(gfid)
         rid = self._rid(loc.shard)
-        self.conns[loc.shard].enqueue(
-            encode_app_read(rid, loc.local_fid, offset, nbytes))
+        self._enqueue(loc.shard,
+                      encode_app_read(rid, loc.local_fid, offset, nbytes))
         return rid
 
     def read_many(self, reads: list[tuple[int, int, int]]) -> list[int]:
-        """Issue a burst of ``(gfid, offset, nbytes)`` reads in one pass.
-
-        The §8.1 driver issues thousands of requests per pipeline round; a
-        per-call lock + dict update per request is pure overhead, so the rid
-        range is reserved once and per-shard bookkeeping is appended in bulk.
-        """
+        """Issue a burst of ``(gfid, offset, nbytes)`` reads in one pass."""
         locate = self.cluster.locate
-        conns = self.conns
-        rid_shard = self._rid_shard
-        n = len(reads)
-        with self._lock:
-            first = self._next_rid
-            self._next_rid += n
-            self._outstanding += n
-        rids = list(range(first, first + n))
-        for rid, (gfid, offset, nbytes) in zip(rids, reads):
-            loc = locate(gfid)
-            rid_shard[rid] = loc.shard
-            conns[loc.shard].enqueue(
-                encode_app_read(rid, loc.local_fid, offset, nbytes))
-        self.stats.requests += n
+        locs = [locate(gfid) for gfid, _, _ in reads]
+        rids = self.reserve_rids([loc.shard for loc in locs])
+        enqueue = self._enqueue
+        for rid, loc, (_, offset, nbytes) in zip(rids, locs, reads):
+            enqueue(loc.shard,
+                    encode_app_read(rid, loc.local_fid, offset, nbytes))
         return rids
 
     def write(self, gfid: int, offset: int, data: bytes) -> int:
         loc = self.cluster.locate(gfid)
         rid = self._rid(loc.shard)
-        self.conns[loc.shard].enqueue(
-            encode_app_write(rid, loc.local_fid, offset, data))
+        self._enqueue(loc.shard,
+                      encode_app_write(rid, loc.local_fid, offset, data))
         return rid
 
     def write_many(self, writes: list[tuple[int, int, bytes]]) -> list[int]:
         """Issue a burst of ``(gfid, offset, data)`` writes in one pass.
 
-        Mirrors :meth:`read_many`: the rid range is reserved once and
-        per-shard bookkeeping appended in bulk, so a pipeline round of
-        thousands of writes skips the per-call lock + dict churn.  Writes
-        to one shard keep issue order, which the coalescing file service
-        turns into adjacent scatter-gather runs."""
+        Mirrors :meth:`read_many`.  Writes to one shard keep issue order,
+        which the coalescing file service turns into adjacent
+        scatter-gather runs."""
         locate = self.cluster.locate
-        conns = self.conns
-        rid_shard = self._rid_shard
-        n = len(writes)
-        with self._lock:
-            first = self._next_rid
-            self._next_rid += n
-            self._outstanding += n
-        rids = list(range(first, first + n))
-        for rid, (gfid, offset, data) in zip(rids, writes):
-            loc = locate(gfid)
-            rid_shard[rid] = loc.shard
-            conns[loc.shard].enqueue(
-                encode_app_write(rid, loc.local_fid, offset, data))
-        self.stats.requests += n
+        locs = [locate(gfid) for gfid, _, _ in writes]
+        rids = self.reserve_rids([loc.shard for loc in locs])
+        enqueue = self._enqueue
+        for rid, loc, (_, offset, data) in zip(rids, locs, writes):
+            enqueue(loc.shard,
+                    encode_app_write(rid, loc.local_fid, offset, data))
         return rids
 
     def send_raw(self, shard: int, build_msg: Callable[[int], bytes]) -> int:
         """Route an application-defined message to an explicit shard."""
         rid = self._rid(shard)
-        self.conns[shard].enqueue(build_msg(rid))
+        self._enqueue(shard, build_msg(rid))
         return rid
+
+    def issue_many(self, shards: list[int],
+                   build_msg: Callable[[int, int], bytes]) -> list[int]:
+        """Burst form of :meth:`send_raw`: the PUBLIC bulk-issue path for
+        application clients (e.g. the KV store's ``get_many``).
+
+        ``build_msg(rid, i)`` encodes the i-th message with its reserved
+        request id.  One rid-range reservation covers the whole burst, and
+        enqueueing stays inside this class so the dirty-connection and
+        per-shard outstanding bookkeeping cannot be bypassed."""
+        rids = self.reserve_rids(shards)
+        enqueue = self._enqueue
+        for i, (rid, shard) in enumerate(zip(rids, shards)):
+            enqueue(shard, build_msg(rid, i))
+        return rids
 
     # -- pipelined scheduling ---------------------------------------------------------
     def flush(self) -> int:
-        """Send one batched message per shard with buffered requests."""
+        """Send one batched message per DIRTY shard with buffered requests.
+
+        Only connections that actually buffered messages since the last
+        flush are visited (and their shards doorbell-signaled through
+        ``ShardConnection.flush``) — on a 16-shard cluster with skewed
+        traffic the old every-conn scan was pure idle cost."""
+        if not self._dirty:
+            return 0
         sent = 0
-        for conn in self.conns:
-            n = conn.flush()
+        dirty, self._dirty = self._dirty, []
+        flags = self._dirty_flag
+        for i in dirty:
+            flags[i] = False
+            n = self.conns[i].flush()
             if n:
                 self.stats.batches_sent += 1
                 self.stats.messages_sent += n
@@ -207,34 +251,65 @@ class ClusterClient:
     def poll(self) -> int:
         """Drain THIS client's responses without stepping the cluster.
 
-        With several clients sharing a cluster, one driver pumps the shards
-        once per scheduling round and every client just polls its own
-        demuxed flows — instead of each client re-stepping all N servers."""
-        before = len(self.responses)
-        for conn in self.conns:
-            conn.collect(self.responses)
-        got = len(self.responses) - before
-        self.stats.responses += got
-        self._outstanding -= got
+        Harvests ONLY shards with outstanding requests (the per-shard
+        issued-minus-collected counters): with several clients sharing a
+        16-shard cluster, a client with traffic on two shards no longer
+        peeks the other fourteen demuxed queues on every scheduling round.
+        """
+        responses = self.responses
+        got = 0
+        outs = self._shard_outstanding
+        collected: list[tuple[int, int]] = []
+        for i, conn in enumerate(self.conns):
+            if not outs[i]:
+                continue
+            before = len(responses)
+            conn.collect(responses)
+            n = len(responses) - before
+            if n:
+                collected.append((i, n))
+                got += n
+        if got:
+            # Decrement under the issue lock: `-=` is read-modify-write,
+            # and racing a concurrent issuer's increment could lose one and
+            # park the shard (poll would skip it forever).
+            with self._lock:
+                for i, n in collected:
+                    outs[i] -= n
+                self._outstanding -= got
+            self.stats.responses += got
         return got
 
     def outstanding(self) -> int:
         """Issued-but-unanswered requests — an O(1) counter, not a dict scan."""
         return self._outstanding
 
+    def _drain_busy_devices(self) -> None:
+        """Settle device backlogs — only on shards whose device is busy
+        (the old every-shard ``drain()`` was an idle-cost sweep)."""
+        for srv in self.cluster.servers:
+            if srv.device.busy():
+                srv.device.drain()
+
     def run_until_idle(self, max_iters: int = 200_000) -> None:
+        """Converge on ready-set emptiness + no outstanding requests.
+
+        ``pump() == 0`` already certifies no shard is runnable or busy (the
+        cluster verifies ``busy()`` on an empty ready set), so the common
+        exit is a single zero-work round — no idle sweeps.  The bounded
+        idle escape survives only for genuinely unanswerable requests
+        (e.g. shed under overload)."""
         idle = 0
         for _ in range(max_iters):
-            if self.pump() == 0:
-                for srv in self.cluster.servers:
-                    srv.device.drain()
-                idle += 1
-                if idle >= 3 and self.outstanding() == 0:
-                    return
-                if idle >= 8:
-                    return  # idle with requests genuinely unanswerable
-            else:
+            if self.pump():
                 idle = 0
+                continue
+            if self.outstanding() == 0:
+                return
+            self._drain_busy_devices()
+            idle += 1
+            if idle >= 8:
+                return  # idle with requests genuinely unanswerable
         raise TimeoutError("cluster client did not go idle")
 
     # -- response access ----------------------------------------------------------------
@@ -244,8 +319,7 @@ class ClusterClient:
                 self._rid_shard.pop(rid, None)
                 return self.responses.pop(rid)
             if self.pump() == 0:
-                for srv in self.cluster.servers:
-                    srv.device.drain()
+                self._drain_busy_devices()
         raise TimeoutError(f"no response for request {rid}")
 
     def wait_many(self, rids: list[int],
@@ -254,7 +328,9 @@ class ClusterClient:
 
         Pumps once per iteration while collecting every arrived rid — the
         old serial per-rid ``wait`` loop head-of-line blocked on the first
-        rid even when later rids (on other shards) had long completed."""
+        rid even when later rids (on other shards) had long completed.
+        Harvesting rides ``poll``'s outstanding-only scan, so only shards
+        that still owe responses are touched."""
         got: dict[int, tuple[int, bytes]] = {}
         pending = set(rids)
         pending -= self._harvest(pending, got)
@@ -262,8 +338,7 @@ class ClusterClient:
             if not pending:
                 return {rid: got[rid] for rid in rids}  # caller's order
             if self.pump() == 0:
-                for srv in self.cluster.servers:
-                    srv.device.drain()
+                self._drain_busy_devices()
             pending -= self._harvest(pending, got)
         raise TimeoutError(f"no response for requests {sorted(pending)[:8]}...")
 

@@ -199,7 +199,13 @@ class DDSStorageServer:
                  api: OffloadAPI | None = None):
         self.config = config or ServerConfig()
         cfg = self.config
+        # Work-signaled scheduling (see distributed.cluster.DDSCluster):
+        # ``signal()`` marks this server runnable in whatever scheduler owns
+        # it.  Installed via ``set_doorbell``; standalone servers run with
+        # no doorbell and ``signal`` is a no-op.
+        self._doorbell = None
         self.device = BlockDevice(cfg.device_capacity, )
+        self.device.doorbell = self.signal
         self.fs = SegmentFS(self.device, cfg.segment_size)
         self.dma = DMAEngine()
         self.cache_table = CacheTable(cfg.cache_items)
@@ -224,9 +230,42 @@ class DDSStorageServer:
             zero_copy=cfg.zero_copy,
             app_header=self.api.response_header or app_response_header)
         # The host storage application, adopting the DDS front-end library.
-        self.frontend = DDSFrontEnd(self.file_service)
+        # Its request rings ring our doorbell on every producer publish.
+        self.frontend = DDSFrontEnd(self.file_service, doorbell=self.signal)
         self.host_app = _HostApp(self)
         self.host_cpu_busy_s = 0.0   # modeled host CPU seconds consumed
+
+    # -- work-signaled scheduling hooks --------------------------------------------
+    def set_doorbell(self, doorbell) -> None:
+        """Install the scheduler's mark-runnable callback (cluster layer)."""
+        self._doorbell = doorbell
+
+    def signal(self) -> None:
+        """Mark this server runnable.  Called by every work producer: client
+        sends into the director's ingress, ring inserts, block-device
+        submissions/synchronous completions.  No-op standalone."""
+        db = self._doorbell
+        if db is not None:
+            db()
+
+    def busy(self) -> bool:
+        """True while pumping this server could make progress.
+
+        THE no-lost-wakeup predicate: the cluster scheduler re-arms a
+        stepped server while this holds, so a server with queued ingress,
+        undrained offload work, in-flight contexts, pending device
+        completions, or host-path state can never be parked.  Quiescence
+        (``pump() == 0``) is deliberately weaker — a shed request leaves an
+        application op permanently outstanding without making the server
+        non-idle — which is why ``run_until_idle`` keeps its idle-sweep
+        escape hatch.  Ordered cheapest-first; every probe is lock-free.
+        """
+        return (self.device.busy()
+                or self.offload.in_flight()
+                or self.director.busy()
+                or self.host_app.busy()
+                or self.file_service.busy()
+                or self.frontend.any_outstanding())
 
     # -- §6.1 hooks: translate file-service ops into user Cache/Invalidate ----------
     # (called with plain header fields: the file service's data plane keeps
@@ -417,11 +456,13 @@ class DDSClient:
         self.responses: dict[int, tuple[int, bytes]] = {}
         self._rx_buf = bytearray()
         server.director.ingress.push(Packet(self.flow, 0, b"", flags=FLAG_SYN))
+        server.signal()
         server.director.step()
 
     def _send(self, payload: bytes) -> None:
         self.server.director.ingress.push(Packet(self.flow, self._seq, payload))
         self._seq += len(payload)
+        self.server.signal()   # client sends are a scheduler wakeup source
 
     def read(self, file_id: int, offset: int, nbytes: int) -> int:
         with self._lock:
@@ -474,10 +515,12 @@ class DDSClient:
                                  self._rx_buf, self.responses)
 
     def wait(self, rid: int, max_iters: int = 200_000) -> tuple[int, bytes]:
+        # ``pump()`` already polls the device whenever the offload engine or
+        # the host path is busy; the old unconditional per-spin
+        # ``device.poll()`` here was pure overhead on idle iterations.
         for _ in range(max_iters):
             self.collect()
             if rid in self.responses:
                 return self.responses.pop(rid)
             self.server.pump()
-            self.server.device.poll()
         raise TimeoutError(f"no response for request {rid}")

@@ -518,8 +518,12 @@ class FileServiceRunner:
         return any(g.pending or g.ready for g in self.groups.values())
 
     def busy(self) -> bool:
-        """True while responses are pending or awaiting delivery."""
-        return self._any_pending()
+        """True while responses are pending or awaiting delivery.
+
+        Scheduler wakeup source: probed on every idle re-arm check, so the
+        common busy case (device ops in flight) short-circuits on the flat
+        cookie table before paying the per-group pending/ready scan."""
+        return bool(self._inflight) or self._any_pending()
 
     def start(self) -> None:
         self._stop.clear()

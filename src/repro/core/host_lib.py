@@ -153,10 +153,16 @@ class DDSFrontEnd:
 
     def __init__(self, service: FileServiceRunner,
                  ring_capacity: int = 1 << 18,
-                 max_progress: int | None = None):
+                 max_progress: int | None = None,
+                 doorbell=None):
         self.service = service
         self.ring_capacity = ring_capacity
         self.max_progress = max_progress
+        # Work-signaled scheduling: every request ring this library creates
+        # fires ``doorbell`` when a producer publishes messages, so inserts
+        # from any thread mark the owning server runnable (no lost wakeups
+        # even when the producer is not the server's own pump loop).
+        self.doorbell = doorbell
         self._groups: dict[int, NotificationGroup] = {}
         self._file_group: dict[int, int] = {}
         self._next_group = 1
@@ -171,6 +177,7 @@ class DDSFrontEnd:
             self._next_group += 1
         req = ProgressiveRing(self.ring_capacity, self.max_progress,
                               name=f"req-g{gid}")
+        req.doorbell = self.doorbell
         resp = ResponseRing(self.ring_capacity, name=f"resp-g{gid}")
         group = NotificationGroup(gid, req, resp)
         # Rings are pre-registered to the DPU driver for DMA at creation time.

@@ -283,6 +283,15 @@ class OffloadEngine:
         self._tail = 0
         self.stats = OffloadStats()
 
+    def in_flight(self) -> bool:
+        """True while context-ring slots await completion or consumption.
+
+        A scheduler wakeup source: the owning server must stay runnable
+        until every outstanding offloaded read has been completed AND its
+        response packets pushed to the wire (``complete_pending``).
+        """
+        return self._head != self._tail
+
     # -- Fig 13 main loop --------------------------------------------------------------
     def step(self, max_requests: int = 64) -> int:
         """Pull requests from the traffic director and execute them.

@@ -243,6 +243,11 @@ class ProgressiveRing:
         self._atom = _Atomics(self.host)
         self._data0 = base + POINTER_AREA
         # Pointers start at 0 (monotonically increasing virtual offsets).
+        # Work-signaled scheduling hook: fired AFTER a progress publish (the
+        # moment inserted messages become consumable), so a producer thread
+        # inserting into the ring marks the consuming server runnable — the
+        # host->DPU mirror of the paper's doorbell DMA write.
+        self.doorbell = None
 
     # -- producer side (host threads), Fig 8a --------------------------------
     def _reserve(self, n: int) -> int | None:
@@ -268,6 +273,9 @@ class ProgressiveRing:
             return RETRY
         self._copy_in(tail, msg)                      # lock-free data path
         self._atom.fetch_add(self.base + OFF_PROG, n)  # publish completion
+        db = self.doorbell
+        if db is not None:
+            db()
         return OK
 
     def try_insert_v(self, parts) -> str:
@@ -289,6 +297,9 @@ class ProgressiveRing:
             self._copy_in(voff, p)
             voff += len(p)
         self._atom.fetch_add(self.base + OFF_PROG, n)  # publish completion
+        db = self.doorbell
+        if db is not None:
+            db()
         return OK
 
     def insert(self, msg: bytes, spin: int = 1_000_000) -> None:
@@ -349,6 +360,9 @@ class ProgressiveRing:
                     self._copy_in(voff, p)
                     voff += len(p)
             self._atom.fetch_add(self.base + OFF_PROG, total)
+            db = self.doorbell
+            if db is not None:
+                db()   # one doorbell per published chunk, like the CAS
             i = j
 
     def _copy_in(self, voff: int, msg: bytes) -> None:

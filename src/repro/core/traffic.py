@@ -150,6 +150,12 @@ class Wire:
         with self._lock:
             return len(self._q)
 
+    def __bool__(self) -> bool:
+        # Lock-free emptiness peek (same contract as ``pop_many``'s): the
+        # scheduler's busy-predicates probe wires on every idle check, where
+        # a lock round per probe would double the cost of being idle.
+        return bool(self._q)
+
 
 class FlowDemuxWire:
     """A wire demultiplexed by destination flow: per-flow FIFO queues.
@@ -223,6 +229,9 @@ class FlowDemuxWire:
     def __len__(self) -> int:
         with self._lock:
             return self._len
+
+    def __bool__(self) -> bool:
+        return self._len > 0   # racy-but-safe peek (int read is atomic)
 
 
 class TCPReceiver:
@@ -326,6 +335,19 @@ class TrafficDirector:
             self._host_flow_of[ft] = host_flow
             self._client_flow_of[host_flow] = ft
         return c
+
+    def busy(self) -> bool:
+        """True while the director holds undelivered DPU-side work.
+
+        This is one wakeup source of the cluster's work-signaled scheduler
+        (see ``DDSCluster``): a server whose director has queued ingress
+        packets, undrained offload requests, or host-bound packets must stay
+        runnable.  All three probes are lock-free emptiness peeks — the
+        predicate is evaluated on every idle re-arm check.  ``to_client`` is
+        deliberately NOT included: undrained responses are the *client's*
+        work, and pumping the server cannot make progress on them.
+        """
+        return bool(self.ingress) or bool(self.offload_queue) or bool(self.to_host)
 
     # -- ingress processing ---------------------------------------------------------
     def step(self) -> bool:

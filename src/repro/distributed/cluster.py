@@ -17,8 +17,25 @@ module provides that layer:
     Files are placed by consistent-hashing their *cluster-global* file id;
     the cluster keeps the global->(shard, local-id) mapping, playing the
     (rarely-consulted, control-plane) metadata service of disaggregated
-    designs.  ``pump()``/``run_until_idle()`` drive every shard one step so
-    multi-server interleavings stay deterministic and testable.
+    designs.
+
+``ReadySet``
+    The cluster's work-signaled scheduler state: a doorbell-armed set of
+    runnable shard indices.  Every work producer — a client pushing into a
+    director's ingress, a ring insert, a block-device submission — marks its
+    server runnable via the server's ``signal()`` doorbell; ``pump()``
+    drains ONLY runnable servers, so the cost of a scheduling round tracks
+    *active* work instead of cluster size (the pre-overhaul loop stepped
+    every shard on every iteration — wall-clock per op grew with shard
+    count even when most shards were idle).
+
+    The no-lost-wakeup discipline: a shard is taken OUT of the set before
+    it is stepped, so a doorbell raised concurrently with the step re-arms
+    it; after the step it is re-armed while ``server.busy()`` holds
+    (pending device completions, undrained rings/wires, in-flight host
+    requests).  Stepping order is shard-index order, a subsequence of the
+    old poll-everything order, so existing deterministic interleavings are
+    preserved.
 
 Client-side batching/pipelining lives in :mod:`repro.core.client`; the
 §9.2 KV application on top of the cluster lives in
@@ -29,6 +46,7 @@ from __future__ import annotations
 
 import bisect
 import hashlib
+import threading
 from dataclasses import dataclass, field, replace
 from typing import Callable, Iterable
 
@@ -56,14 +74,15 @@ class HashRing:
             raise ValueError("num_shards must be positive")
         self.num_shards = num_shards
         self.vnodes = vnodes
-        self._points: list[int] = []
-        self._owners: list[int] = []
-        for shard in range(num_shards):
-            for v in range(vnodes):
-                p = stable_hash(f"shard-{shard}-vnode-{v}")
-                i = bisect.bisect_left(self._points, p)
-                self._points.insert(i, p)
-                self._owners.insert(i, shard)
+        # Build every (point, owner) pair flat and sort ONCE: the old
+        # per-vnode ``list.insert`` into the sorted lists was O(n^2) in
+        # total vnode count, which bites exactly when scale-out grows the
+        # ring (16 shards x 64 vnodes = 1024 quadratic inserts).
+        pairs = sorted(
+            (stable_hash(f"shard-{shard}-vnode-{v}"), shard)
+            for shard in range(num_shards) for v in range(vnodes))
+        self._points = [p for p, _ in pairs]   # bisect-ready for shard_for
+        self._owners = [s for _, s in pairs]
 
     def shard_for(self, key: object) -> int:
         h = stable_hash(key, salt=b"key:")
@@ -97,6 +116,57 @@ class FileLocation:
     local_fid: int
 
 
+class ReadySet:
+    """Doorbell-armed set of runnable shard indices (no lost wakeups).
+
+    ``mark`` is the doorbell: idempotent (an armed shard is not re-queued)
+    and safe from any thread.  ``take`` atomically snapshots-and-clears the
+    set; a mark that races with a take lands in the NEXT snapshot, which is
+    exactly the semantics the scheduler's take/step/re-arm cycle needs.
+    Snapshots come back in shard-index order so cooperative stepping stays
+    deterministic (a subsequence of the old step-everyone order).
+    """
+
+    def __init__(self, n: int):
+        self._armed = [False] * n
+        self._queue: list[int] = []
+        self._lock = threading.Lock()
+        # ``quiet`` caches "every shard was VERIFIED non-busy and no
+        # doorbell has rung since": the scheduler's empty-set fallback scan
+        # (a busy() probe per shard) runs at most once per quiet period
+        # instead of once per idle pump.  Any mark clears it.
+        self.quiet = False
+
+    def mark(self, i: int) -> None:
+        if self._armed[i]:   # racy fast path: double-mark is idempotent
+            return
+        with self._lock:
+            self.quiet = False
+            if not self._armed[i]:
+                self._armed[i] = True
+                self._queue.append(i)
+
+    def take(self) -> list[int]:
+        if not self._queue:   # racy-but-safe emptiness peek
+            return []
+        with self._lock:
+            out = self._queue
+            if not out:
+                return []
+            self._queue = []
+            armed = self._armed
+            for i in out:
+                armed[i] = False
+        out.sort()
+        return out
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def __bool__(self) -> bool:
+        return bool(self._queue)
+
+
 class DDSCluster:
     """N DDS storage servers behind consistent-hash file-id sharding."""
 
@@ -108,14 +178,24 @@ class DDSCluster:
         base = config or ServerConfig()
         self.ring = HashRing(num_shards, vnodes)
         self.servers: list[DDSStorageServer] = []
+        self._ready = ReadySet(num_shards)
+        self.pump_steps = [0] * num_shards   # per-shard srv.pump() count
         for i in range(num_shards):
             # Each shard listens on its own port so application signatures
             # stay per-server, exactly as N separate Fig-6 boxes would.
             cfg = replace(base, server_port=base.server_port + i)
             api = api_factory(i) if api_factory is not None else None
-            self.servers.append(DDSStorageServer(cfg, api))
+            srv = DDSStorageServer(cfg, api)
+            # Every producer doorbell (client send, ring insert, device
+            # submission) for this shard now arms it in the ready set.
+            srv.set_doorbell(lambda i=i: self._ready.mark(i))
+            self.servers.append(srv)
         self._files: dict[int, FileLocation] = {}
         self._next_fid = 1
+
+    def runnable(self) -> list[int]:
+        """Currently armed shard indices (introspection/tests only)."""
+        return sorted(i for i, a in enumerate(self._ready._armed) if a)
 
     # -- control plane: cluster-global files ---------------------------------------
     def create_file(self, name: str) -> int:
@@ -142,24 +222,73 @@ class DDSCluster:
         self.servers[loc.shard].frontend.write_sync(loc.local_fid, offset, data)
         self.servers[loc.shard].run_until_idle()
 
-    # -- cooperative event loop over every shard ------------------------------------
+    # -- work-signaled cooperative event loop -----------------------------------------
     def pump(self) -> int:
+        """Drain RUNNABLE servers only (doorbell semantics).
+
+        Each runnable shard is taken out of the ready set BEFORE it is
+        stepped (a doorbell racing the step re-arms it) and re-armed after
+        the step while it produced work or ``busy()`` holds — pending
+        device completions, undrained rings, in-flight host requests all
+        keep a shard runnable, so wakeups are never lost.
+
+        When the ready set is empty, a verification sweep re-arms any shard
+        whose ``busy()`` holds, then latches the ready set's ``quiet`` flag;
+        every doorbell (``ReadySet.mark``) clears it, so repeated idle
+        pumps cost O(1) regardless of cluster size.  The contract this
+        buys: ``pump() == 0`` means every shard was verified non-busy at
+        some point since the last doorbell.  Work enqueued WITHOUT ringing
+        a doorbell (poking a director wire directly) is caught by the
+        sweep only until the first clean sweep latches quiet — after that
+        it stays unscheduled until the next doorbell.  Every in-tree
+        producer signals (client sends, ring publishes, device
+        submissions); a new producer must too.
+        """
+        runnable = self._ready.take()
+        servers = self.servers
+        if not runnable:
+            if self._ready.quiet:
+                return 0   # verified idle, no doorbell since: nothing to do
+            runnable = [i for i, srv in enumerate(servers) if srv.busy()]
+            if not runnable:
+                self._ready.quiet = True
+                return 0
         work = 0
-        for srv in self.servers:
-            work += srv.pump()
+        steps = self.pump_steps
+        mark = self._ready.mark
+        for i in runnable:
+            srv = servers[i]
+            steps[i] += 1
+            w = srv.pump()
+            if w or srv.busy():
+                mark(i)
+            work += w
         return work
 
     def run_until_idle(self, max_iters: int = 200_000) -> None:
+        """Converge on ready-set emptiness plus device drain.
+
+        The common exit is ONE cheap check: ``pump() == 0`` with an empty
+        ready set means every shard was verified non-busy (devices drained,
+        rings consumed, nothing in flight) — no idle sweeps over all
+        servers.  The pre-overhaul three-idle-sweep escape survives only
+        for quiescent-but-permanently-busy states (e.g. a shed request's
+        forever-outstanding application op), where ``busy()`` never clears
+        even though no pump can make progress.
+        """
         idle = 0
         for _ in range(max_iters):
-            if self.pump() == 0:
-                for srv in self.servers:
-                    srv.device.drain()
-                idle += 1
-                if idle >= 3:
-                    return
-            else:
+            if self.pump():
                 idle = 0
+                continue
+            if not self._ready:
+                return   # verified idle: nothing runnable, nothing busy
+            for srv in self.servers:
+                if srv.device.busy():
+                    srv.device.drain()
+            idle += 1
+            if idle >= 3:
+                return
         raise TimeoutError("cluster did not go idle")
 
     # -- aggregate accounting ---------------------------------------------------------

@@ -78,6 +78,11 @@ class BlockDevice:
         self._lock = threading.Lock()
         self._clock_s = 0.0  # modeled device clock
         self.stats = BlockDeviceStats()
+        # Work-signaled scheduling hook: invoked on every submission (and
+        # synchronous completion push) so the owning server is marked
+        # runnable even when the submitter is not the server's own pump —
+        # e.g. an application thread driving the host front-end directly.
+        self.doorbell: Callable[[], None] | None = None
 
     # -- submission --------------------------------------------------------------
     # deque.append is atomic under the GIL; poll() still serializes the
@@ -95,12 +100,18 @@ class BlockDevice:
                 op.on_complete(STATUS_EINVAL)
             elif op.cookie is not None:
                 self._cookie_done.append((op.cookie, STATUS_EINVAL))
+                db = self.doorbell
+                if db is not None:
+                    db()   # a completion is pending: keep the owner runnable
             return op
         q = self._queue
         q.append(op)
         d = len(q)
         if d > self.stats.max_queue_depth_seen:
             self.stats.max_queue_depth_seen = d
+        db = self.doorbell
+        if db is not None:
+            db()
         return op
 
     def submit_read(self, lba: int, nbytes: int, dest: memoryview,
@@ -133,10 +144,22 @@ class BlockDevice:
     def push_completion(self, cookie: int, status: int = STATUS_OK) -> None:
         """Synchronous completion for ops with no device work (empty I/O)."""
         self._cookie_done.append((cookie, status))
+        db = self.doorbell
+        if db is not None:
+            db()
 
     def queue_len(self) -> int:
         with self._lock:
             return len(self._queue)
+
+    def busy(self) -> bool:
+        """True while ops are queued or completions await ``reap()``.
+
+        A scheduler wakeup source: a server whose device is busy must stay
+        runnable until the backlog is polled AND the completion queue is
+        reaped.  Both probes are lock-free peeks (cheap on the idle path).
+        """
+        return bool(self._queue) or bool(self._cookie_done)
 
     # -- completion --------------------------------------------------------------
     def poll(self, max_completions: int | None = None) -> int:
@@ -162,6 +185,7 @@ class BlockDevice:
         rlat, wlat = self.read_latency_s, self.write_latency_s
         reads = writes = read_bytes = write_bytes = 0
         cookie_done = self._cookie_done
+        cookies_before = len(cookie_done)
         for op in ops:
             n = op.nbytes
             kind = op.kind
@@ -199,6 +223,10 @@ class BlockDevice:
         stats.writes += writes
         stats.read_bytes += read_bytes
         stats.write_bytes += write_bytes
+        if len(cookie_done) > cookies_before:
+            db = self.doorbell
+            if db is not None:
+                db()   # completions queued for reap: owner stays runnable
         return k
 
     def reap(self) -> list[tuple[int, int]]:

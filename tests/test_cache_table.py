@@ -96,3 +96,39 @@ def test_lookup_stats():
     t.lookup("x")
     t.lookup("nope")
     assert t.stats.lookups == 2 and t.stats.hits == 1
+
+
+def test_lookup_many_matches_per_key_lookup():
+    t = CacheTable(max_items=256)
+    for i in range(100):
+        t.insert(f"k{i}", i * 7)
+    keys = [f"k{i}" for i in range(0, 150, 3)]   # mix of hits and misses
+    expect = [t.lookup(k) for k in keys]
+    assert t.lookup_many(keys) == expect
+
+
+def test_lookup_many_single_stats_round():
+    t = CacheTable(max_items=64)
+    t.insert("hot", 42)
+    t.lookup_many(["hot", "cold", "hot"])
+    assert t.stats.batched_lookups == 1
+    assert t.stats.lookups == 3       # still counted per key...
+    assert t.stats.hits == 2          # ...with exact hit accounting
+    t.lookup_many([])
+    assert t.stats.lookups == 3
+
+
+@given(st.lists(st.tuples(st.integers(0, 40), st.booleans()), max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_lookup_many_property_vs_dict(ops):
+    t = CacheTable(max_items=128)
+    model = {}
+    for key, insert in ops:
+        if insert:
+            t.insert(key, key + 1000)
+            model[key] = key + 1000
+        elif key in model:
+            t.delete(key)
+            del model[key]
+    keys = list(range(41))
+    assert t.lookup_many(keys) == [model.get(k) for k in keys]

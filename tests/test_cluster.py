@@ -198,3 +198,68 @@ def test_kv_scales_across_shards_with_nonzero_offload():
     per_shard = store.shard_stats()
     assert sum(1 for s in per_shard if s["puts"] > 0) >= 3   # data spread out
     assert store.dpu_served_gets() == len(keys)              # all offloaded
+
+
+# -- PR 4 satellites: ring build, batched predicate lookups, KV burst issue -----------
+
+def test_hashring_sort_once_build_matches_incremental_insert():
+    """The O(n log n) build must place vnodes exactly like the old
+    insertion-sorted build (placement stability across versions)."""
+    import bisect
+    from repro.distributed.cluster import stable_hash
+    for shards, vnodes in ((3, 16), (16, 64)):
+        points, owners = [], []
+        for shard in range(shards):           # the pre-PR O(n^2) build
+            for v in range(vnodes):
+                p = stable_hash(f"shard-{shard}-vnode-{v}")
+                i = bisect.bisect_left(points, p)
+                points.insert(i, p)
+                owners.insert(i, shard)
+        ring = HashRing(shards, vnodes)
+        assert ring._points == points
+        assert ring._owners == owners
+
+
+def test_kv_get_burst_uses_one_batched_cache_lookup(kv):
+    store, c = kv
+    keys = [b"burst-%d" % i for i in range(12)]
+    for k in keys:
+        c.put(k, b"v:" + k)
+    c.flush()
+    c.run_until_idle()
+    shard_batches = {i: s["cache"]["batched_lookups"]
+                     for i, s in enumerate(store.shard_stats())}
+    rids = c.get_many(keys)
+    c.flush()
+    res = c.net.wait_many(rids)
+    assert all(s == wire.E_OK for s, _ in res.values())
+    after = store.shard_stats()
+    for i, s in enumerate(after):
+        # every shard that saw GETs probed its table in burst(s), and the
+        # counter is surfaced through the app-level stats
+        got = s["cache"]["batched_lookups"] - shard_batches[i]
+        if s["dpu_gets"]:
+            assert got >= 1
+    assert store.dpu_served_gets() == len(keys)
+
+
+def test_kv_burst_apis_roundtrip(kv):
+    store, c = kv
+    items = [(b"bk-%d" % i, b"bv-%d" % i) for i in range(10)]
+    put_rids = c.put_many(items)
+    c.flush()
+    for rid in put_rids:
+        c.wait_put(rid)
+    get_rids = c.get_many([k for k, _ in items])
+    c.flush()
+    res = c.net.wait_many(get_rids)
+    from repro.apps.kv_store import decode_record
+    for (k, v), rid in zip(items, get_rids):
+        st_, body = res[rid]
+        assert st_ == wire.E_OK and decode_record(body) == (k, v)
+    del_rids = c.delete_many([k for k, _ in items[:5]])
+    c.flush()
+    res = c.net.wait_many(del_rids)
+    assert all(s == wire.E_OK for s, _ in res.values())
+    assert c.wait_value(c.get(items[0][0])) is None
+    assert c.wait_value(c.get(items[9][0])) == b"bv-9"
