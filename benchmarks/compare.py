@@ -1,9 +1,14 @@
-"""Baseline vs optimized sweep comparison (all cells, same-basis).
+"""Baseline vs optimized comparisons (same-basis).
 
-Reads the paper-faithful-baseline sweep (results/dryrun) and the optimized
-sweep (results/dryrun_opt) and prints the per-cell dominant-term change.
-Both sweeps are full-config lowerings (scan bodies counted once in both),
-so ratios are exact even though absolute terms need extrapolation.
+Two sections:
+
+  * the paper-faithful-baseline sweep (results/dryrun) vs the optimized
+    sweep (results/dryrun_opt): per-cell dominant-term change.  Both sweeps
+    are full-config lowerings (scan bodies counted once in both), so ratios
+    are exact even though absolute terms need extrapolation;
+  * the committed measured-latency record (BENCH_latency.json): pre-overhaul
+    baseline vs current per-class completion-tick percentiles — ticks are
+    machine-independent, so the comparison needs no calibration.
 """
 
 from __future__ import annotations
@@ -16,6 +21,8 @@ from benchmarks.common import emit, section
 
 BASE = "results/dryrun"
 OPT = "results/dryrun_opt"
+LATENCY_JSON = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_latency.json")
 
 
 def _load(d: str) -> dict:
@@ -29,7 +36,34 @@ def _load(d: str) -> dict:
     return out
 
 
+def latency_compare() -> None:
+    """Committed tail-latency ticks: pre-overhaul baseline vs current."""
+    if not os.path.exists(LATENCY_JSON):
+        print("# no BENCH_latency.json; latency comparison skipped")
+        return
+    with open(LATENCY_JSON) as fh:
+        doc = json.load(fh)
+    base = doc.get("baseline", {}).get("full")
+    cur = doc.get("current", {}).get("full")
+    if not base or not cur:
+        print("# BENCH_latency.json lacks baseline/current; skipped")
+        return
+    section("measured tail latency (ticks): pre-overhaul -> current")
+    for cls in ("get", "write"):
+        b, c = base[cls], cur[cls]
+        for p in ("p50", "p95", "p99", "max"):
+            if c[p]:
+                rel = f"({b[p] / c[p]:.2f}x lower)"
+            elif b[p]:
+                rel = f"(sub-tick; was {b[p]}t)"   # no finite ratio to print
+            else:
+                rel = "(both sub-tick)"
+            emit(f"latency_{cls}_{p}", float(c[p]),
+                 f"{b[p]}t -> {c[p]}t {rel}")
+
+
 def main() -> None:
+    latency_compare()
     if not (os.path.isdir(BASE) and os.path.isdir(OPT)):
         print("# need both results/dryrun and results/dryrun_opt")
         return

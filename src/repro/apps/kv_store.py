@@ -261,7 +261,10 @@ class ShardedKVStore:
                           invalidate=invalidate,
                           response_header=response_header,
                           host_handler=host_handler,
-                          prepare_read=prepare_read)
+                          prepare_read=prepare_read,
+                          # Lifecycle classifier: GETs are reads; PUT/DEL
+                          # are writes (mutations) in the latency stats.
+                          read_types=frozenset({KV_GET}))
 
     # -- observability -----------------------------------------------------------------
     def dpu_served_gets(self) -> int:
@@ -281,8 +284,13 @@ class ShardedKVStore:
                  "dpu_gets": srv.offload.stats.completed,
                  "log_bytes": st.log_off,
                  "cache": srv.cache_table.stats.as_dict(),
-                 "cache_items": len(srv.cache_table)}
+                 "cache_items": len(srv.cache_table),
+                 "latency": srv.lifecycle.summary()}
                 for st, srv in zip(self._states, self.cluster.servers)]
+
+    def latency_stats(self) -> dict:
+        """Cluster-wide measured tick-latency per class (see README)."""
+        return self.cluster.latency_stats()
 
 
 class KVClient:
@@ -309,7 +317,8 @@ class KVClient:
 
     def put(self, key: bytes, value: bytes) -> int:
         return self.net.send_raw(self._shard(key),
-                                 lambda rid: encode_put(rid, key, value))
+                                 lambda rid: encode_put(rid, key, value),
+                                 cls="w")
 
     def get(self, key: bytes) -> int:
         return self.net.send_raw(self._shard(key),
@@ -317,13 +326,15 @@ class KVClient:
 
     def delete(self, key: bytes) -> int:
         return self.net.send_raw(self._shard(key),
-                                 lambda rid: encode_del(rid, key))
+                                 lambda rid: encode_del(rid, key),
+                                 cls="w")
 
     # -- burst issue (mirrors ClusterClient.read_many/write_many) ---------------------
-    def _send_many(self, keys: list, encode) -> list[int]:
+    def _send_many(self, keys: list, encode, cls: str = "r") -> list[int]:
         shard = self._shard
         return self.net.issue_many([shard(k) for k in keys],
-                                   lambda rid, i: encode(rid, keys[i]))
+                                   lambda rid, i: encode(rid, keys[i]),
+                                   cls=cls)
 
     def get_many(self, keys: list) -> list[int]:
         """Issue a burst of GETs: one rid-range reservation, no per-op
@@ -331,16 +342,24 @@ class KVClient:
         return self._send_many(keys, encode_get)
 
     def delete_many(self, keys: list) -> list[int]:
-        return self._send_many(keys, encode_del)
+        return self._send_many(keys, encode_del, cls="w")
 
     def put_many(self, items: list) -> list[int]:
         """Issue a burst of ``(key, value)`` PUTs in one pass."""
         shard = self._shard
         return self.net.issue_many(
             [shard(k) for k, _ in items],
-            lambda rid, i: encode_put(rid, items[i][0], items[i][1]))
+            lambda rid, i: encode_put(rid, items[i][0], items[i][1]),
+            cls="w")
 
     # -- scheduling + typed waits -----------------------------------------------------
+    @property
+    def latency(self):
+        """End-to-end read/write tick latency (issue -> drain).  The
+        DPU-vs-host split for GETs lives in ``store.latency_stats()``,
+        where it is exact."""
+        return self.net.latency
+
     def flush(self) -> int:
         return self.net.flush()
 

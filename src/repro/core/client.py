@@ -22,9 +22,11 @@ import threading
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Callable
 
+from repro.core import wire
 from repro.core.dds_server import (DDSStorageServer, drain_client_flow,
                                    encode_app_read, encode_app_write,
                                    encode_batch)
+from repro.core.lifecycle import ClientLatency
 from repro.core.traffic import FLAG_SYN, FiveTuple, Packet
 
 if TYPE_CHECKING:  # import cycle: distributed.cluster imports core
@@ -115,6 +117,16 @@ class ClusterClient:
         self._lock = threading.Lock()
         self.responses: dict[int, tuple[int, bytes]] = {}
         self.stats = ClientStats()
+        # End-to-end tick latency: issue stamps per rid (reads and writes
+        # in separate dicts — the class is known at issue, so the drain
+        # pays one dict pop, no cross-object classification).  The
+        # offloaded-vs-host split for reads lives in the server-side
+        # lifecycle histograms, where it is exact.  The cluster's shared
+        # clock makes deltas comparable across shards.
+        self._issued_r: dict[int, int] = {}
+        self._issued_w: dict[int, int] = {}
+        self.latency = ClientLatency()
+        self._lat_pos = [0] * len(self.conns)  # arrival_order scan cursors
 
     # -- request issue (buffered until the next flush/pump) -------------------------
     def _enqueue(self, shard: int, msg: bytes) -> None:
@@ -123,14 +135,15 @@ class ClusterClient:
             self._dirty_flag[shard] = True
             self._dirty.append(shard)
 
-    def reserve_rids(self, shards: list[int]) -> list[int]:
+    def reserve_rids(self, shards: list[int], cls: str = "r") -> list[int]:
         """Reserve one rid per target shard in ONE lock round.
 
         The shared bulk-issue path under :meth:`read_many`/:meth:`write_many`
         and application burst clients (e.g. the KV store's ``get_many``):
         rid range, outstanding counters and the rid->shard map are all
         updated in bulk, so a pipeline round of thousands of requests skips
-        the per-call lock + dict churn."""
+        the per-call lock + dict churn.  ``cls`` ('r'/'w') picks the issue-
+        tick stamp class for the end-to-end latency histograms."""
         n = len(shards)
         rid_shard = self._rid_shard
         with self._lock:
@@ -146,16 +159,22 @@ class ClusterClient:
             for rid, shard in zip(rids, shards):
                 rid_shard[rid] = shard
                 outs[shard] += 1
+        now = self.cluster.clock.now
+        issued = self._issued_r if cls == "r" else self._issued_w
+        for rid in rids:
+            issued[rid] = now
         self.stats.requests += n
         return rids
 
-    def _rid(self, shard: int) -> int:
+    def _rid(self, shard: int, cls: str = "r") -> int:
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
             self._outstanding += 1
             self._shard_outstanding[shard] += 1
         self._rid_shard[rid] = shard
+        issued = self._issued_r if cls == "r" else self._issued_w
+        issued[rid] = self.cluster.clock.now
         self.stats.requests += 1
         return rid
 
@@ -179,7 +198,7 @@ class ClusterClient:
 
     def write(self, gfid: int, offset: int, data: bytes) -> int:
         loc = self.cluster.locate(gfid)
-        rid = self._rid(loc.shard)
+        rid = self._rid(loc.shard, "w")
         self._enqueue(loc.shard,
                       encode_app_write(rid, loc.local_fid, offset, data))
         return rid
@@ -192,21 +211,23 @@ class ClusterClient:
         scatter-gather runs."""
         locate = self.cluster.locate
         locs = [locate(gfid) for gfid, _, _ in writes]
-        rids = self.reserve_rids([loc.shard for loc in locs])
+        rids = self.reserve_rids([loc.shard for loc in locs], "w")
         enqueue = self._enqueue
         for rid, loc, (_, offset, data) in zip(rids, locs, writes):
             enqueue(loc.shard,
                     encode_app_write(rid, loc.local_fid, offset, data))
         return rids
 
-    def send_raw(self, shard: int, build_msg: Callable[[int], bytes]) -> int:
+    def send_raw(self, shard: int, build_msg: Callable[[int], bytes],
+                 cls: str = "r") -> int:
         """Route an application-defined message to an explicit shard."""
-        rid = self._rid(shard)
+        rid = self._rid(shard, cls)
         self._enqueue(shard, build_msg(rid))
         return rid
 
     def issue_many(self, shards: list[int],
-                   build_msg: Callable[[int, int], bytes]) -> list[int]:
+                   build_msg: Callable[[int, int], bytes],
+                   cls: str = "r") -> list[int]:
         """Burst form of :meth:`send_raw`: the PUBLIC bulk-issue path for
         application clients (e.g. the KV store's ``get_many``).
 
@@ -214,7 +235,7 @@ class ClusterClient:
         request id.  One rid-range reservation covers the whole burst, and
         enqueueing stays inside this class so the dirty-connection and
         per-shard outstanding bookkeeping cannot be bypassed."""
-        rids = self.reserve_rids(shards)
+        rids = self.reserve_rids(shards, cls)
         enqueue = self._enqueue
         for i, (rid, shard) in enumerate(zip(rids, shards)):
             enqueue(shard, build_msg(rid, i))
@@ -259,12 +280,23 @@ class ClusterClient:
         responses = self.responses
         got = 0
         outs = self._shard_outstanding
+        lat_pos = self._lat_pos
         collected: list[tuple[int, int]] = []
         for i, conn in enumerate(self.conns):
             if not outs[i]:
                 continue
             before = len(responses)
             conn.collect(responses)
+            ao = conn.arrival_order
+            if len(ao) > lat_pos[i]:
+                self._record_latency(conn, ao, lat_pos[i])
+                if len(ao) >= 1 << 16:
+                    # Fully consumed: reset so a long-running client's
+                    # arrival log cannot grow without bound.
+                    conn.arrival_order = []
+                    lat_pos[i] = 0
+                else:
+                    lat_pos[i] = len(ao)
             n = len(responses) - before
             if n:
                 collected.append((i, n))
@@ -279,6 +311,53 @@ class ClusterClient:
                 self._outstanding -= got
             self.stats.responses += got
         return got
+
+    def _record_latency(self, conn: ShardConnection, arrival_order: list,
+                        pos: int) -> None:
+        """End-to-end issue->drain ticks for newly arrived responses.
+
+        Classified read/write from the issue-side stamp dicts (one pop on
+        the common path); the offloaded-vs-host split for reads is exact in
+        the serving shard's ``lifecycle`` histograms."""
+        latency = self.latency
+        now = self.cluster.clock.now
+        wpop = self._issued_w.pop
+        rpop = self._issued_r.pop
+        radd = latency.hist_for("read").add
+        wadd = latency.hist_for("write").add
+        for rid in arrival_order[pos:]:
+            t0 = rpop(rid, None)
+            if t0 is not None:
+                radd(now - t0)
+                continue
+            t0 = wpop(rid, None)
+            if t0 is not None:
+                wadd(now - t0)
+
+    def _check_shed(self, rids) -> int:
+        """Surface terminal SHED marks as (E_SHED, b'') responses.
+
+        A shed request never gets a wire response; without this, ``wait``
+        and ``wait_many`` would spin their whole iteration budget into a
+        timeout heuristic.  Called on idle iterations only (no wire work)."""
+        found = 0
+        responses = self.responses
+        conns = self.conns
+        rid_shard = self._rid_shard
+        for rid in rids:
+            shard = rid_shard.get(rid)
+            if shard is None:
+                continue
+            conn = conns[shard]
+            if conn.server.lifecycle.take_shed(conn.flow, rid):
+                responses[rid] = (wire.E_SHED, b"")
+                self._issued_r.pop(rid, None)
+                self._issued_w.pop(rid, None)
+                with self._lock:
+                    self._shard_outstanding[shard] -= 1
+                    self._outstanding -= 1
+                found += 1
+        return found
 
     def outstanding(self) -> int:
         """Issued-but-unanswered requests — an O(1) counter, not a dict scan."""
@@ -320,6 +399,7 @@ class ClusterClient:
                 return self.responses.pop(rid)
             if self.pump() == 0:
                 self._drain_busy_devices()
+                self._check_shed((rid,))   # terminal: answered as E_SHED
         raise TimeoutError(f"no response for request {rid}")
 
     def wait_many(self, rids: list[int],
@@ -330,7 +410,10 @@ class ClusterClient:
         old serial per-rid ``wait`` loop head-of-line blocked on the first
         rid even when later rids (on other shards) had long completed.
         Harvesting rides ``poll``'s outstanding-only scan, so only shards
-        that still owe responses are touched."""
+        that still owe responses are touched.  On idle iterations, rids the
+        servers marked SHED are answered terminally (``wire.E_SHED``) — a
+        shed request can never produce a wire response, so waiting on a
+        timeout heuristic would spin the whole iteration budget."""
         got: dict[int, tuple[int, bytes]] = {}
         pending = set(rids)
         pending -= self._harvest(pending, got)
@@ -339,6 +422,7 @@ class ClusterClient:
                 return {rid: got[rid] for rid in rids}  # caller's order
             if self.pump() == 0:
                 self._drain_busy_devices()
+                self._check_shed(pending)
             pending -= self._harvest(pending, got)
         raise TimeoutError(f"no response for requests {sorted(pending)[:8]}...")
 

@@ -27,6 +27,8 @@ from repro.core import wire
 from repro.core.cache_table import CacheTable
 from repro.core.file_service import FileServiceRunner, SegmentFS
 from repro.core.host_lib import DDSFrontEnd
+from repro.core.lifecycle import (ClientLatency, LifecycleTracker, TickClock,
+                                  TickHistogram)
 from repro.core.offload import OffloadAPI, OffloadEngine, ReadOp, WriteOp
 from repro.core.ring import DMAEngine
 from repro.core.traffic import (ApplicationSignature, FiveTuple, Packet,
@@ -178,6 +180,11 @@ def default_prepare_read(msg, table) -> tuple[ReadOp, bytes] | None:
             APP_RESP_HDR.pack(req_id, wire.E_OK, nbytes))
 
 
+# Lifecycle classifier for the §8.1 benchmark protocol: which message type
+# bytes are reads (everything else counts as a write / mutation).
+DEFAULT_READ_TYPES = frozenset({APP_READ})
+
+
 @dataclass
 class ServerConfig:
     device_capacity: int = 1 << 28          # 256 MiB RAM "SSD"
@@ -190,6 +197,19 @@ class ServerConfig:
     userspace_stack: bool = True             # TLDK vs Linux-on-DPU (Fig 19)
     cache_items: int = 1 << 16
     offload_enabled: bool = True             # False => all requests to host
+    # -- tail-latency knobs (see README "Measured tail latency") -------------
+    device_queue_depth: int = 128            # per-poll completion budget
+    prio_interleave: int = 4                 # normal-queue share: budget//N
+    coalesce_ticks: int = 2                  # held write-run age bound
+    deliver_ticks: int = 2                   # completed-response age bound
+    host_drain_slice: int = 256              # host-wire packets per pump step
+    # Bounce offloaded reads of files whose writes are still in the
+    # file-service pipeline (held/ring-queued/at-device) to the host,
+    # where the FIFO orders them after those writes.  Writes still on the
+    # host wire (same-pump demux) are not covered — the same window the
+    # pre-overhaul FIFO device never ordered; acked writes are always
+    # visible either way.
+    read_write_fence: bool = False
 
 
 class DDSStorageServer:
@@ -204,13 +224,24 @@ class DDSStorageServer:
         # it.  Installed via ``set_doorbell``; standalone servers run with
         # no doorbell and ``signal`` is a no-op.
         self._doorbell = None
-        self.device = BlockDevice(cfg.device_capacity, )
+        # Deterministic request-lifecycle clock: ONE tick per pump step.  A
+        # standalone server owns (and ticks) its own; a DDSCluster installs
+        # its shared clock via ``adopt_clock`` and ticks once per cluster
+        # pump instead.
+        self.clock = TickClock()
+        self._owns_clock = True
+        self.device = BlockDevice(cfg.device_capacity,
+                                  queue_depth=cfg.device_queue_depth,
+                                  prio_interleave=cfg.prio_interleave)
         self.device.doorbell = self.signal
+        self.device.clock = self.clock
         self.fs = SegmentFS(self.device, cfg.segment_size)
         self.dma = DMAEngine()
         self.cache_table = CacheTable(cfg.cache_items)
         self.api = api or OffloadAPI(default_off_pred, default_off_func,
                                      prepare_read=default_prepare_read)
+        self.lifecycle = LifecycleTracker(
+            self.clock, self.api.read_types or DEFAULT_READ_TYPES)
         # Traffic director: signature matches any client talking to our port.
         sig = (ApplicationSignature(dst_port=cfg.server_port)
                if cfg.offload_enabled else
@@ -220,15 +251,29 @@ class DDSStorageServer:
             ncores=cfg.director_cores, host_port=cfg.server_port,
             userspace_stack=cfg.userspace_stack)
         # File service with cache-on-write / invalidate-on-read hooks (§6.1).
+        # Hooks are wired ONLY when the application actually installed the
+        # Table-1 functions — the default §8.1 app has neither, and a None
+        # hook lets the write path skip per-request cache bookkeeping.
         self.file_service = FileServiceRunner(
             self.fs, self.dma, zero_copy=cfg.zero_copy,
-            cache_hook=self._cache_on_write,
-            invalidate_hook=self._invalidate_on_read)
+            cache_hook=(self._cache_on_write
+                        if self.api.cache is not None else None),
+            invalidate_hook=(self._invalidate_on_read
+                             if self.api.invalidate is not None else None),
+            clock=self.clock,
+            coalesce_ticks=cfg.coalesce_ticks,
+            deliver_ticks=cfg.deliver_ticks,
+            shed_hook=self._on_shed)
+        if cfg.read_write_fence:
+            self.file_service.track_writes = True
         self.offload = OffloadEngine(
             self.fs, self.director, self.api, self.cache_table,
             ring_size=cfg.offload_ring, pool_size=cfg.offload_pool,
             zero_copy=cfg.zero_copy,
             app_header=self.api.response_header or app_response_header)
+        self.offload.lifecycle = self.lifecycle
+        if cfg.read_write_fence:
+            self.offload.busy_files = self.file_service.write_inflight
         # The host storage application, adopting the DDS front-end library.
         # Its request rings ring our doorbell on every producer publish.
         self.frontend = DDSFrontEnd(self.file_service, doorbell=self.signal)
@@ -239,6 +284,41 @@ class DDSStorageServer:
     def set_doorbell(self, doorbell) -> None:
         """Install the scheduler's mark-runnable callback (cluster layer)."""
         self._doorbell = doorbell
+
+    def adopt_clock(self, clock: TickClock) -> None:
+        """Share a scheduler-owned tick clock (cluster layer): every stamp
+        point — device, file service, rings, lifecycle — rebinds to it, and
+        this server stops ticking in ``pump`` (the owner ticks, once per
+        scheduling step, keeping tick latencies comparable across shards)."""
+        self.clock = clock
+        self._owns_clock = False
+        self.device.clock = clock
+        self.lifecycle.clock = clock
+        self.file_service.adopt_clock(clock)
+
+    def _on_shed(self, frontend_rid: int) -> None:
+        """A host-path request was shed (bounded E_NOSPC path gave up).
+
+        Three things must happen or the system wedges in a busy-forever
+        state with a client spinning on a timeout: the host app's in-flight
+        entry is dropped, the front-end's booked op is cancelled (so
+        ``any_outstanding`` clears), and the ORIGINAL application request is
+        marked shed in the lifecycle tracker, where the client's ``wait``
+        finds the terminal status."""
+        info = self.host_app._inflight.pop(frontend_rid, None)
+        self.frontend.cancel(frontend_rid)
+        if info is None:
+            # Either not an application op (a direct front-end user), or the
+            # shed fired INSIDE frontend.submit_many (the ring-full
+            # on_retry re-entrantly steps the file service) — before
+            # _execute_burst could record the in-flight meta.  Park the rid:
+            # the host app reconciles it right after booking, so the mark
+            # is never lost and the meta never leaks.
+            self.host_app._orphan_sheds.add(frontend_rid)
+            return
+        host_flow, _typ, req_id = info[:3]
+        client_flow = self.director._client_flow_of.get(host_flow, host_flow)
+        self.lifecycle.mark_shed(client_flow, req_id)
 
     def signal(self) -> None:
         """Mark this server runnable.  Called by every work producer: client
@@ -280,9 +360,20 @@ class DDSStorageServer:
 
     # -- cooperative event loop ---------------------------------------------------------
     def pump(self) -> int:
+        """One scheduling step, in PRIORITY order.
+
+        The tick clock advances first (standalone servers; a cluster ticks
+        its shared clock once per cluster pump).  Then the step is the
+        early-priority-demux discipline: ingress is classified, the offload
+        engine serves predicate-positive reads — which also ride the
+        device's priority queue — BEFORE any host-path work runs, and the
+        host wire is drained in a bounded slice so one hot flow cannot
+        monopolize the step."""
+        if self._owns_clock:
+            self.clock.tick()
         work = self.director.step_n(64)   # whole ingress burst, one lock round
         work += self.offload.step()       # polls device + completes internally
-        host_work = self.host_app.step()
+        host_work = self.host_app.step(self.config.host_drain_slice)
         # The host path (file service rings + completion polling) only runs
         # when it can have work; the offloaded fast path never pays for it.
         if host_work or self._host_path_busy():
@@ -291,6 +382,22 @@ class DDSStorageServer:
             work += self.offload.complete_pending()
             work += self.host_app.poll_completions()
         return work + host_work
+
+    def latency_stats(self) -> dict:
+        """Measured tick-latency distributions (see README)."""
+        dev = self.device.stats
+        out = {"classes": self.lifecycle.summary()}
+        if dev.completion_ticks.n:
+            out["device"] = dev.completion_ticks.summary()
+        if dev.prio_completion_ticks.n:
+            out["device_prio"] = dev.prio_completion_ticks.summary()
+        res = TickHistogram()
+        for g in self.file_service.groups.values():
+            if g.req_ring.residency is not None:
+                res.merge(g.req_ring.residency)
+        if res.n:
+            out["ring_residency"] = res.summary()
+        return out
 
     def _host_path_busy(self) -> bool:
         return (self.host_app.busy()
@@ -328,19 +435,27 @@ class _HostApp:
         self.server = server
         self._inflight: dict[int, tuple] = {}  # rid -> (host_flow, app req)
         self._burst: list[tuple] = []          # (host_flow, msg) drained batch
+        # Rids shed during frontend.submit_many's re-entrant file-service
+        # step, BEFORE their in-flight meta was recorded (see
+        # DDSStorageServer._on_shed); reconciled right after booking.
+        self._orphan_sheds: set[int] = set()
         self._files_ready = False
 
     def busy(self) -> bool:
         """True while host requests are in flight (pump must keep stepping)."""
         return bool(self._inflight)
 
-    def step(self) -> int:
-        """Drain the host wire, then execute the WHOLE burst in one pass.
+    def step(self, max_pkts: int | None = None) -> int:
+        """Drain a bounded slice of the host wire, then execute the WHOLE
+        burst in one pass.
 
         Collect-then-execute lets the file I/O of a burst issue through
         ``DDSFrontEnd.submit_many`` (bulk rid reservation + one ring
-        reservation per group) instead of one ring round trip per message."""
-        n = self.server.director.drain_host_wire(self._collect)
+        reservation per group) instead of one ring round trip per message.
+        ``max_pkts`` bounds the slice per pump step (tail-latency: a hot
+        flow's backlog cannot delay other flows' responses a whole step —
+        the remainder stays on the wire and the server stays runnable)."""
+        n = self.server.director.drain_host_wire(self._collect, max_pkts)
         if self._burst:
             self._execute_burst()
         return n
@@ -368,8 +483,14 @@ class _HostApp:
         srv = self.server
         handler = srv.api.host_handler
         hdr_size = APP_HDR.size
+        # Lifecycle ingress stamp: rides the in-flight meta tuple (no
+        # per-request tracker state).  Taken at burst execution, which runs
+        # in the SAME pump step (same tick) as the director's demux unless
+        # a bounded drain slice deferred the packet.
+        now = srv.clock.now
+        lt = srv.lifecycle
         submits: list[tuple] = []   # ("w"|"r", file_id, offset, data|nbytes)
-        metas: list[tuple] = []     # (host_flow, typ, req_id, nbytes, ack)
+        metas: list[tuple] = []     # (host_flow, typ, req_id, nbytes, ack, t0)
         responses: dict[FiveTuple, list] = {}  # immediate 'resp' actions
         n_resp = 0
         for host_flow, m in msgs:
@@ -380,6 +501,9 @@ class _HostApp:
                 if kind == "resp":
                     _, req_id, status, body = action
                     n_resp += 1
+                    # Served inline this tick: a zero-delta completion.
+                    lt.hist["host_read" if typ in lt.read_types
+                            else "write"].add(0)
                     responses.setdefault(host_flow, []).append(
                         APP_RESP_HDR.pack(req_id, status, len(body)) + body)
                 elif kind == "w":
@@ -389,11 +513,12 @@ class _HostApp:
                     _, req_id, file_id, offset, data = action[:5]
                     submits.append(("w", file_id, offset, data))
                     metas.append((host_flow, APP_WRITE, req_id, len(data),
-                                  action[5] if len(action) > 5 else b""))
+                                  action[5] if len(action) > 5 else b"", now))
                 else:
                     _, req_id, file_id, offset, nbytes = action
                     submits.append(("r", file_id, offset, nbytes))
-                    metas.append((host_flow, APP_READ, req_id, nbytes, b""))
+                    metas.append((host_flow, APP_READ, req_id, nbytes, b"",
+                                  now))
                 continue
             typ, req_id, file_id, offset, nbytes = APP_HDR.unpack_from(m, 0)
             if typ == APP_WRITE:
@@ -401,7 +526,7 @@ class _HostApp:
                                 m[hdr_size : hdr_size + nbytes]))
             else:
                 submits.append(("r", file_id, offset, nbytes))
-            metas.append((host_flow, typ, req_id, nbytes, b""))
+            metas.append((host_flow, typ, req_id, nbytes, b"", now))
         # Modeled host CPU: network + app cost PER MESSAGE (batching the
         # simulator does not change what the host cores would burn), plus
         # the network cost of each immediate response.
@@ -414,24 +539,42 @@ class _HostApp:
             inflight = self._inflight
             for rid, meta in zip(rids, metas):
                 inflight[rid] = meta
+            orphans = self._orphan_sheds
+            if orphans:
+                # A shed fired inside submit_many (re-entrant ring-full
+                # step) before the meta above existed: finish the terminal
+                # marking now so nothing leaks and clients see E_SHED.  An
+                # orphan that does not match this burst was a direct
+                # front-end user's op (never ours) — drop it.
+                lt = srv.lifecycle
+                cf_of = srv.director._client_flow_of
+                for rid in orphans:
+                    meta = inflight.pop(rid, None)
+                    if meta is not None:
+                        lt.mark_shed(cf_of.get(meta[0], meta[0]), meta[2])
+                orphans.clear()
 
     def poll_completions(self) -> int:
         srv = self.server
         inflight = self._inflight
         per_flow: dict[FiveTuple, list] = {}
         n = 0
+        hist = srv.lifecycle.hist
+        now = srv.clock.now
+        r_add = hist["host_read"].add
+        w_add = hist["write"].add
         for gid in list(srv.frontend._groups):
             for c in srv.frontend.poll_wait(gid, 0.0):
                 info = inflight.pop(c.request_id, None)
                 if info is None:
                     continue
-                host_flow, typ, req_id, nbytes, ack_body = info
-                if c.error != wire.E_OK:
-                    body = b""
-                elif typ == APP_READ:
-                    body = c.data
+                host_flow, typ, req_id, nbytes, ack_body, t0 = info
+                if typ == APP_READ:
+                    body = c.data if c.error == wire.E_OK else b""
+                    r_add(now - t0)   # response-publish lifecycle stamp
                 else:
-                    body = ack_body
+                    body = ack_body if c.error == wire.E_OK else b""
+                    w_add(now - t0)
                 per_flow.setdefault(host_flow, []).append(
                     APP_RESP_HDR.pack(req_id, c.error, len(body)) + body)
                 n += 1
@@ -455,6 +598,12 @@ class DDSClient:
         self._lock = threading.Lock()
         self.responses: dict[int, tuple[int, bytes]] = {}
         self._rx_buf = bytearray()
+        # Issue-tick stamps + end-to-end (issue -> drain) per-class latency
+        # (read/write; the dpu/host split for reads is exact in the
+        # server's lifecycle histograms).
+        self._issued_r: dict[int, int] = {}
+        self._issued_w: dict[int, int] = {}
+        self.latency = ClientLatency()
         server.director.ingress.push(Packet(self.flow, 0, b"", flags=FLAG_SYN))
         server.signal()
         server.director.step()
@@ -468,6 +617,7 @@ class DDSClient:
         with self._lock:
             rid = self._next_req
             self._next_req += 1
+        self._issued_r[rid] = self.server.clock.now
         self._send(encode_batch([encode_app_read(rid, file_id, offset, nbytes)]))
         return rid
 
@@ -475,12 +625,14 @@ class DDSClient:
         with self._lock:
             rid = self._next_req
             self._next_req += 1
+        self._issued_w[rid] = self.server.clock.now
         self._send(encode_batch([encode_app_write(rid, file_id, offset, data)]))
         return rid
 
     def send_batch(self, msgs: list[tuple]) -> list[int]:
         """msgs: list of ("r", fid, off, n) / ("w", fid, off, data)."""
         encoded, rids = [], []
+        now = self.server.clock.now
         with self._lock:
             for m in msgs:
                 rid = self._next_req
@@ -488,8 +640,10 @@ class DDSClient:
                 rids.append(rid)
                 if m[0] == "r":
                     encoded.append(encode_app_read(rid, m[1], m[2], m[3]))
+                    self._issued_r[rid] = now
                 else:
                     encoded.append(encode_app_write(rid, m[1], m[2], m[3]))
+                    self._issued_w[rid] = now
         self._send(encode_batch(encoded))
         return rids
 
@@ -502,6 +656,9 @@ class DDSClient:
             first = self._next_req
             self._next_req += n
         rids = list(range(first, first + n))
+        now = self.server.clock.now
+        for rid in rids:
+            self._issued_w[rid] = now
         self._send(encode_batch([encode_app_write(rid, fid, off, data)
                                  for rid, (fid, off, data)
                                  in zip(rids, writes)]))
@@ -511,16 +668,43 @@ class DDSClient:
     def collect(self) -> int:
         """Drain OUR flow's responses off the demuxed client wire (shared
         implementation with the cluster's shard connections)."""
-        return drain_client_flow(self.server.director, self._resp_flow,
-                                 self._rx_buf, self.responses)
+        order: list[int] = []
+        n = drain_client_flow(self.server.director, self._resp_flow,
+                              self._rx_buf, self.responses, order)
+        if order:
+            self._record_latency(order)
+        return n
+
+    def _record_latency(self, rids: list[int]) -> None:
+        """End-to-end issue->drain ticks, classified read/write at issue."""
+        latency = self.latency
+        now = self.server.clock.now
+        reads = self._issued_r
+        writes = self._issued_w
+        for rid in rids:
+            t0 = reads.pop(rid, None)
+            if t0 is not None:
+                latency.record("read", now - t0)
+                continue
+            t0 = writes.pop(rid, None)
+            if t0 is not None:
+                latency.record("write", now - t0)
 
     def wait(self, rid: int, max_iters: int = 200_000) -> tuple[int, bytes]:
         # ``pump()`` already polls the device whenever the offload engine or
         # the host path is busy; the old unconditional per-spin
         # ``device.poll()`` here was pure overhead on idle iterations.
+        lt = self.server.lifecycle
         for _ in range(max_iters):
             self.collect()
             if rid in self.responses:
                 return self.responses.pop(rid)
+            if lt.take_shed(self.flow, rid):
+                # Terminal: the request was shed under overload — no
+                # response will EVER arrive.  Surface it instead of
+                # spinning the full iteration budget into a timeout.
+                self._issued_r.pop(rid, None)
+                self._issued_w.pop(rid, None)
+                return (wire.E_SHED, b"")
             self.server.pump()
         raise TimeoutError(f"no response for request {rid}")

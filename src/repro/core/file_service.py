@@ -60,6 +60,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core import wire
+from repro.core.lifecycle import TickClock
 from repro.core.ring import (FRAME_HDR, DMAEngine, ProgressiveRing, Region,
                              ResponseRing, frame, unframe_batch)
 from repro.storage.blockdev import STATUS_PENDING, BlockDevice
@@ -236,7 +237,11 @@ class SegmentFS:
 
     # -- data plane (async, zero-copy destinations) ---------------------------------
     def submit_read(self, file_id: int, offset: int, size: int,
-                    dest: memoryview, on_complete: Callable[[int], None]) -> None:
+                    dest: memoryview, on_complete: Callable[[int], None],
+                    priority: bool = False) -> None:
+        """``priority=True`` rides the device's priority submission queue —
+        the offload engine's latency-critical path (§6.2) never queues
+        behind host-path write runs."""
         f = self.files.get(file_id)
         if f is None or offset + size > f.size:
             on_complete(wire.E_INVAL if f else wire.E_NOENT)
@@ -248,7 +253,8 @@ class SegmentFS:
             # (device status codes coincide with wire error codes: 0 == E_OK,
             # nonzero values are failures either way).
             phys = f.segments[offset // seg_sz] * seg_sz + offset % seg_sz
-            self.device.submit_read(phys, size, dest, on_complete)
+            self.device.submit_read(phys, size, dest, on_complete,
+                                    priority=priority)
             return
         runs = self.translate(file_id, offset, size)
         state = {"left": len(runs), "err": wire.E_OK}
@@ -262,7 +268,8 @@ class SegmentFS:
 
         pos = 0
         for phys, n in runs:
-            self.device.submit_read(phys, n, dest[pos : pos + n], done_one)
+            self.device.submit_read(phys, n, dest[pos : pos + n], done_one,
+                                    priority=priority)
             pos += n
 
     def submit_write(self, file_id: int, offset: int, data,
@@ -404,6 +411,16 @@ class _PendingResp:
     request_id: int
     pad: bool = False  # wrap-padding slot: space only, never delivered
     done: bool = False
+    done_tick: int = 0    # tick the slot completed (age-based delivery)
+    # Write bookkeeping: ``wfid >= 0`` marks a write slot — the in-flight-
+    # write count for that file is decremented at completion, and (when a
+    # cache hook is installed) the §6.1 cache-on-write fires THEN, not at
+    # submission: a DPU cache entry must never point at bytes the device
+    # has not written yet (the priority read queue would happily overtake
+    # the write otherwise).
+    wfid: int = -1
+    woff: int = 0
+    wdata: object = None  # zero-copy view of the write payload (cache hook)
 
 
 @dataclass
@@ -422,6 +439,16 @@ class _GroupState:
     pending: deque = field(default_factory=deque)  # _PendingResp, alloc order
     ready: deque = field(default_factory=deque)    # completed, undelivered
     interrupt: Callable[[], None] | None = None  # "DPU driver interrupt"
+    # Held coalesced write run (latency-adaptive batching): adjacent
+    # same-file writes accumulate ACROSS ring batches and flush when a
+    # read/control op needs the barrier, the run outgrows the cap, the run
+    # is older than the tick budget, or the ring goes idle.
+    wv_file: int = -1
+    wv_off: int = 0
+    wv_end: int = 0
+    wv_bufs: list = field(default_factory=list)
+    wv_slots: list = field(default_factory=list)
+    wv_tick: int = 0   # tick the held run was started
 
 
 @dataclass
@@ -450,7 +477,12 @@ class FileServiceRunner:
                  delivery_batch: int = 1,
                  zero_copy: bool = True,
                  cache_hook: Callable[[int, int, object], None] | None = None,
-                 invalidate_hook: Callable[[int, int, int], None] | None = None):
+                 invalidate_hook: Callable[[int, int, int], None] | None = None,
+                 clock: TickClock | None = None,
+                 coalesce_ticks: int = 2,
+                 deliver_ticks: int = 2,
+                 coalesce_cap: int = 256,
+                 shed_hook: Callable[[int], None] | None = None):
         self.fs = fs
         self.dma = dma or DMAEngine()
         self.resp_buf_size = resp_buf_size
@@ -458,6 +490,29 @@ class FileServiceRunner:
         self.zero_copy = zero_copy
         self.cache_hook = cache_hook
         self.invalidate_hook = invalidate_hook
+        # Deterministic lifecycle clock: standalone runners own (and tick)
+        # their own; a DDSStorageServer/DDSCluster installs the shared one
+        # and ticks it once per pump step.
+        self.clock = clock if clock is not None else TickClock()
+        self._owns_clock = clock is None
+        # Latency-adaptive write coalescing: a held run flushes when it is
+        # ``coalesce_ticks`` old, when the ring goes idle, when a read or
+        # control op needs the device-order barrier, or at ``coalesce_cap``
+        # requests — batching never waits on an unbounded "full burst".
+        self.coalesce_ticks = coalesce_ticks
+        self.deliver_ticks = deliver_ticks
+        self.coalesce_cap = coalesce_cap
+        # In-flight write counts per file id (held + queued + at device):
+        # the offload engine's read/write fence probes this, and it feeds
+        # the cache-on-write-at-completion discipline.  Tracking is paid
+        # only when someone needs it — a cache hook is installed or the
+        # owning server enabled the read/write fence.
+        self.write_inflight: dict[int, int] = {}
+        self.track_writes = cache_hook is not None
+        # Invoked with the request id of a SHED request (the bounded
+        # E_NOSPC emergency path gave up) — the owning server surfaces a
+        # terminal "shed" status to clients through the lifecycle tracker.
+        self.shed_hook = shed_hook
         self.groups: dict[int, _GroupState] = {}
         self.stats = FileServiceStats()
         # Flat in-flight table: completion cookie -> (group, ((slot, req), ...)).
@@ -474,11 +529,26 @@ class FileServiceRunner:
         # serialize whole steps so the pipeline never runs two consumers.
         self._step_lock = threading.Lock()
 
+    # -- clock adoption (cluster layer) --------------------------------------------
+    def adopt_clock(self, clock: TickClock) -> None:
+        """Rebind every stamp point to a scheduler-owned shared clock and
+        stop self-ticking (the owner ticks once per scheduling step).  The
+        rebinding knowledge lives HERE, next to the state it mutates — a
+        future clock consumer inside the runner only needs updating in
+        this one place."""
+        self.clock = clock
+        self._owns_clock = False
+        for g in self.groups.values():
+            g.req_ring.clock = clock
+
     # -- registration (host lib calls this when a notification group is made) -----
     def register_group(self, group_id: int, req_ring: ProgressiveRing,
                        resp_ring: ResponseRing,
                        interrupt: Callable[[], None] | None = None) -> None:
         g = _GroupState(group_id, req_ring, resp_ring)
+        # Lifecycle instrumentation: the request ring records host-publish ->
+        # DPU-consume residency ticks against the service's clock.
+        req_ring.clock = self.clock
         # Request buffer sized >= the host ring: no outstanding request overlaps.
         g.req_buf = Region(f"dpu:req{group_id}", max(req_ring.capacity, 1 << 12))
         g.resp_buf = Region(f"dpu:resp{group_id}", self.resp_buf_size)
@@ -490,6 +560,8 @@ class FileServiceRunner:
     def step(self) -> int:
         """One iteration: fetch -> submit -> complete -> deliver. Returns work."""
         with self._step_lock:
+            if self._owns_clock:
+                self.clock.tick()   # standalone runner: step == tick
             work = 0
             with self._lock:
                 groups = list(self.groups.values())
@@ -546,7 +618,15 @@ class FileServiceRunner:
     def _fetch_and_submit(self, g: _GroupState) -> int:
         """Consume EVERY available batch in one burst (single IncHead
         doorbell), splitting each batch zero-copy and submitting the whole
-        decoded run through the coalescing write pipeline."""
+        decoded run through the coalescing write pipeline.
+
+        A trailing run of adjacent writes is HELD across batches (and
+        steps) so consecutive ring batches coalesce into one scatter-gather
+        submission — but the hold is latency-bounded: the run flushes as
+        soon as the ring goes idle this step, it reaches ``coalesce_ticks``
+        of age, or it hits ``coalesce_cap`` requests.  Reads and control
+        ops still flush it first (device-order barrier), so read-your-
+        writes is preserved exactly as before."""
         batches = g.req_ring.consume_batch(self.dma)
         for batch in batches:
             # Land the batch in the DPU request buffer (the DMA destination).
@@ -561,7 +641,13 @@ class FileServiceRunner:
                 g.req_buf.write(0, mv[first:])
             g.req_buf_tail += n
             self._submit_burst(g, unframe_batch(batch))
-        return len(batches)
+        work = len(batches)
+        if g.wv_slots and (
+                not batches   # ring idle: nothing to batch against — flush now
+                or self.clock.now - g.wv_tick >= self.coalesce_ticks):
+            self._flush_held(g)
+            work += 1
+        return work
 
     def _submit_burst(self, g: _GroupState, raws: list) -> None:
         """Execute a burst of raw framed requests.
@@ -573,9 +659,15 @@ class FileServiceRunner:
         scatter-gather submission — each request still gets its own
         pre-allocated response slot (acks stay per-request and ordered),
         but a run of k appends costs one capacity check, one translate and
-        O(segment runs) device ops instead of k.  A read or control op
-        flushes the pending run first, so device submission order — and
-        therefore read-your-writes within a burst — is preserved.
+        O(segment runs) device ops instead of k.  The trailing run is HELD
+        on the group (``_fetch_and_submit`` flushes it on idle/age/cap) so
+        adjacent writes from consecutive batches merge too.  A read or
+        control op flushes the pending run first, so device submission
+        order — and therefore read-your-writes within and across bursts —
+        is preserved.  Cache-on-write (§6.1) fires at write COMPLETION (see
+        ``_finish``), never here: a cache entry must not point at
+        un-written bytes while offloaded reads can overtake writes via the
+        device's priority queue.
         """
         stats = self.stats
         stats.requests += len(raws)
@@ -585,11 +677,8 @@ class FileServiceRunner:
         unpack = wire.REQ_HDR.unpack_from
         hdr_size = wire.REQ_HDR.size
         resp_hdr_size = wire.RESP_HDR.size
-        wv_file = -1      # pending coalesced write run
-        wv_off = 0
-        wv_end = 0
-        wv_bufs: list = []
-        wv_slots: list = []
+        wif = self.write_inflight
+        track = self.track_writes
         for raw in raws:
             op, rid, fid, off, nbytes = unpack(raw, 0)
             if op == wire.OP_WRITE:
@@ -602,26 +691,31 @@ class FileServiceRunner:
                 if not zero_copy:
                     data = bytes(data)  # defensive copy zero-copy mode avoids
                     stats.request_copies += 1
-                if wv_slots and fid == wv_file and off == wv_end:
-                    wv_bufs.append(data)
-                    wv_slots.append(slot)
-                    wv_end += nbytes
+                if track:
+                    slot.wfid = fid
+                    slot.woff = off
+                    if cache_hook is not None:
+                        slot.wdata = data  # cache-on-write, hooked at completion
+                    wif[fid] = wif.get(fid, 0) + 1
+                if g.wv_slots and fid == g.wv_file and off == g.wv_end:
+                    g.wv_bufs.append(data)
+                    g.wv_slots.append(slot)
+                    g.wv_end += nbytes
                 else:
-                    if wv_slots:
-                        self._flush_writev(g, wv_file, wv_off, wv_bufs, wv_slots)
-                    wv_file, wv_off = fid, off
-                    wv_end = off + nbytes
-                    wv_bufs = [data]
-                    wv_slots = [slot]
-                if cache_hook:
-                    cache_hook(fid, off, data)  # cache-on-write (§6.1)
+                    if g.wv_slots:
+                        self._flush_held(g)
+                    g.wv_file, g.wv_off = fid, off
+                    g.wv_end = off + nbytes
+                    g.wv_bufs = [data]
+                    g.wv_slots = [slot]
+                    g.wv_tick = self.clock.now
+                if len(g.wv_slots) >= self.coalesce_cap:
+                    self._flush_held(g)
                 continue
             # Reads/control ops must hit the device AFTER writes queued
             # before them in the burst: flush the pending run first.
-            if wv_slots:
-                self._flush_writev(g, wv_file, wv_off, wv_bufs, wv_slots)
-                wv_bufs = []
-                wv_slots = []
+            if g.wv_slots:
+                self._flush_held(g)
             if op == wire.OP_READ:
                 slot = self._alloc_slot(g, rid, resp_hdr_size + nbytes)
                 if slot is None:
@@ -659,8 +753,16 @@ class FileServiceRunner:
                 slot = self._alloc_slot(g, rid, wire.response_size_for(req))
                 if slot is not None:
                     self._control_op(g, slot, req)
-        if wv_slots:
-            self._flush_writev(g, wv_file, wv_off, wv_bufs, wv_slots)
+        # The trailing write run stays HELD on the group — the next batch
+        # may extend it; ``_fetch_and_submit`` bounds the hold by idle/age.
+
+    def _flush_held(self, g: _GroupState) -> None:
+        """Submit the group's held coalesced write run (one cookie)."""
+        bufs, slots = g.wv_bufs, g.wv_slots
+        file_id, offset = g.wv_file, g.wv_off
+        g.wv_bufs, g.wv_slots = [], []
+        g.wv_file = -1
+        self._flush_writev(g, file_id, offset, bufs, slots)
 
     def _alloc_slot(self, g: _GroupState, rid: int,
                     resp_size: int) -> _PendingResp | None:
@@ -767,6 +869,11 @@ class FileServiceRunner:
                     g.interrupt()
                 return
         self.stats.shed_requests += 1
+        if self.shed_hook is not None:
+            # Surface the terminal state: no response will ever arrive for
+            # this request id — the server marks it shed in its lifecycle
+            # tracker so clients stop waiting instead of timing out.
+            self.shed_hook(rid)
 
     # -- response-buffer helpers -------------------------------------------------------
     def _resp_view(self, g: _GroupState, voff: int, n: int) -> memoryview:
@@ -786,10 +893,30 @@ class FileServiceRunner:
     def _finish(self, g: _GroupState, slot: _PendingResp, err: int) -> None:
         """I/O completion: write the final response header and flip the
         slot's pending flag (the in-memory E_PENDING -> status transition
-        of §4.3) so the delivery scan picks it up in order."""
+        of §4.3) so the delivery scan picks it up in order.
+
+        Write slots additionally release their in-flight-write count and —
+        only now, with the bytes durably on the device — fire the §6.1
+        cache-on-write hook, so the DPU cache can never map a key to data
+        a priority-queue read could observe before it exists."""
         self._write_resp_header(g, slot.off, slot.request_id, err,
                                 slot.size - wire.RESP_HDR.size)
         slot.done = True
+        slot.done_tick = self.clock.now
+        fid = slot.wfid
+        if fid >= 0:
+            slot.wfid = -1
+            wif = self.write_inflight
+            c = wif.get(fid, 0) - 1
+            if c > 0:
+                wif[fid] = c
+            else:
+                wif.pop(fid, None)
+            data = slot.wdata
+            if data is not None:
+                slot.wdata = None
+                if err == wire.E_OK:
+                    self.cache_hook(fid, slot.woff, data)
 
     # -- delivery (TailB/TailC discipline) ------------------------------------------
     def _deliver(self, g: _GroupState) -> int:
@@ -804,7 +931,14 @@ class FileServiceRunner:
             g.tail_b = slot.off + slot.size
             if not slot.pad:
                 g.ready.append(slot)
-        if g.tail_b - g.tail_c < self.delivery_batch or not g.ready:
+        if not g.ready:
+            return 0
+        if (g.tail_b - g.tail_c < self.delivery_batch
+                and self.clock.now - g.ready[0].done_tick < self.deliver_ticks):
+            # Latency-adaptive delivery: batch responses for DMA efficiency
+            # (``delivery_batch`` > 1), but never hold a completed response
+            # past ``deliver_ticks`` — the age of the OLDEST ready slot
+            # bounds the wait, so a trickle of responses still flushes.
             return 0
         # ONE gathered DMA write + ONE doorbell deliver as many ready
         # responses as the host ring accepts: frame headers interleave with

@@ -143,6 +143,11 @@ class NotificationGroup:
             comps = self._drain_ring()
         return comps
 
+    def cancel(self, rid: int) -> bool:
+        """Drop a booked op whose completion will never arrive (shed)."""
+        with self._lock:
+            return self._ops.pop(rid, None) is not None
+
     @property
     def outstanding(self) -> int:
         return len(self._ops)  # atomic len read; no lock on the poll path
@@ -198,6 +203,18 @@ class DDSFrontEnd:
         """True while any notification group has un-polled operations."""
         for g in self._groups.values():
             if g.outstanding:
+                return True
+        return False
+
+    def cancel(self, rid: int) -> bool:
+        """Un-book a request whose completion will never arrive.
+
+        The file service reports SHED requests (bounded E_NOSPC emergency
+        path exhausted) through its ``shed_hook``; without cancellation the
+        booked op would hold ``any_outstanding()`` true forever and wedge
+        the owning server in a busy-but-unpumpable state."""
+        for g in self._groups.values():
+            if g.cancel(rid):
                 return True
         return False
 

@@ -1,0 +1,211 @@
+"""Deterministic request-lifecycle clock + tick-latency accounting.
+
+The paper's headline claim is *latency* (§8, Figs 14a/15a: offloaded reads
+complete in 780 us vs 11 ms on the host path) — but wall-clock latency of a
+cooperative simulator measures the Python interpreter, not the system.  This
+module provides the deterministic alternative:
+
+``TickClock``
+    A logical clock advanced ONCE per scheduling step — ``DDSCluster.pump``
+    (every shard of a cluster shares its cluster's clock) or a standalone
+    ``DDSStorageServer.pump`` / ``FileServiceRunner.step``.  Nothing reads
+    wall time, so two identical runs produce byte-identical latency
+    distributions (regression-tested).
+
+``TickHistogram``
+    An exact integer histogram (dict of tick-delta -> count) with
+    deterministic ``percentile``; no sampling, no binning error.
+
+``LifecycleTracker``
+    Per-server request stamping across the whole data plane:
+
+      client issue      (clients stamp their own ``issue`` ticks)
+      wire ingress +    the ingress tick rides EXISTING per-request state —
+      offload decision  the context-ring slot (a plain int) for offloaded
+                        reads, the host app's in-flight meta tuple for
+                        host-bound requests — so no stamp allocates
+      device submit/    ``BlockDevice`` stamps every op (completion-latency
+      complete          histogram in its stats)
+      response publish  deltas land in the per-class histogram: offloaded
+                        GET (``dpu_read``), host-served read (``host_read``)
+                        or ``write``
+      response drain    clients record end-to-end issue->drain ticks,
+                        classified read/write at issue time (the
+                        offloaded-vs-host split for reads lives in the
+                        server-side histograms, where it is exact)
+
+    A request shed under overload (the file service's bounded E_NOSPC
+    emergency path gave up) gets a terminal ``shed`` mark instead of
+    silently vanishing — clients surface it from ``take_shed`` rather than
+    spinning into a timeout heuristic.
+
+Everything here is deliberately allocation-light (int ticks, plain dicts)
+because the stamps ride the hot path; a component whose ``lifecycle`` is
+``None`` pays a single attribute test.
+"""
+
+from __future__ import annotations
+
+
+class TickClock:
+    """Monotonic logical clock; one tick per scheduling step."""
+
+    __slots__ = ("now",)
+
+    def __init__(self) -> None:
+        self.now = 0
+
+    def tick(self) -> int:
+        self.now += 1
+        return self.now
+
+
+class TickHistogram:
+    """Exact integer-delta histogram with deterministic percentiles.
+
+    Deliberately nothing but the counts dict: an ``add`` is two dict ops
+    (the stamp rides every completion on the data plane); sample count,
+    total and mean are derived on demand.
+    """
+
+    __slots__ = ("counts",)
+
+    def __init__(self) -> None:
+        self.counts: dict[int, int] = {}
+
+    def add(self, delta: int) -> None:
+        c = self.counts
+        c[delta] = c.get(delta, 0) + 1
+
+    def merge(self, other: "TickHistogram") -> None:
+        c = self.counts
+        for d, k in other.counts.items():
+            c[d] = c.get(d, 0) + k
+
+    @property
+    def n(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def total(self) -> int:
+        return sum(d * k for d, k in self.counts.items())
+
+    def percentile(self, p: float) -> int:
+        """Smallest delta covering ``p`` percent of samples (exact)."""
+        n = self.n
+        if not n:
+            return 0
+        need = -(-n * p // 100)  # ceil(n * p / 100), integer math
+        cum = 0
+        d = 0
+        for d in sorted(self.counts):
+            cum += self.counts[d]
+            if cum >= need:
+                return d
+        return d
+
+    def mean(self) -> float:
+        n = self.n
+        return self.total / n if n else 0.0
+
+    def as_dict(self) -> dict[str, int]:
+        """JSON-stable exact histogram (sorted keys, str-keyed)."""
+        return {str(d): self.counts[d] for d in sorted(self.counts)}
+
+    def summary(self) -> dict:
+        n = self.n
+        return {
+            "count": n,
+            "mean": round(self.total / n, 3) if n else 0.0,
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "p99": self.percentile(99),
+            "max": max(self.counts) if self.counts else 0,
+        }
+
+
+# Terminal serving-path classes.
+DPU_READ = "dpu_read"
+HOST_READ = "host_read"
+WRITE = "write"
+
+
+class LifecycleTracker:
+    """Per-server request stamping + per-class completion-tick histograms.
+
+    The tracker itself keeps NO per-request state: ingress ticks ride
+    existing per-request structures — the offload engine's context-ring
+    slot for DPU reads (a plain int) and the host app's in-flight meta
+    tuple for host-bound requests — so completion just computes a delta
+    and bumps an exact histogram.  Only terminal SHED marks are stored
+    here (there is no other structure left to carry them).
+    """
+
+    __slots__ = ("clock", "read_types", "_shed", "hist", "sheds")
+
+    def __init__(self, clock: TickClock, read_types=None):
+        self.clock = clock
+        # Type bytes (msg[0]) that classify a message as a READ — a set
+        # membership test instead of a per-message classifier call (the
+        # stamp rides the host-path data plane).  The server passes the
+        # §8.1 default; the KV app passes {KV_GET}.
+        self.read_types = frozenset(read_types or ())
+        self._shed: dict[tuple, int] = {}               # (flow, rid) -> tick
+        self.hist: dict[str, TickHistogram] = {
+            DPU_READ: TickHistogram(),
+            HOST_READ: TickHistogram(),
+            WRITE: TickHistogram(),
+        }
+        self.sheds = 0
+
+    # -- terminal shed status ----------------------------------------------------
+    def mark_shed(self, flow, rid: int) -> None:
+        """The request was SHED (bounded E_NOSPC path gave up): no response
+        will ever arrive.  Clients poll ``take_shed`` instead of timing out."""
+        self._shed[(flow, rid)] = self.clock.now
+        self.sheds += 1
+
+    def take_shed(self, flow, rid: int) -> bool:
+        return self._shed.pop((flow, rid), None) is not None
+
+    def summary(self) -> dict:
+        out = {cls: h.summary() for cls, h in self.hist.items() if h.n}
+        if self.sheds:
+            out["sheds"] = self.sheds
+        return out
+
+    def histograms(self) -> dict:
+        """Exact per-class histograms (determinism tests compare these)."""
+        return {cls: h.as_dict() for cls, h in self.hist.items()}
+
+
+class ClientLatency:
+    """Client-side end-to-end (issue tick -> drain tick) per-class stats.
+
+    Deltas are computed by the caller against its own clock reference (so
+    clock adoption never needs to rebuild this object); this is just the
+    per-class histogram bag."""
+
+    __slots__ = ("hist",)
+
+    def __init__(self) -> None:
+        self.hist: dict[str, TickHistogram] = {}
+
+    def hist_for(self, cls: str) -> TickHistogram:
+        """The class histogram, created on first use (hoistable: callers on
+        a hot drain loop bind ``hist_for(cls).add`` once per burst)."""
+        h = self.hist.get(cls)
+        if h is None:
+            h = self.hist[cls] = TickHistogram()
+        return h
+
+    def record(self, cls: str, delta: int) -> None:
+        self.hist_for(cls).add(delta)
+
+    def summary(self) -> dict:
+        return {cls: h.summary() for cls, h in sorted(self.hist.items())
+                if h.n}
+
+    def histograms(self) -> dict:
+        return {cls: h.as_dict() for cls, h in sorted(self.hist.items())
+                if h.n}

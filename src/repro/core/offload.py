@@ -83,6 +83,11 @@ class OffloadAPI:
     # header once instead of twice (OffFunc + response_header both unpack).
     prepare_read: Callable[[bytes, CacheTable | None],
                            tuple["ReadOp", bytes] | None] | None = None
+    # Lifecycle classifier: the message TYPE BYTES that mean "read", used
+    # by the server's LifecycleTracker to split host-path completion-tick
+    # histograms into host-read vs write classes (a set probe per message,
+    # not a call).  None => the server's default ({APP_READ}).
+    read_types: frozenset | None = None
 
 
 SLAB_MIN_SHIFT = 6  # smallest size class: 64 B (one cache line)
@@ -243,6 +248,7 @@ class _Context:
     buf: memoryview | None = None
     app_hdr: bytes = b""
     consumed: bool = True
+    open_tick: int = 0       # ingress tick (lifecycle stamp; plain int)
 
     def mark(self, err: int) -> None:
         """Device-completion callback (bound method: no per-op closure)."""
@@ -282,6 +288,19 @@ class OffloadEngine:
         self._head = 0
         self._tail = 0
         self.stats = OffloadStats()
+        # Request-lifecycle stamping, installed by the owning server.
+        self.lifecycle = None
+        # Optional read/write fence (ServerConfig.read_write_fence): a live
+        # view of the file service's in-flight-write counts.  An offloaded
+        # read of a file whose writes are still in the FILE-SERVICE
+        # pipeline (held in a coalescing run, ring-queued, or at the
+        # device) is bounced to the host, where the submission FIFO orders
+        # it AFTER those writes.  The fence starts where the file service
+        # accepts a write — a read demuxed in the same pump step as its
+        # write (still on the host wire) is NOT fenced, exactly the window
+        # the pre-overhaul FIFO device never ordered either; acked writes
+        # are always visible regardless (acks follow device completion).
+        self.busy_files: dict | None = None
 
     def in_flight(self) -> bool:
         """True while context-ring slots await completion or consumption.
@@ -322,6 +341,11 @@ class OffloadEngine:
         submit_read = self.fs.submit_read
         ring, ring_size = self._ring, self.ring_size
         zero_copy = self.zero_copy
+        lifecycle = self.lifecycle
+        # One clock read covers the whole burst: the clock only ticks at
+        # scheduling-step boundaries, never inside a step.
+        now_tick = lifecycle.clock.now if lifecycle is not None else 0
+        busy_files = self.busy_files
         tail = self._tail
         for i, (client, raw) in enumerate(reqs):
             if tail - self._head >= ring_size:
@@ -346,6 +370,12 @@ class OffloadEngine:
                     self._bounce_to_host(client, raw)
                     continue
                 ok_hdr = None
+            if busy_files is not None and read_op.file_id in busy_files:
+                # Read/write fence: writes to this file are still in flight
+                # on the host path — serve the read there too, so the file
+                # service's submission FIFO orders it after them.
+                self._bounce_to_host(client, raw)
+                continue
             alloc = allocate(PKT_HEADROOM + read_op.size)
             if alloc is None:
                 self._bounce_to_host(client, raw)
@@ -361,9 +391,13 @@ class OffloadEngine:
             ctx.app_hdr = (ok_hdr if ok_hdr is not None
                            else app_header(raw, read_op, wire.E_OK))
             ctx.consumed = False
+            ctx.open_tick = now_tick
             tail += 1
             self._tail = tail
             # Destination = pool memory; the device writes it exactly once.
+            # Offloaded reads ride the device's PRIORITY queue: the
+            # latency-critical path never waits behind host-path write runs
+            # (the normal queue keeps a bounded interleave share).
             dest = view[PKT_HEADROOM : PKT_HEADROOM + read_op.size]
             if not zero_copy:
                 scratch = bytearray(read_op.size)
@@ -375,10 +409,11 @@ class OffloadEngine:
                     ctx.status = COMPLETE if err == wire.E_OK else FAILED
 
                 self.fs.submit_read(read_op.file_id, read_op.offset,
-                                    read_op.size, memoryview(scratch), done)
+                                    read_op.size, memoryview(scratch), done,
+                                    priority=True)
             else:
                 submit_read(read_op.file_id, read_op.offset, read_op.size,
-                            dest, ctx.mark)
+                            dest, ctx.mark, priority=True)
             work += 1
         self._tail = tail
         self.stats.offloaded += work
@@ -386,6 +421,8 @@ class OffloadEngine:
         return work + self.complete_pending()
 
     def _bounce_to_host(self, client: FiveTuple, raw: bytes) -> None:
+        # The bounced read re-enters the host path, where the host app's
+        # in-flight meta stamps it — it finishes in the host_read class.
         conn = self.director._conn(client)
         self.director._send_to_host(conn, client, raw)
         self.stats.bounced_to_host += 1
@@ -405,6 +442,10 @@ class OffloadEngine:
         ring, ring_size = self._ring, self.ring_size
         stats = self.stats
         pool = self.pool
+        lifecycle = self.lifecycle
+        if lifecycle is not None:
+            dpu_hist_add = lifecycle.hist["dpu_read"].add
+            now_tick = lifecycle.clock.now
         completed = failed = bytes_served = 0
         burst_client = None
         burst: list[Packet] = []
@@ -415,6 +456,9 @@ class OffloadEngine:
             if ctx.status == PENDING:
                 break  # preserve response order
             if not ctx.consumed:
+                if lifecycle is not None:
+                    # Response-publish tick for this offloaded read.
+                    dpu_hist_add(now_tick - ctx.open_tick)
                 pkts = self._create_pkts(ctx)
                 if ctx.status == COMPLETE:
                     # Indirect packets reference pool memory: ownership rides

@@ -36,9 +36,12 @@ from __future__ import annotations
 import struct
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.core.lifecycle import TickHistogram
 
 CACHE_LINE = 64
 
@@ -248,6 +251,15 @@ class ProgressiveRing:
         # inserting into the ring marks the consuming server runnable — the
         # host->DPU mirror of the paper's doorbell DMA write.
         self.doorbell = None
+        # Request-lifecycle instrumentation (repro.core.lifecycle): when a
+        # TickClock is installed, every publish is stamped and the consumer
+        # records publish->consume tick residency — the host-submit ->
+        # DPU-fetch segment of the request lifecycle.  One deque entry per
+        # PUBLISHED CHUNK (not per message), so the cost is amortized over
+        # the batch exactly like the doorbell.
+        self.clock = None
+        self.residency = None            # TickHistogram, lazily created
+        self._pub_ticks: deque = deque()  # (progress-after-publish, tick)
 
     # -- producer side (host threads), Fig 8a --------------------------------
     def _reserve(self, n: int) -> int | None:
@@ -265,6 +277,20 @@ class ProgressiveRing:
                 continue
             return tail
 
+    def _publish(self, n: int) -> None:
+        """Fetch-add the progress pointer (publish) + ring the doorbell.
+
+        With a TickClock installed, the publish is also stamped so the
+        consumer can record publish->consume residency ticks — one stamp
+        per published chunk, amortized like the doorbell itself."""
+        old = self._atom.fetch_add(self.base + OFF_PROG, n)
+        clk = self.clock
+        if clk is not None:
+            self._pub_ticks.append((old + n, clk.now))
+        db = self.doorbell
+        if db is not None:
+            db()
+
     def try_insert(self, msg: bytes) -> str:
         n = len(msg)
         assert 0 < n <= self.max_progress, "message exceeds max allowable progress"
@@ -272,10 +298,7 @@ class ProgressiveRing:
         if tail is None:
             return RETRY
         self._copy_in(tail, msg)                      # lock-free data path
-        self._atom.fetch_add(self.base + OFF_PROG, n)  # publish completion
-        db = self.doorbell
-        if db is not None:
-            db()
+        self._publish(n)                               # publish completion
         return OK
 
     def try_insert_v(self, parts) -> str:
@@ -296,10 +319,7 @@ class ProgressiveRing:
         for p in parts:
             self._copy_in(voff, p)
             voff += len(p)
-        self._atom.fetch_add(self.base + OFF_PROG, n)  # publish completion
-        db = self.doorbell
-        if db is not None:
-            db()
+        self._publish(n)                               # publish completion
         return OK
 
     def insert(self, msg: bytes, spin: int = 1_000_000) -> None:
@@ -359,10 +379,7 @@ class ProgressiveRing:
                 for p in msgs[k]:
                     self._copy_in(voff, p)
                     voff += len(p)
-            self._atom.fetch_add(self.base + OFF_PROG, total)
-            db = self.doorbell
-            if db is not None:
-                db()   # one doorbell per published chunk, like the CAS
+            self._publish(total)  # one doorbell/stamp per chunk, like the CAS
             i = j
 
     def _copy_in(self, voff: int, msg: bytes) -> None:
@@ -388,6 +405,7 @@ class ProgressiveRing:
         dma.write_u64(self.host, self.base + OFF_HEAD, tail)
         # keep the atomics view coherent for local producers
         self._atom.store(self.base + OFF_HEAD, tail)
+        self._note_consumed(tail)
         return batch
 
     def consume_batch(self, dma: DMAEngine, max_rounds: int = 8) -> list[bytes]:
@@ -413,7 +431,24 @@ class ProgressiveRing:
             # One doorbell covers every batch consumed this burst.
             dma.write_u64(self.host, self.base + OFF_HEAD, head)
             self._atom.store(self.base + OFF_HEAD, head)
+            self._note_consumed(head)
         return batches
+
+    def _note_consumed(self, head: int) -> None:
+        """Record publish->consume residency for every chunk now consumed."""
+        pt = self._pub_ticks
+        if not pt:
+            return
+        clk = self.clock
+        if clk is None:
+            pt.clear()
+            return
+        res = self.residency
+        if res is None:
+            res = self.residency = TickHistogram()
+        now = clk.now
+        while pt and pt[0][0] <= head:
+            res.add(now - pt.popleft()[1])
 
     def _dma_read_range(self, dma: DMAEngine, voff: int, n: int) -> bytes:
         cap = self.capacity

@@ -488,16 +488,25 @@ class TrafficDirector:
         self.to_client.push(Packet(conn.resp_flow, conn.client_resp_seq, msg))
         conn.client_resp_seq += len(msg)
 
-    def drain_host_wire(self, deliver: Callable[[FiveTuple, bytes], None]) -> int:
+    def drain_host_wire(self, deliver: Callable[[FiveTuple, bytes], None],
+                        max_pkts: int | None = None) -> int:
         """Pump packets that crossed to the host into the host application.
 
         Payloads are handed over as-is (possibly ``memoryview`` slices of
         the client's packet buffer): whether to materialize is the host
         application's call — the write path rides views all the way into
-        the request ring (zero-copy end to end)."""
+        the request ring (zero-copy end to end).
+
+        ``max_pkts`` bounds the drain slice: one hot flow's backlog cannot
+        monopolize a whole pump step — the remainder stays queued (and
+        ``busy()`` keeps the server runnable), so other flows' already-
+        completed work gets its response-publish turn this step."""
         n = 0
         while True:
-            pkts = self.to_host.pop_many(64)
+            budget = 64 if max_pkts is None else min(64, max_pkts - n)
+            if budget <= 0:
+                return n
+            pkts = self.to_host.pop_many(budget)
             if not pkts:
                 return n
             for pkt in pkts:

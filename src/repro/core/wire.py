@@ -33,6 +33,11 @@ E_NOENT = 2
 E_IO = 5
 E_INVAL = 22
 E_NOSPC = 28
+# Terminal client-side status for a request SHED under overload: the file
+# service's bounded E_NOSPC emergency path gave up, so no response will
+# ever arrive.  Never travels on the wire — clients synthesize it from the
+# lifecycle tracker's shed marks instead of spinning into a timeout.
+E_SHED = 131
 
 # request header: op(u8) request_id(u64) file_id(u32) offset(u64) nbytes(u32)
 REQ_HDR = struct.Struct("<BQIQI")

@@ -51,6 +51,7 @@ from dataclasses import dataclass, field, replace
 from typing import Callable, Iterable
 
 from repro.core.dds_server import DDSStorageServer, ServerConfig
+from repro.core.lifecycle import TickClock, TickHistogram
 from repro.core.offload import OffloadAPI
 
 
@@ -180,12 +181,18 @@ class DDSCluster:
         self.servers: list[DDSStorageServer] = []
         self._ready = ReadySet(num_shards)
         self.pump_steps = [0] * num_shards   # per-shard srv.pump() count
+        # The cluster's deterministic lifecycle clock: ONE tick per cluster
+        # pump step, shared by every shard (devices, file services, rings,
+        # lifecycle trackers), so tick latencies are comparable across
+        # shards and two identical runs produce identical histograms.
+        self.clock = TickClock()
         for i in range(num_shards):
             # Each shard listens on its own port so application signatures
             # stay per-server, exactly as N separate Fig-6 boxes would.
             cfg = replace(base, server_port=base.server_port + i)
             api = api_factory(i) if api_factory is not None else None
             srv = DDSStorageServer(cfg, api)
+            srv.adopt_clock(self.clock)
             # Every producer doorbell (client send, ring insert, device
             # submission) for this shard now arms it in the ready set.
             srv.set_doorbell(lambda i=i: self._ready.mark(i))
@@ -244,6 +251,7 @@ class DDSCluster:
         producer signals (client sends, ring publishes, device
         submissions); a new producer must too.
         """
+        self.clock.tick()   # one tick per scheduling step (lifecycle clock)
         runnable = self._ready.take()
         servers = self.servers
         if not runnable:
@@ -307,3 +315,45 @@ class DDSCluster:
     def makespan_s(self) -> float:
         """Modeled completion time: the busiest shard bounds the cluster."""
         return max(self.stats().per_shard_busy_s, default=0.0)
+
+    def latency_stats(self) -> dict:
+        """Cluster-wide measured tick-latency distributions.
+
+        Merges every shard's per-class lifecycle histograms and device
+        completion histograms (all stamped against the SHARED cluster
+        clock, so merging is meaningful).  Exact histograms are available
+        via ``latency_histograms`` for determinism checks."""
+        classes = self._merged_classes()
+        dev = TickHistogram()
+        dev_prio = TickHistogram()
+        sheds = 0
+        for srv in self.servers:
+            sheds += srv.lifecycle.sheds
+            dev.merge(srv.device.stats.completion_ticks)
+            dev_prio.merge(srv.device.stats.prio_completion_ticks)
+        out = {"classes": {c: h.summary() for c, h in classes.items() if h.n}}
+        if sheds:
+            out["sheds"] = sheds
+        if dev.n:
+            out["device"] = dev.summary()
+        if dev_prio.n:
+            out["device_prio"] = dev_prio.summary()
+        return out
+
+    def _merged_classes(self) -> dict:
+        """Every shard's per-class lifecycle histograms, merged (stamps all
+        ride the SHARED cluster clock, so merging is meaningful)."""
+        classes: dict[str, TickHistogram] = {}
+        for srv in self.servers:
+            for cls, h in srv.lifecycle.hist.items():
+                agg = classes.get(cls)
+                if agg is None:
+                    agg = classes[cls] = TickHistogram()
+                agg.merge(h)
+        return classes
+
+    def latency_histograms(self) -> dict:
+        """Exact merged per-class histograms (byte-identical across two
+        same-seed runs — the determinism gate compares these)."""
+        return {c: h.as_dict()
+                for c, h in sorted(self._merged_classes().items()) if h.n}

@@ -22,6 +22,8 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.lifecycle import TickClock, TickHistogram
+
 # v5-era datacenter NVMe-ish constants (§8.1: 1 TB NVMe SSD, 100-200us access).
 DEFAULT_READ_LATENCY_S = 90e-6
 DEFAULT_WRITE_LATENCY_S = 25e-6
@@ -44,6 +46,7 @@ class IoOp:
     status: int = STATUS_PENDING
     modeled_done_s: float = 0.0
     cookie: int | None = None      # completion-queue tag (see ``reap``)
+    submit_tick: int = 0           # logical submission time (TickClock)
 
 
 @dataclass
@@ -54,16 +57,36 @@ class BlockDeviceStats:
     write_bytes: int = 0
     modeled_busy_s: float = 0.0
     max_queue_depth_seen: int = 0
+    # Submit -> complete latency in TICKS of the owning scheduler's clock
+    # (deterministic; see repro.core.lifecycle).  Split by queue so the
+    # priority path's isolation — and the normal path's bounded starvation —
+    # are both directly observable.
+    completion_ticks: TickHistogram = field(default_factory=TickHistogram)
+    prio_completion_ticks: TickHistogram = field(default_factory=TickHistogram)
 
 
 class BlockDevice:
-    """RAM-backed block device with an async queue interface."""
+    """RAM-backed block device with an async queue interface.
+
+    Two NVMe-style submission queues (each completed strictly in order):
+
+      * the NORMAL queue — host-path reads/writes (the file service), and
+      * the PRIORITY queue — latency-critical offloaded reads
+        (``submit_read(priority=True)``), which ``poll`` serves FIRST.
+
+    Starvation is bounded by ``prio_interleave``: when the normal queue is
+    non-empty, at least ``budget // prio_interleave`` (>= 1) of each poll's
+    completion budget is reserved for it, so a sustained priority-read storm
+    cannot park writes — they complete within a bounded number of polls of
+    submission (property-tested in tests/test_latency.py).
+    """
 
     def __init__(self, capacity: int, block_size: int = 4096,
                  read_latency_s: float = DEFAULT_READ_LATENCY_S,
                  write_latency_s: float = DEFAULT_WRITE_LATENCY_S,
                  bandwidth_Bps: float = DEFAULT_BANDWIDTH_BPS,
-                 queue_depth: int = DEFAULT_QUEUE_DEPTH):
+                 queue_depth: int = DEFAULT_QUEUE_DEPTH,
+                 prio_interleave: int = 4):
         assert capacity % block_size == 0
         self.capacity = capacity
         self.block_size = block_size
@@ -71,13 +94,19 @@ class BlockDevice:
         self.write_latency_s = write_latency_s
         self.bandwidth_Bps = bandwidth_Bps
         self.queue_depth = queue_depth
+        self.prio_interleave = max(1, prio_interleave)
         self._mem = np.zeros(capacity, dtype=np.uint8)
         self._memv = memoryview(self._mem)  # C-speed byte copies in poll()
         self._queue: deque[IoOp] = deque()
+        self._pq: deque[IoOp] = deque()     # priority queue (offloaded reads)
         self._cookie_done: list[tuple[int, int]] = []  # completion queue
         self._lock = threading.Lock()
         self._clock_s = 0.0  # modeled device clock
         self.stats = BlockDeviceStats()
+        # Logical clock for submit->complete tick stamps; the owning server
+        # (or cluster) replaces it with the shared scheduler clock.  The
+        # device never ticks it — schedulers do, once per pump step.
+        self.clock = TickClock()
         # Work-signaled scheduling hook: invoked on every submission (and
         # synchronous completion push) so the owning server is marked
         # runnable even when the submitter is not the server's own pump —
@@ -93,7 +122,7 @@ class BlockDevice:
     # bulk by ``reap()`` — the NVMe completion-queue shape, which lets the
     # file service process a whole burst of completions without a Python
     # closure per submitted op.
-    def _enqueue(self, op: IoOp) -> IoOp:
+    def _enqueue(self, op: IoOp, priority: bool = False) -> IoOp:
         if op.lba < 0 or op.lba + op.nbytes > self.capacity:
             op.status = STATUS_EINVAL
             if op.on_complete:
@@ -104,9 +133,10 @@ class BlockDevice:
                 if db is not None:
                     db()   # a completion is pending: keep the owner runnable
             return op
-        q = self._queue
+        op.submit_tick = self.clock.now
+        q = self._pq if priority else self._queue
         q.append(op)
-        d = len(q)
+        d = len(self._queue) + len(self._pq)
         if d > self.stats.max_queue_depth_seen:
             self.stats.max_queue_depth_seen = d
         db = self.doorbell
@@ -116,9 +146,10 @@ class BlockDevice:
 
     def submit_read(self, lba: int, nbytes: int, dest: memoryview,
                     on_complete: Callable[[int], None] | None = None,
-                    cookie: int | None = None) -> IoOp:
+                    cookie: int | None = None,
+                    priority: bool = False) -> IoOp:
         return self._enqueue(IoOp("read", lba, nbytes, dest, on_complete,
-                                  cookie=cookie))
+                                  cookie=cookie), priority)
 
     def submit_write(self, lba: int, data,
                      on_complete: Callable[[int], None] | None = None,
@@ -150,32 +181,41 @@ class BlockDevice:
 
     def queue_len(self) -> int:
         with self._lock:
-            return len(self._queue)
+            return len(self._queue) + len(self._pq)
 
     def busy(self) -> bool:
         """True while ops are queued or completions await ``reap()``.
 
         A scheduler wakeup source: a server whose device is busy must stay
         runnable until the backlog is polled AND the completion queue is
-        reaped.  Both probes are lock-free peeks (cheap on the idle path).
+        reaped.  All probes are lock-free peeks (cheap on the idle path).
         """
-        return bool(self._queue) or bool(self._cookie_done)
+        return bool(self._queue) or bool(self._pq) or bool(self._cookie_done)
 
     # -- completion --------------------------------------------------------------
     def poll(self, max_completions: int | None = None) -> int:
-        """Execute + complete up to ``max_completions`` queued ops, in order.
+        """Execute + complete up to ``max_completions`` queued ops.
 
-        The burst is claimed under ONE lock round; execution (and the
+        PRIORITY ops are served first (each queue strictly in order); when
+        the normal queue is non-empty it keeps a reserved share of the
+        budget — ``budget // prio_interleave``, at least 1 — so host writes
+        make bounded progress under sustained priority-read load.  The
+        burst is claimed under ONE lock round; execution (and the
         completion callbacks) run outside the lock."""
         budget = max_completions if max_completions is not None else self.queue_depth
-        if not self._queue:   # racy-but-safe emptiness peek: skip the lock
+        if not self._queue and not self._pq:   # racy-but-safe peek: skip lock
             return 0
         with self._lock:
-            q = self._queue
-            if not q:
+            q, pq = self._queue, self._pq
+            if not q and not pq:
                 return 0
-            k = min(budget, len(q))
-            ops = [q.popleft() for _ in range(k)]
+            reserve = min(len(q), max(1, budget // self.prio_interleave)) \
+                if pq else len(q)
+            k_p = min(len(pq), budget - min(reserve, budget))
+            k_n = min(len(q), budget - k_p)
+            ops = [pq.popleft() for _ in range(k_p)]
+            ops += [q.popleft() for _ in range(k_n)]
+            k = k_p + k_n
         # Inline completion loop: per-op stats folded into one update.
         stats = self.stats
         mem = self._mem
@@ -186,7 +226,13 @@ class BlockDevice:
         reads = writes = read_bytes = write_bytes = 0
         cookie_done = self._cookie_done
         cookies_before = len(cookie_done)
-        for op in ops:
+        now_tick = self.clock.now
+        lat_c = stats.prio_completion_ticks.counts  # inlined histogram add:
+        for i, op in enumerate(ops):                # the stamp rides every
+            if i == k_p:                            # completion
+                lat_c = stats.completion_ticks.counts
+            d = now_tick - op.submit_tick
+            lat_c[d] = lat_c.get(d, 0) + 1
             n = op.nbytes
             kind = op.kind
             if kind == "read":
