@@ -23,6 +23,8 @@ BASE = "results/dryrun"
 OPT = "results/dryrun_opt"
 LATENCY_JSON = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_latency.json")
+TENANCY_JSON = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_tenancy.json")
 
 
 def _load(d: str) -> dict:
@@ -62,8 +64,35 @@ def latency_compare() -> None:
                  f"{b[p]}t -> {c[p]}t {rel}")
 
 
+def tenancy_compare() -> None:
+    """Committed tenancy record: what QoS buys the victim, and its cost."""
+    if not os.path.exists(TENANCY_JSON):
+        print("# no BENCH_tenancy.json; tenancy comparison skipped")
+        return
+    with open(TENANCY_JSON) as fh:
+        doc = json.load(fh)
+    cur = doc.get("current", {}).get("full")
+    if not cur:
+        print("# BENCH_tenancy.json lacks current/full; skipped")
+        return
+    section("multi-tenant isolation (ticks): untenanted -> qos, same flood")
+    solo = max(cur["solo"]["victim_get"]["p99"], 1)
+    for p in ("p50", "p95", "p99", "max"):
+        noisy = cur["untenanted"]["victim_get"][p]
+        qos = cur["qos"]["victim_get"][p]
+        emit(f"tenancy_victim_{p}", float(qos),
+             f"{noisy}t -> {qos}t (solo {cur['solo']['victim_get'][p]}t)")
+    tput = (cur["qos"]["served_per_tick"]
+            / max(cur["untenanted"]["served_per_tick"], 1e-9))
+    emit("tenancy_tput_ratio", cur["qos"]["served_per_tick"],
+         f"qos {cur['qos']['served_per_tick']}/t vs untenanted "
+         f"{cur['untenanted']['served_per_tick']}/t ({tput:.2f}x), "
+         f"hog sheds {cur['qos']['hog_sheds']}, solo p99 {solo}t")
+
+
 def main() -> None:
     latency_compare()
+    tenancy_compare()
     if not (os.path.isdir(BASE) and os.path.isdir(OPT)):
         print("# need both results/dryrun and results/dryrun_opt")
         return

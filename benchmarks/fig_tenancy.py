@@ -1,0 +1,353 @@
+"""Multi-tenant isolation: adversarial neighbor vs victim tail latency.
+
+The DDS data plane multiplexes many compute-server tenants through one DPU
+(§2: the whole point of consolidating storage software on the DPU is that
+MANY hosts share it).  PR 6 threads first-class ``tenant_id`` through the
+wire format and adds weighted-fair demux + token-bucket admission; this
+benchmark measures what that buys under the classic noisy-neighbor
+scenario, entirely in deterministic scheduler ticks.
+
+Workload (open loop): a VICTIM tenant issues a modest stream of offloaded
+GETs every tick; a HOSTILE tenant floods several times the cluster's device
+service capacity from the same shards.  Three runs, same seed:
+
+  * ``solo``       — the victim alone: its no-contention latency floor;
+  * ``untenanted`` — both clients on the pre-tenancy default path (tenant
+    0, no weights, no admission): the victim's GETs queue FIFO behind the
+    flood, so its p99 rides the hostile backlog;
+  * ``qos``        — victim and hostile carry distinct tenant ids and the
+    servers run a tenancy profile (fair demux by default weight, the
+    hostile tenant admission-limited by a token bucket).  Over-limit
+    hostile requests shed EARLY with terminal ``E_SHED`` + retry-after
+    hints, which the driver reaps like any real client must.
+
+Gates (tick domain, within one process — machine-independent):
+
+  * isolation: victim GET p99 in ``qos`` must be <= ``VICTIM_P99_GATE``
+    (2.0x) its ``solo`` p99, while in ``untenanted`` the flood must
+    actually have inflated it (>2x solo) — otherwise the scenario is not
+    adversarial enough to prove anything;
+  * no lost throughput: aggregate SERVED requests per tick in ``qos`` must
+    stay >= ``TPUT_GATE`` (0.9x) of ``untenanted`` — isolation must come
+    from scheduling, not from idling the device;
+  * victim never sheds; the hostile tenant does (admission engaged);
+  * determinism: two same-seed repetitions produce identical victim
+    histograms and served/shed counts;
+  * --smoke (CI): fails when the qos-run victim p99 regresses >30% vs the
+    committed ``current``.
+
+Results go to ``BENCH_tenancy.json`` (committed reference recorded with
+``--record-baseline`` / ``--record-current``).
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, section  # noqa: E402
+from repro.core import wire  # noqa: E402
+from repro.core.client import ClusterClient  # noqa: E402
+from repro.core.dds_server import ServerConfig  # noqa: E402
+from repro.core.qos import QoSProfile  # noqa: E402
+from repro.distributed.cluster import DDSCluster  # noqa: E402
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_tenancy.json")
+
+VICTIM_P99_GATE = 2.0     # qos victim p99 <= 2x its solo floor
+INTERFERENCE_FLOOR = 2.0  # untenanted run must inflate victim p99 > 2x solo
+TPUT_GATE = 0.9           # qos served/tick >= 0.9x untenanted served/tick
+SMOKE_P99_REGRESSION = 1.3  # CI: fail when qos victim p99 grows >30%
+
+# The offload ring is sized to hold the entire hostile backlog so all three
+# runs serve from the SAME single path (the DPU device queue) and never spill
+# to the host fallback: served/tick then compares like with like, and the
+# untenanted run exposes the full FIFO queueing delay instead of hiding part
+# of the flood on the host.  The bucket rate is set just under the device's
+# per-shard service capacity (queue_depth per tick) net of the victim's
+# per-shard arrival rate, so admission keeps the device busy (throughput
+# gate) without letting a standing hostile backlog form (isolation gate).
+CONFIGS = {
+    "full": dict(shards=4, read_files=32, ticks=192, warmup=16,
+                 victim_reads=16, hog_reads=96, read_size=256,
+                 queue_depth=8, offload_ring=4096,
+                 hog_rate=3.5, hog_burst=14.0, seed=11),
+    "smoke": dict(shards=2, read_files=16, ticks=64, warmup=8,
+                  victim_reads=8, hog_reads=48, read_size=256,
+                  queue_depth=8, offload_ring=4096,
+                  hog_rate=3.5, hog_burst=14.0, seed=11),
+}
+
+
+def percentile(hist: dict[int, int], p: float) -> int:
+    n = sum(hist.values())
+    if not n:
+        return 0
+    need = -(-n * p // 100)
+    cum = 0
+    d = 0
+    for d in sorted(hist):
+        cum += hist[d]
+        if cum >= need:
+            return d
+    return d
+
+
+def hist_doc(hist: dict[int, int]) -> dict:
+    return {
+        "counts": {str(d): hist[d] for d in sorted(hist)},
+        "count": sum(hist.values()),
+        "p50": percentile(hist, 50),
+        "p95": percentile(hist, 95),
+        "p99": percentile(hist, 99),
+        "max": max(hist) if hist else 0,
+    }
+
+
+def run_workload(cfg: dict, mode: str) -> dict:
+    """One adversarial-neighbor run; ``mode`` in solo/untenanted/qos."""
+    assert mode in ("solo", "untenanted", "qos")
+    qos = (QoSProfile(tenant_rates={2: cfg["hog_rate"]},
+                      tenant_bursts={2: cfg["hog_burst"]})
+           if mode == "qos" else QoSProfile())
+    cluster = DDSCluster(num_shards=cfg["shards"],
+                         config=ServerConfig(device_capacity=1 << 26,
+                                             cache_items=1 << 11,
+                                             offload_ring=cfg["offload_ring"],
+                                             qos=qos))
+    for srv in cluster.servers:
+        srv.device.queue_depth = cfg["queue_depth"]
+    span = 1 << 16
+    # Balanced placement: the consistent-hash ring spreads files UNEVENLY
+    # in small samples, and a shard whose victim+admitted arrival rate sits
+    # above its service capacity builds an unbounded backlog that has
+    # nothing to do with tenancy.  Keep creating files until every shard
+    # owns read_files/shards of them, then draw each tick's reads
+    # round-robin across shards so per-shard offered load is exact.
+    quota = cfg["read_files"] // cfg["shards"]
+    shard_files: list[list[int]] = [[] for _ in range(cfg["shards"])]
+    i = 0
+    while any(len(fl) < quota for fl in shard_files):
+        f = cluster.create_file(f"ten-r{i}")
+        i += 1
+        fl = shard_files[cluster.shard_for_file(f)]
+        if len(fl) < quota:
+            fl.append(f)
+            cluster.write_sync(f, 0, bytes([f & 0xFF]) * span)
+    nsh = cfg["shards"]
+    victim_tenant = 0 if mode == "untenanted" else 1
+    hog_tenant = 0 if mode == "untenanted" else 2
+    # FIXED ports: run-to-run identical flows => identical histograms.
+    victim = ClusterClient(cluster, port=49000, tenant=victim_tenant)
+    hog = (ClusterClient(cluster, port=49300, tenant=hog_tenant)
+           if mode != "solo" else None)
+    rng = random.Random(cfg["seed"])
+    rsize = cfg["read_size"]
+    hist: dict[int, int] = {}
+    pending: dict[int, dict[int, int]] = {0: {}, 1: {}}  # ci -> rid -> stamp
+    served = {"victim": 0, "hog": 0}
+    sheds = {"victim": 0, "hog": 0}
+    clients = [(0, "victim", victim)] + ([(1, "hog", hog)] if hog else [])
+    tick = 0
+
+    def harvest(ci: str, name: str, got: dict) -> None:
+        nonlocal tick
+        p = pending[ci]
+        for rid, (status, _body) in got.items():
+            stamp = p.pop(rid, None)
+            if status == wire.E_SHED:
+                sheds[name] += 1
+                continue
+            assert status == wire.E_OK, f"{name} rid {rid} status {status}"
+            served[name] += 1
+            if stamp is not None and stamp >= 0 and name == "victim":
+                d = tick - stamp
+                hist[d] = hist.get(d, 0) + 1
+
+    total_ticks = cfg["warmup"] + cfg["ticks"]
+    gc.collect()
+    gc.disable()
+    t0 = time.perf_counter()
+    for t in range(total_ticks):
+        stamp = tick if t >= cfg["warmup"] else -1
+        for ci, name, cli in clients:
+            n = cfg["victim_reads"] if name == "victim" else cfg["hog_reads"]
+            ops = [("r", rng.choice(shard_files[j % nsh]),
+                    rng.randrange(0, span - rsize), rsize)
+                   for j in range(n)]
+            for rid in cli.submit(ops):
+                pending[ci][rid] = stamp
+            cli.flush()
+        cluster.pump()      # one scheduling step == one tick (open loop)
+        tick += 1
+        for ci, name, cli in clients:
+            harvest(ci, name, cli.harvest())   # non-pumping drain
+        if mode == "qos" and pending[1]:
+            # Reap the hostile tenant's terminal sheds like a real client:
+            # an admission-shed request never produces a wire response.
+            harvest(1, "hog", hog.harvest(list(pending[1]), block=False))
+    # Drain: arrivals stop; tick until every request is answered or shed.
+    for _ in range(200_000):
+        if not pending[0] and not pending[1]:
+            break
+        work = cluster.pump()
+        tick += 1
+        for ci, name, cli in clients:
+            harvest(ci, name, cli.harvest())
+        if work == 0:
+            for srv in cluster.servers:
+                srv.device.drain()
+            for ci, name, cli in clients:
+                if pending[ci]:
+                    harvest(ci, name,
+                            cli.harvest(list(pending[ci]), block=False))
+    elapsed = time.perf_counter() - t0
+    gc.enable()
+    left = len(pending[0]) + len(pending[1])
+    assert not left, f"{left} requests never completed ({mode})"
+    assert sheds["victim"] == 0, f"victim shed {sheds['victim']} ({mode})"
+
+    res = {
+        "mode": mode,
+        "ticks": tick,
+        "wall_s": elapsed,
+        "victim_get": hist_doc(hist),
+        "victim_served": served["victim"],
+        "hog_served": served["hog"],
+        "hog_sheds": sheds["hog"],
+        "served_total": served["victim"] + served["hog"],
+        "served_per_tick": round((served["victim"] + served["hog"]) / tick,
+                                 4),
+    }
+    stats = cluster.latency_stats()
+    if mode == "qos":
+        adm = stats["admission"]
+        assert adm["granted"] + adm["shed"] == adm["offered"], \
+            "admission conservation violated"
+        res["admission"] = adm
+        res["victim_server_dpu_p99"] = (
+            cluster.tenant_latency(1, "dpu_read").percentile(99))
+    return res
+
+
+def load_json() -> dict:
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as fh:
+            return json.load(fh)
+    return {"schema": 1, "configs": CONFIGS}
+
+
+def save_json(doc: dict) -> None:
+    with open(JSON_PATH, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = ("--smoke" in argv
+             or os.environ.get("DDS_BENCH_SMOKE", "0") == "1")
+    record = ("baseline" if "--record-baseline" in argv else
+              "current" if "--record-current" in argv else None)
+    mode = "smoke" if smoke else "full"
+    cfg = CONFIGS[mode]
+
+    section(f"multi-tenant isolation ({mode}: {cfg['shards']} shards, "
+            f"victim {cfg['victim_reads']} GET/tick vs hostile "
+            f"{cfg['hog_reads']} GET/tick, bucket {cfg['hog_rate']}/tick, "
+            f"{cfg['ticks']} ticks)")
+    reps = []
+    for _ in range(2):
+        reps.append({m: run_workload(cfg, m)
+                     for m in ("solo", "untenanted", "qos")})
+    identical = all(
+        r[m]["victim_get"]["counts"] == reps[0][m]["victim_get"]["counts"]
+        and r[m]["served_total"] == reps[0][m]["served_total"]
+        and r[m]["hog_sheds"] == reps[0][m]["hog_sheds"]
+        for r in reps[1:] for m in r)
+    res = reps[0]
+    solo_p99 = max(res["solo"]["victim_get"]["p99"], 1)
+    noisy_p99 = res["untenanted"]["victim_get"]["p99"]
+    qos_p99 = res["qos"]["victim_get"]["p99"]
+    emit(f"tenancy_{mode}", float(qos_p99),
+         f"victim_p99 solo={solo_p99}t noisy={noisy_p99}t qos={qos_p99}t "
+         f"tput={res['qos']['served_per_tick']}/t "
+         f"(untenanted {res['untenanted']['served_per_tick']}/t) "
+         f"hog_sheds={res['qos']['hog_sheds']} deterministic={identical}")
+
+    doc = load_json()
+    doc["configs"] = CONFIGS
+    entry = {m: res[m] for m in res}
+    entry["config"] = cfg
+    entry["deterministic"] = identical
+    if record:
+        doc.setdefault(record, {})[mode] = entry
+        print(f"# recorded {mode} measurement into '{record}'")
+    doc["last_run"] = {"mode": mode, mode: entry}
+    save_json(doc)
+
+    failures = []
+    if not identical:
+        failures.append("two same-seed runs produced different results "
+                        "(determinism gate)")
+    if not record:
+        # Within-run gates: solo/untenanted/qos all computed this process.
+        ratio_iso = qos_p99 / solo_p99
+        ok = ratio_iso <= VICTIM_P99_GATE
+        print(f"# victim GET p99 under QoS: {qos_p99}t vs solo {solo_p99}t "
+              f"({ratio_iso:.2f}x; gate <= {VICTIM_P99_GATE:.1f}x) -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"victim p99 not isolated: {qos_p99}t > "
+                f"{VICTIM_P99_GATE:.1f}x solo ({solo_p99}t)")
+        hurt = noisy_p99 / solo_p99
+        ok = hurt > INTERFERENCE_FLOOR
+        print(f"# untenanted interference: {noisy_p99}t = {hurt:.2f}x solo "
+              f"(must exceed {INTERFERENCE_FLOOR:.1f}x to be adversarial) "
+              f"-> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"workload not adversarial enough: untenanted victim p99 "
+                f"only {hurt:.2f}x solo")
+        tput = (res["qos"]["served_per_tick"]
+                / res["untenanted"]["served_per_tick"])
+        ok = tput >= TPUT_GATE
+        print(f"# aggregate served/tick: qos {res['qos']['served_per_tick']}"
+              f" vs untenanted {res['untenanted']['served_per_tick']} "
+              f"({tput:.2f}x; gate >= {TPUT_GATE:.2f}x) -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"isolation bought with throughput: {tput:.2f}x < "
+                f"{TPUT_GATE:.2f}x served/tick vs untenanted")
+        if res["qos"]["hog_sheds"] == 0:
+            failures.append("admission never engaged (hog_sheds == 0)")
+    if smoke and not record:
+        ref = doc.get("current", {}).get("smoke")
+        if ref and ref.get("config") == cfg:
+            limit = ref["qos"]["victim_get"]["p99"] * SMOKE_P99_REGRESSION
+            ok = qos_p99 <= limit
+            print(f"# smoke qos victim p99 vs recorded current: {qos_p99} "
+                  f"vs {ref['qos']['victim_get']['p99']} ticks "
+                  f"(limit {limit:.1f}) -> {'OK' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"qos victim p99 regressed >30% vs recorded current: "
+                    f"{qos_p99} > {limit:.1f} ticks")
+        else:
+            print("# no recorded current smoke numbers; gate skipped")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

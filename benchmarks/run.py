@@ -25,7 +25,7 @@ from benchmarks import (compare, fig14_16_model, fig17_rings,
                         fig18_23_zerocopy, fig22_cache_table,
                         fig24_26_integration, fig_cluster_scaling,
                         fig_hotpath, fig_latency, fig_scaleout,
-                        fig_writepath, kernels_bench, roofline)
+                        fig_tenancy, fig_writepath, kernels_bench, roofline)
 
 MODULES = {
     "cluster": fig_cluster_scaling,
@@ -33,6 +33,7 @@ MODULES = {
     "writepath": fig_writepath,
     "scaleout": fig_scaleout,
     "latency": fig_latency,
+    "tenancy": fig_tenancy,
     "fig14_16": fig14_16_model,
     "fig17": fig17_rings,
     "fig18_23": fig18_23_zerocopy,

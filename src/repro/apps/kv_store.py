@@ -45,6 +45,9 @@ GET_HDR = struct.Struct("<BQI")    # type, req_id, klen
 REC_HDR = struct.Struct("<II")     # klen, vlen (on-disk record header)
 LOC = struct.Struct("<IQI")        # file_id, offset, size (PUT ack body)
 
+# Unified-surface op spellings -> latency class for the issue-tick stamp.
+_KV_CLS = {"get": "r", "put": "w", "delete": "w"}
+
 
 def encode_put(req_id: int, key: bytes, value: bytes) -> bytes:
     return PUT_HDR.pack(KV_PUT, req_id, len(key), len(value)) + key + value
@@ -294,12 +297,23 @@ class ShardedKVStore:
 
 
 class KVClient:
-    """Key-routed client: batches/pipelines PUT/GET/DEL across shards."""
+    """Key-routed client: batches/pipelines PUT/GET/DEL across shards.
+
+    ``tenant`` binds once per client; every shard connection underneath
+    carries it, so the servers' QoS layer (fair demux, admission, per-
+    tenant stats) attributes all of this client's traffic without any
+    per-call tenant argument.  The unified burst surface is
+    :meth:`submit` / :meth:`harvest`; ``get_many``/``put_many``/
+    ``delete_many`` remain as thin deprecated wrappers.
+    """
 
     def __init__(self, store: ShardedKVStore, ip: str = "10.0.0.9",
-                 port: int | None = None, shard_cache: int = 1 << 16):
+                 port: int | None = None, shard_cache: int = 1 << 16,
+                 tenant: int = 0):
         self.store = store
-        self.net = ClusterClient(store.cluster, ip=ip, port=port)
+        self.tenant = tenant
+        self.net = ClusterClient(store.cluster, ip=ip, port=port,
+                                 tenant=tenant)
         # Consistent-hash placement is stable, so the key->shard mapping is
         # cacheable: repeat traffic skips the blake2b ring walk (bounded to
         # keep pathological key churn from growing without limit).
@@ -329,7 +343,37 @@ class KVClient:
                                  lambda rid: encode_del(rid, key),
                                  cls="w")
 
-    # -- burst issue (mirrors ClusterClient.read_many/write_many) ---------------------
+    # -- unified burst surface --------------------------------------------------------
+    def submit(self, ops: list[tuple]) -> list[int]:
+        """Issue a burst of KV operations; one handle (request id) per op,
+        in order.  Ops are ``("get", key)``, ``("put", key, value)`` or
+        ``("delete", key)`` and mix freely in one batch (one rid-range
+        reservation, one flush round).  Harvest with :meth:`harvest`;
+        ``get_many``/``put_many``/``delete_many`` are thin deprecated
+        wrappers over this."""
+        shard = self._shard
+        shards = [shard(op[1]) for op in ops]
+        cls = [_KV_CLS[op[0]] for op in ops]
+
+        def build(rid: int, i: int) -> bytes:
+            op = ops[i]
+            kind = op[0]
+            if kind == "get":
+                return encode_get(rid, op[1])
+            if kind == "put":
+                return encode_put(rid, op[1], op[2])
+            return encode_del(rid, op[1])
+
+        return self.net.issue_many(shards, build, cls=cls)
+
+    def harvest(self, handles=None, block: bool = True,
+                max_iters: int = 200_000) -> dict[int, tuple[int, bytes]]:
+        """Collect raw ``{handle: (status, body)}`` responses — see
+        :meth:`ClusterClient.harvest`.  Shed requests resolve terminally as
+        ``(wire.E_SHED, hint)``; typed decoding stays with ``wait_put`` /
+        ``wait_value``."""
+        return self.net.harvest(handles, block=block, max_iters=max_iters)
+
     def _send_many(self, keys: list, encode, cls: str = "r") -> list[int]:
         shard = self._shard
         return self.net.issue_many([shard(k) for k in keys],
@@ -337,15 +381,15 @@ class KVClient:
                                    cls=cls)
 
     def get_many(self, keys: list) -> list[int]:
-        """Issue a burst of GETs: one rid-range reservation, no per-op
-        closure — the KV mirror of the cluster client's ``read_many``."""
+        """Deprecated: ``submit([("get", k), ...])``."""
         return self._send_many(keys, encode_get)
 
     def delete_many(self, keys: list) -> list[int]:
+        """Deprecated: ``submit([("delete", k), ...])``."""
         return self._send_many(keys, encode_del, cls="w")
 
     def put_many(self, items: list) -> list[int]:
-        """Issue a burst of ``(key, value)`` PUTs in one pass."""
+        """Deprecated: ``submit([("put", k, v), ...])``."""
         shard = self._shard
         return self.net.issue_many(
             [shard(k) for k, _ in items],

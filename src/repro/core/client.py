@@ -23,9 +23,9 @@ from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Callable
 
 from repro.core import wire
-from repro.core.dds_server import (DDSStorageServer, drain_client_flow,
-                                   encode_app_read, encode_app_write,
-                                   encode_batch)
+from repro.core.dds_server import (_OP_KIND, DDSStorageServer,
+                                   drain_client_flow, encode_app_read,
+                                   encode_app_write, encode_batch)
 from repro.core.lifecycle import ClientLatency
 from repro.core.traffic import FLAG_SYN, FiveTuple, Packet
 
@@ -44,9 +44,11 @@ class ClientStats:
 class ShardConnection:
     """One PEP-terminated flow to one shard (non-blocking enqueue/flush)."""
 
-    def __init__(self, server: DDSStorageServer, ip: str, port: int):
+    def __init__(self, server: DDSStorageServer, ip: str, port: int,
+                 tenant: int = 0):
         self.server = server
-        self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port)
+        self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port,
+                              tenant=tenant)
         self._resp_flow = self.flow.reversed()
         self._seq = 1  # after SYN
         self._pending: list[bytes] = []
@@ -94,15 +96,16 @@ class ClusterClient:
     _port_lock = threading.Lock()
 
     def __init__(self, cluster: "DDSCluster", ip: str = "10.0.0.9",
-                 port: int | None = None):
+                 port: int | None = None, tenant: int = 0):
         self.cluster = cluster
+        self.tenant = tenant
         if port is None:
             # Each client needs its own source ports, or two clients' flows
             # (and therefore their responses) become indistinguishable.
             with ClusterClient._port_lock:
                 port = ClusterClient._next_base_port
                 ClusterClient._next_base_port += len(cluster.servers)
-        self.conns = [ShardConnection(srv, ip, port + i)
+        self.conns = [ShardConnection(srv, ip, port + i, tenant)
                       for i, srv in enumerate(cluster.servers)]
         self._next_rid = 1
         self._rid_shard: dict[int, int] = {}
@@ -135,15 +138,16 @@ class ClusterClient:
             self._dirty_flag[shard] = True
             self._dirty.append(shard)
 
-    def reserve_rids(self, shards: list[int], cls: str = "r") -> list[int]:
+    def reserve_rids(self, shards: list[int], cls="r") -> list[int]:
         """Reserve one rid per target shard in ONE lock round.
 
-        The shared bulk-issue path under :meth:`read_many`/:meth:`write_many`
-        and application burst clients (e.g. the KV store's ``get_many``):
-        rid range, outstanding counters and the rid->shard map are all
-        updated in bulk, so a pipeline round of thousands of requests skips
-        the per-call lock + dict churn.  ``cls`` ('r'/'w') picks the issue-
-        tick stamp class for the end-to-end latency histograms."""
+        The shared bulk-issue path under :meth:`submit` and application
+        burst clients (e.g. the KV store's ``submit``): rid range,
+        outstanding counters and the rid->shard map are all updated in
+        bulk, so a pipeline round of thousands of requests skips the
+        per-call lock + dict churn.  ``cls`` picks the issue-tick stamp
+        class for the end-to-end latency histograms: either one 'r'/'w'
+        for the whole burst, or a per-op sequence for mixed batches."""
         n = len(shards)
         rid_shard = self._rid_shard
         with self._lock:
@@ -160,9 +164,14 @@ class ClusterClient:
                 rid_shard[rid] = shard
                 outs[shard] += 1
         now = self.cluster.clock.now
-        issued = self._issued_r if cls == "r" else self._issued_w
-        for rid in rids:
-            issued[rid] = now
+        if isinstance(cls, str):
+            issued = self._issued_r if cls == "r" else self._issued_w
+            for rid in rids:
+                issued[rid] = now
+        else:
+            ir, iw = self._issued_r, self._issued_w
+            for rid, c in zip(rids, cls):
+                (ir if c == "r" else iw)[rid] = now
         self.stats.requests += n
         return rids
 
@@ -185,16 +194,40 @@ class ClusterClient:
                       encode_app_read(rid, loc.local_fid, offset, nbytes))
         return rid
 
-    def read_many(self, reads: list[tuple[int, int, int]]) -> list[int]:
-        """Issue a burst of ``(gfid, offset, nbytes)`` reads in one pass."""
+    # -- unified burst surface --------------------------------------------------------
+    def submit(self, ops: list[tuple]) -> list[int]:
+        """Issue a burst of operations; returns one handle (request id) per
+        op, in order.  THE burst-issue surface — every legacy burst name
+        (``read_many``/``write_many``/``wait_many``) is a thin deprecated
+        wrapper over ``submit``/:meth:`harvest`.
+
+        Ops are ``("r"|"read", gfid, offset, nbytes)`` or
+        ``("w"|"write", gfid, offset, data)``; reads and writes mix freely
+        in one batch (per-op latency classes ride the generalized
+        :meth:`reserve_rids`).  The client's tenant binds once per
+        connection and rides every flow — never passed per call.
+        """
         locate = self.cluster.locate
-        locs = [locate(gfid) for gfid, _, _ in reads]
-        rids = self.reserve_rids([loc.shard for loc in locs])
+        locs = []
+        cls = []
+        for op in ops:
+            cls.append(_OP_KIND[op[0]])
+            locs.append(locate(op[1]))
+        rids = self.reserve_rids([loc.shard for loc in locs], cls)
         enqueue = self._enqueue
-        for rid, loc, (_, offset, nbytes) in zip(rids, locs, reads):
-            enqueue(loc.shard,
-                    encode_app_read(rid, loc.local_fid, offset, nbytes))
+        for rid, loc, k, op in zip(rids, locs, cls, ops):
+            if k == "r":
+                enqueue(loc.shard,
+                        encode_app_read(rid, loc.local_fid, op[2], op[3]))
+            else:
+                enqueue(loc.shard,
+                        encode_app_write(rid, loc.local_fid, op[2], op[3]))
         return rids
+
+    def read_many(self, reads: list[tuple[int, int, int]]) -> list[int]:
+        """Deprecated: ``submit([("r", gfid, off, n), ...])``."""
+        return self.submit([("r", gfid, offset, nbytes)
+                            for gfid, offset, nbytes in reads])
 
     def write(self, gfid: int, offset: int, data: bytes) -> int:
         loc = self.cluster.locate(gfid)
@@ -204,19 +237,12 @@ class ClusterClient:
         return rid
 
     def write_many(self, writes: list[tuple[int, int, bytes]]) -> list[int]:
-        """Issue a burst of ``(gfid, offset, data)`` writes in one pass.
+        """Deprecated: ``submit([("w", gfid, off, data), ...])``.
 
-        Mirrors :meth:`read_many`.  Writes to one shard keep issue order,
-        which the coalescing file service turns into adjacent
-        scatter-gather runs."""
-        locate = self.cluster.locate
-        locs = [locate(gfid) for gfid, _, _ in writes]
-        rids = self.reserve_rids([loc.shard for loc in locs], "w")
-        enqueue = self._enqueue
-        for rid, loc, (_, offset, data) in zip(rids, locs, writes):
-            enqueue(loc.shard,
-                    encode_app_write(rid, loc.local_fid, offset, data))
-        return rids
+        Writes to one shard keep issue order, which the coalescing file
+        service turns into adjacent scatter-gather runs."""
+        return self.submit([("w", gfid, offset, data)
+                            for gfid, offset, data in writes])
 
     def send_raw(self, shard: int, build_msg: Callable[[int], bytes],
                  cls: str = "r") -> int:
@@ -335,11 +361,16 @@ class ClusterClient:
                 wadd(now - t0)
 
     def _check_shed(self, rids) -> int:
-        """Surface terminal SHED marks as (E_SHED, b'') responses.
+        """Surface terminal SHED marks as ``(E_SHED, hint)`` responses.
 
         A shed request never gets a wire response; without this, ``wait``
-        and ``wait_many`` would spin their whole iteration budget into a
-        timeout heuristic.  Called on idle iterations only (no wire work)."""
+        and ``harvest`` would spin their whole iteration budget into a
+        timeout heuristic.  The hint body is the shedding tenant's bucket
+        state (``wire.decode_shed_hint``).  Each shed is reconciled against
+        ITS OWN shard's outstanding counter exactly once — the rid->shard
+        entry is consumed here, so a rid can never be double-decremented
+        (or charged against another tenant's connection) even if callers
+        probe it again."""
         found = 0
         responses = self.responses
         conns = self.conns
@@ -349,8 +380,10 @@ class ClusterClient:
             if shard is None:
                 continue
             conn = conns[shard]
-            if conn.server.lifecycle.take_shed(conn.flow, rid):
-                responses[rid] = (wire.E_SHED, b"")
+            hint = conn.server.lifecycle.take_shed(conn.flow, rid)
+            if hint is not None:
+                responses[rid] = (wire.E_SHED, hint)
+                rid_shard.pop(rid, None)
                 self._issued_r.pop(rid, None)
                 self._issued_w.pop(rid, None)
                 with self._lock:
@@ -386,6 +419,12 @@ class ClusterClient:
             if self.outstanding() == 0:
                 return
             self._drain_busy_devices()
+            # Reconcile terminal sheds: an admission-shed request will never
+            # produce wire work, so without this the outstanding counters
+            # stay elevated forever and idle convergence always burns the
+            # full 8-round escape hatch.
+            if self._check_shed(list(self._rid_shard)):
+                continue
             idle += 1
             if idle >= 8:
                 return  # idle with requests genuinely unanswerable
@@ -402,29 +441,51 @@ class ClusterClient:
                 self._check_shed((rid,))   # terminal: answered as E_SHED
         raise TimeoutError(f"no response for request {rid}")
 
-    def wait_many(self, rids: list[int],
-                  max_iters: int = 200_000) -> dict[int, tuple[int, bytes]]:
-        """Wait for ALL rids, harvesting whichever completes first.
+    def harvest(self, handles=None, block: bool = True,
+                max_iters: int = 200_000) -> dict[int, tuple[int, bytes]]:
+        """Collect responses: ``{handle: (status, body)}``.
 
-        Pumps once per iteration while collecting every arrived rid — the
-        old serial per-rid ``wait`` loop head-of-line blocked on the first
-        rid even when later rids (on other shards) had long completed.
-        Harvesting rides ``poll``'s outstanding-only scan, so only shards
-        that still owe responses are touched.  On idle iterations, rids the
-        servers marked SHED are answered terminally (``wire.E_SHED``) — a
-        shed request can never produce a wire response, so waiting on a
-        timeout heuristic would spin the whole iteration budget."""
+        ``handles=None`` drains whatever has already arrived (one poll;
+        never steps the cluster).  With explicit handles and ``block=True``
+        this waits for ALL of them, harvesting whichever completes first:
+        it pumps once per iteration while collecting every arrived handle —
+        a serial per-handle ``wait`` loop would head-of-line block on the
+        first one even when later handles (on other shards) had long
+        completed.  Harvesting rides ``poll``'s outstanding-only scan, so
+        only shards that still owe responses are touched.  On idle
+        iterations, handles the servers marked SHED are answered terminally
+        as ``(wire.E_SHED, hint)`` — a shed request can never produce a
+        wire response, so waiting on a timeout heuristic would spin the
+        whole iteration budget."""
+        if handles is None:
+            self.poll()
+            out = dict(self.responses)
+            rid_shard = self._rid_shard
+            for rid in out:
+                rid_shard.pop(rid, None)
+            self.responses.clear()
+            return out
         got: dict[int, tuple[int, bytes]] = {}
-        pending = set(rids)
+        pending = set(handles)
         pending -= self._harvest(pending, got)
+        if not block:
+            self.poll()
+            self._check_shed(pending)
+            pending -= self._harvest(pending, got)
+            return got
         for _ in range(max_iters):
             if not pending:
-                return {rid: got[rid] for rid in rids}  # caller's order
+                return {rid: got[rid] for rid in handles}  # caller's order
             if self.pump() == 0:
                 self._drain_busy_devices()
                 self._check_shed(pending)
             pending -= self._harvest(pending, got)
         raise TimeoutError(f"no response for requests {sorted(pending)[:8]}...")
+
+    def wait_many(self, rids: list[int],
+                  max_iters: int = 200_000) -> dict[int, tuple[int, bytes]]:
+        """Deprecated: ``harvest(rids)``."""
+        return self.harvest(rids, max_iters=max_iters)
 
     def _harvest(self, pending: set[int],
                  got: dict[int, tuple[int, bytes]]) -> set[int]:

@@ -30,6 +30,7 @@ from repro.core.host_lib import DDSFrontEnd
 from repro.core.lifecycle import (ClientLatency, LifecycleTracker, TickClock,
                                   TickHistogram)
 from repro.core.offload import OffloadAPI, OffloadEngine, ReadOp, WriteOp
+from repro.core.qos import QoSProfile, TenantAdmission
 from repro.core.ring import DMAEngine
 from repro.core.traffic import (ApplicationSignature, FiveTuple, Packet,
                                 TrafficDirector, FLAG_SYN)
@@ -187,6 +188,17 @@ DEFAULT_READ_TYPES = frozenset({APP_READ})
 
 @dataclass
 class ServerConfig:
+    """Structural sizing of one server + its scheduling/QoS policy.
+
+    The per-feature scheduling knobs that accreted over PRs 3-5
+    (``coalesce_ticks``, ``coalesce_cap``, ``prio_interleave``,
+    ``deliver_ticks``, ``host_drain_slice``, ``read_write_fence``,
+    ``device_queue_depth``) now live on :class:`~repro.core.qos.QoSProfile`
+    together with the tenancy controls (weights, token-bucket rates).
+    ``qos`` accepts a profile instance or a preset name
+    (``"latency"`` / ``"throughput"`` / ``"isolation"``).
+    """
+
     device_capacity: int = 1 << 28          # 256 MiB RAM "SSD"
     segment_size: int = 1 << 20
     server_port: int = 5000
@@ -197,19 +209,27 @@ class ServerConfig:
     userspace_stack: bool = True             # TLDK vs Linux-on-DPU (Fig 19)
     cache_items: int = 1 << 16
     offload_enabled: bool = True             # False => all requests to host
-    # -- tail-latency knobs (see README "Measured tail latency") -------------
-    device_queue_depth: int = 128            # per-poll completion budget
-    prio_interleave: int = 4                 # normal-queue share: budget//N
-    coalesce_ticks: int = 2                  # held write-run age bound
-    deliver_ticks: int = 2                   # completed-response age bound
-    host_drain_slice: int = 256              # host-wire packets per pump step
-    # Bounce offloaded reads of files whose writes are still in the
-    # file-service pipeline (held/ring-queued/at-device) to the host,
-    # where the FIFO orders them after those writes.  Writes still on the
-    # host wire (same-pump demux) are not covered — the same window the
-    # pre-overhaul FIFO device never ordered; acked writes are always
-    # visible either way.
-    read_write_fence: bool = False
+    qos: QoSProfile | str = field(default_factory=QoSProfile)
+
+    def __post_init__(self):
+        if isinstance(self.qos, str):
+            self.qos = QoSProfile.preset(self.qos)
+        elif isinstance(self.qos, dict):
+            self.qos = QoSProfile.from_dict(self.qos)
+        elif not isinstance(self.qos, QoSProfile):
+            raise ValueError(f"ServerConfig.qos must be a QoSProfile, "
+                             f"preset name, or dict; got {self.qos!r}")
+
+
+# Admission sheds happen BEFORE any execution path parses the message, so
+# the rid for the terminal mark comes from the protocol layout: both the
+# §8.1 app header (<BQIQI) and the KV headers (<BQ...) carry req_id as a
+# u64 at byte offset 1.
+_REQ_ID_U64_AT_1 = struct.Struct("<Q")
+
+
+def default_req_id_of(msg) -> int:
+    return _REQ_ID_U64_AT_1.unpack_from(msg, 1)[0]
 
 
 class DDSStorageServer:
@@ -230,9 +250,10 @@ class DDSStorageServer:
         # pump instead.
         self.clock = TickClock()
         self._owns_clock = True
+        q = cfg.qos
         self.device = BlockDevice(cfg.device_capacity,
-                                  queue_depth=cfg.device_queue_depth,
-                                  prio_interleave=cfg.prio_interleave)
+                                  queue_depth=q.device_queue_depth,
+                                  prio_interleave=q.prio_interleave)
         self.device.doorbell = self.signal
         self.device.clock = self.clock
         self.fs = SegmentFS(self.device, cfg.segment_size)
@@ -250,6 +271,16 @@ class DDSStorageServer:
             sig, self.api.off_pred, self.cache_table,
             ncores=cfg.director_cores, host_port=cfg.server_port,
             userspace_stack=cfg.userspace_stack)
+        # Tenancy: weighted-fair service on the offload queue and the host
+        # wire's drain; token-bucket admission (when configured) sheds at
+        # the demux via the lifecycle tracker's terminal marks.
+        self.director.offload_queue.weight_of = q.weight_of
+        self.director.to_host.weight_of = q.weight_of
+        self.admission: TenantAdmission | None = None
+        if q.admission_enabled():
+            self.admission = TenantAdmission(q, self.clock)
+            self.director.admit = self.admission.admit
+            self.director.on_shed = self._on_admission_shed
         # File service with cache-on-write / invalidate-on-read hooks (§6.1).
         # Hooks are wired ONLY when the application actually installed the
         # Table-1 functions — the default §8.1 app has neither, and a None
@@ -261,10 +292,11 @@ class DDSStorageServer:
             invalidate_hook=(self._invalidate_on_read
                              if self.api.invalidate is not None else None),
             clock=self.clock,
-            coalesce_ticks=cfg.coalesce_ticks,
-            deliver_ticks=cfg.deliver_ticks,
+            coalesce_ticks=q.coalesce_ticks,
+            deliver_ticks=q.deliver_ticks,
+            coalesce_cap=q.coalesce_cap,
             shed_hook=self._on_shed)
-        if cfg.read_write_fence:
+        if q.read_write_fence:
             self.file_service.track_writes = True
         self.offload = OffloadEngine(
             self.fs, self.director, self.api, self.cache_table,
@@ -272,8 +304,9 @@ class DDSStorageServer:
             zero_copy=cfg.zero_copy,
             app_header=self.api.response_header or app_response_header)
         self.offload.lifecycle = self.lifecycle
-        if cfg.read_write_fence:
+        if q.read_write_fence:
             self.offload.busy_files = self.file_service.write_inflight
+        self._host_drain_slice = q.host_drain_slice
         # The host storage application, adopting the DDS front-end library.
         # Its request rings ring our doorbell on every producer publish.
         self.frontend = DDSFrontEnd(self.file_service, doorbell=self.signal)
@@ -295,6 +328,8 @@ class DDSStorageServer:
         self.device.clock = clock
         self.lifecycle.clock = clock
         self.file_service.adopt_clock(clock)
+        if self.admission is not None:
+            self.admission.clock = clock   # buckets refill on the shared clock
 
     def _on_shed(self, frontend_rid: int) -> None:
         """A host-path request was shed (bounded E_NOSPC path gave up).
@@ -318,7 +353,23 @@ class DDSStorageServer:
             return
         host_flow, _typ, req_id = info[:3]
         client_flow = self.director._client_flow_of.get(host_flow, host_flow)
-        self.lifecycle.mark_shed(client_flow, req_id)
+        # Overload sheds carry a minimal hint: the tenant plus retry-after 1
+        # (the bounded E_NOSPC path gave up THIS tick; next tick may admit).
+        self.lifecycle.mark_shed(
+            client_flow, req_id,
+            wire.encode_shed_hint(getattr(client_flow, "tenant", 0), 1))
+
+    def _on_admission_shed(self, client_flow: FiveTuple, msg) -> None:
+        """Token-bucket admission dropped ``msg`` at the director's demux.
+
+        The request never reaches any execution path, so the terminal mark
+        is made here — keyed by the ORIGINAL client flow and the request id
+        extracted straight from the message header — with the shedding
+        tenant's bucket state (retry-after ticks) as the E_SHED hint."""
+        req_id_of = self.api.req_id_of or default_req_id_of
+        hint = wire.encode_shed_hint(
+            client_flow.tenant, self.admission.retry_after(client_flow.tenant))
+        self.lifecycle.mark_shed(client_flow, req_id_of(msg), hint)
 
     def signal(self) -> None:
         """Mark this server runnable.  Called by every work producer: client
@@ -373,7 +424,7 @@ class DDSStorageServer:
             self.clock.tick()
         work = self.director.step_n(64)   # whole ingress burst, one lock round
         work += self.offload.step()       # polls device + completes internally
-        host_work = self.host_app.step(self.config.host_drain_slice)
+        host_work = self.host_app.step(self._host_drain_slice)
         # The host path (file service rings + completion polling) only runs
         # when it can have work; the offloaded fast path never pays for it.
         if host_work or self._host_path_busy():
@@ -387,6 +438,8 @@ class DDSStorageServer:
         """Measured tick-latency distributions (see README)."""
         dev = self.device.stats
         out = {"classes": self.lifecycle.summary()}
+        if self.admission is not None:
+            out["admission"] = self.admission.summary()
         if dev.completion_ticks.n:
             out["device"] = dev.completion_ticks.summary()
         if dev.prio_completion_ticks.n:
@@ -502,8 +555,10 @@ class _HostApp:
                     _, req_id, status, body = action
                     n_resp += 1
                     # Served inline this tick: a zero-delta completion.
-                    lt.hist["host_read" if typ in lt.read_types
-                            else "write"].add(0)
+                    cls = "host_read" if typ in lt.read_types else "write"
+                    lt.hist[cls].add(0)
+                    if host_flow.tenant:
+                        lt.add_tenant(host_flow.tenant, cls, 0)
                     responses.setdefault(host_flow, []).append(
                         APP_RESP_HDR.pack(req_id, status, len(body)) + body)
                 elif kind == "w":
@@ -551,7 +606,9 @@ class _HostApp:
                 for rid in orphans:
                     meta = inflight.pop(rid, None)
                     if meta is not None:
-                        lt.mark_shed(cf_of.get(meta[0], meta[0]), meta[2])
+                        cf = cf_of.get(meta[0], meta[0])
+                        lt.mark_shed(cf, meta[2], wire.encode_shed_hint(
+                            getattr(cf, "tenant", 0), 1))
                 orphans.clear()
 
     def poll_completions(self) -> int:
@@ -563,18 +620,24 @@ class _HostApp:
         now = srv.clock.now
         r_add = hist["host_read"].add
         w_add = hist["write"].add
+        tenant_add = srv.lifecycle.add_tenant
         for gid in list(srv.frontend._groups):
             for c in srv.frontend.poll_wait(gid, 0.0):
                 info = inflight.pop(c.request_id, None)
                 if info is None:
                     continue
                 host_flow, typ, req_id, nbytes, ack_body, t0 = info
+                delta = now - t0
                 if typ == APP_READ:
                     body = c.data if c.error == wire.E_OK else b""
-                    r_add(now - t0)   # response-publish lifecycle stamp
+                    r_add(delta)   # response-publish lifecycle stamp
                 else:
                     body = ack_body if c.error == wire.E_OK else b""
-                    w_add(now - t0)
+                    w_add(delta)
+                if host_flow.tenant:
+                    tenant_add(host_flow.tenant,
+                               "host_read" if typ == APP_READ else "write",
+                               delta)
                 per_flow.setdefault(host_flow, []).append(
                     APP_RESP_HDR.pack(req_id, c.error, len(body)) + body)
                 n += 1
@@ -585,13 +648,27 @@ class _HostApp:
         return n
 
 
+# Unified-surface op spellings -> the wire batch kind ("r"/"w").
+_OP_KIND = {"r": "r", "read": "r", "w": "w", "write": "w"}
+
+
 class DDSClient:
-    """A compute-server client for the benchmark app (batching, outstanding)."""
+    """A compute-server client for the benchmark app (batching, outstanding).
+
+    ``tenant`` binds once per connection: every request issued through this
+    client rides a flow carrying that tenant id, which the server's QoS
+    layer (weighted-fair demux, token-bucket admission, per-tenant stats)
+    keys on.  The unified burst surface is :meth:`submit` /
+    :meth:`harvest`; ``write_many``/``send_batch`` remain as thin
+    deprecated wrappers.
+    """
 
     def __init__(self, server: DDSStorageServer, ip: str = "10.0.0.2",
-                 port: int = 31337):
+                 port: int = 31337, tenant: int = 0):
         self.server = server
-        self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port)
+        self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port,
+                              tenant=tenant)
+        self.tenant = tenant
         self._resp_flow = self.flow.reversed()
         self._seq = 1  # after SYN
         self._next_req = 1
@@ -629,8 +706,60 @@ class DDSClient:
         self._send(encode_batch([encode_app_write(rid, file_id, offset, data)]))
         return rid
 
+    # -- unified burst surface --------------------------------------------------------
+    def submit(self, ops: list[tuple]) -> list[int]:
+        """Issue a burst of operations in ONE network message; returns one
+        handle (request id) per op, in order.
+
+        Ops are ``("r"|"read", file_id, offset, nbytes)`` or
+        ``("w"|"write", file_id, offset, data)``.  The connection's tenant
+        rides the flow, so tenant context is carried once per batch — never
+        per call.  Harvest results with :meth:`harvest`.
+        """
+        return self.send_batch([(_OP_KIND[op[0]],) + tuple(op[1:])
+                                for op in ops])
+
+    def harvest(self, handles=None, block: bool = True,
+                max_iters: int = 200_000) -> dict[int, tuple[int, bytes]]:
+        """Collect responses: ``{handle: (status, body)}``.
+
+        ``handles=None`` harvests whatever has already arrived (one drain;
+        never pumps).  With explicit handles and ``block=True`` this pumps
+        until EVERY handle resolves — requests the server shed terminally
+        resolve as ``(wire.E_SHED, hint)`` where the hint decodes with
+        :func:`repro.core.wire.decode_shed_hint`.
+        """
+        self.collect()
+        responses = self.responses
+        if handles is None:
+            out = dict(responses)
+            responses.clear()
+            return out
+        out = {}
+        lt = self.server.lifecycle
+        pending = [rid for rid in handles if rid not in responses]
+        for rid in handles:
+            if rid in responses:
+                out[rid] = responses.pop(rid)
+        if not block:
+            for rid in list(pending):
+                hint = lt.take_shed(self.flow, rid)
+                if hint is not None:
+                    self._issued_r.pop(rid, None)
+                    self._issued_w.pop(rid, None)
+                    out[rid] = (wire.E_SHED, hint)
+                    pending.remove(rid)
+            return out
+        for rid in pending:
+            out[rid] = self.wait(rid, max_iters)
+        return {rid: out[rid] for rid in handles if rid in out}
+
     def send_batch(self, msgs: list[tuple]) -> list[int]:
-        """msgs: list of ("r", fid, off, n) / ("w", fid, off, data)."""
+        """msgs: list of ("r", fid, off, n) / ("w", fid, off, data).
+
+        Deprecated spelling of :meth:`submit` (kept as a thin wrapper
+        target; prefer ``submit``, which also accepts the long op names).
+        """
         encoded, rids = [], []
         now = self.server.clock.now
         with self._lock:
@@ -699,12 +828,14 @@ class DDSClient:
             self.collect()
             if rid in self.responses:
                 return self.responses.pop(rid)
-            if lt.take_shed(self.flow, rid):
-                # Terminal: the request was shed under overload — no
-                # response will EVER arrive.  Surface it instead of
+            hint = lt.take_shed(self.flow, rid)
+            if hint is not None:
+                # Terminal: the request was shed under overload or by
+                # admission — no response will EVER arrive.  Surface it
+                # (with the retry-after hint as the body) instead of
                 # spinning the full iteration budget into a timeout.
                 self._issued_r.pop(rid, None)
                 self._issued_w.pop(rid, None)
-                return (wire.E_SHED, b"")
+                return (wire.E_SHED, hint)
             self.server.pump()
         raise TimeoutError(f"no response for request {rid}")

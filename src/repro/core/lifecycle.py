@@ -141,7 +141,8 @@ class LifecycleTracker:
     here (there is no other structure left to carry them).
     """
 
-    __slots__ = ("clock", "read_types", "_shed", "hist", "sheds")
+    __slots__ = ("clock", "read_types", "_shed", "hist", "sheds",
+                 "tenant_hist", "tenant_sheds")
 
     def __init__(self, clock: TickClock, read_types=None):
         self.clock = clock
@@ -150,28 +151,68 @@ class LifecycleTracker:
         # stamp rides the host-path data plane).  The server passes the
         # §8.1 default; the KV app passes {KV_GET}.
         self.read_types = frozenset(read_types or ())
-        self._shed: dict[tuple, int] = {}               # (flow, rid) -> tick
+        self._shed: dict[tuple, bytes] = {}     # (flow, rid) -> hint bytes
         self.hist: dict[str, TickHistogram] = {
             DPU_READ: TickHistogram(),
             HOST_READ: TickHistogram(),
             WRITE: TickHistogram(),
         }
         self.sheds = 0
+        # Per-tenant split, recorded ONLY for nonzero tenants (tenant 0 is
+        # the untenanted default and lives purely in the aggregate above),
+        # so single-tenant deployments pay one int test per completion.
+        self.tenant_hist: dict[int, dict[str, TickHistogram]] = {}
+        self.tenant_sheds: dict[int, int] = {}
+
+    # -- per-tenant completion stamps ---------------------------------------------
+    def tenant_hist_for(self, tenant: int, cls: str) -> TickHistogram:
+        per = self.tenant_hist.get(tenant)
+        if per is None:
+            per = self.tenant_hist[tenant] = {}
+        h = per.get(cls)
+        if h is None:
+            h = per[cls] = TickHistogram()
+        return h
+
+    def add_tenant(self, tenant: int, cls: str, delta: int) -> None:
+        self.tenant_hist_for(tenant, cls).add(delta)
 
     # -- terminal shed status ----------------------------------------------------
-    def mark_shed(self, flow, rid: int) -> None:
-        """The request was SHED (bounded E_NOSPC path gave up): no response
-        will ever arrive.  Clients poll ``take_shed`` instead of timing out."""
-        self._shed[(flow, rid)] = self.clock.now
+    def mark_shed(self, flow, rid: int, hint: bytes = b"") -> None:
+        """The request was SHED (bounded E_NOSPC overload path gave up, or
+        token-bucket admission refused it): no response will ever arrive.
+        Clients poll ``take_shed`` instead of timing out.  ``hint`` is the
+        retry-after body the client's E_SHED response will carry."""
+        self._shed[(flow, rid)] = hint
         self.sheds += 1
+        t = getattr(flow, "tenant", 0)
+        if t:
+            self.tenant_sheds[t] = self.tenant_sheds.get(t, 0) + 1
 
-    def take_shed(self, flow, rid: int) -> bool:
-        return self._shed.pop((flow, rid), None) is not None
+    def take_shed(self, flow, rid: int) -> bytes | None:
+        """The shed hint for ``(flow, rid)``, or None if it was not shed.
+
+        Distinguish with ``is not None`` — an empty hint is still a shed.
+        """
+        return self._shed.pop((flow, rid), None)
 
     def summary(self) -> dict:
         out = {cls: h.summary() for cls, h in self.hist.items() if h.n}
         if self.sheds:
             out["sheds"] = self.sheds
+        tenants = self._tenant_summary()
+        if tenants:
+            out["tenants"] = tenants
+        return out
+
+    def _tenant_summary(self) -> dict:
+        out: dict[int, dict] = {}
+        for t, per in sorted(self.tenant_hist.items()):
+            ent = {cls: h.summary() for cls, h in per.items() if h.n}
+            if ent:
+                out[t] = ent
+        for t, n in sorted(self.tenant_sheds.items()):
+            out.setdefault(t, {})["sheds"] = n
         return out
 
     def histograms(self) -> dict:

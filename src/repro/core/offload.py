@@ -88,6 +88,11 @@ class OffloadAPI:
     # histograms into host-read vs write classes (a set probe per message,
     # not a call).  None => the server's default ({APP_READ}).
     read_types: frozenset | None = None
+    # Request-id extractor for messages shed BEFORE any execution path
+    # parses them (token-bucket admission at the director): msg -> req_id.
+    # None => the server's default (u64 at byte offset 1, which both the
+    # §8.1 app protocol and the KV protocol satisfy).
+    req_id_of: Callable[[bytes], int] | None = None
 
 
 SLAB_MIN_SHIFT = 6  # smallest size class: 64 B (one cache line)
@@ -326,11 +331,10 @@ class OffloadEngine:
                 return 0  # nothing offloaded, nothing in flight
             self.fs.device.poll()
             return self.complete_pending()
-        if len(queue) <= max_requests:
-            reqs = list(queue)      # C-speed bulk grab of the whole burst
-            queue.clear()
-        else:
-            reqs = [queue.popleft() for _ in range(max_requests)]
+        # Weighted-fair pull: the director's queue is demuxed per tenant,
+        # so a flooding tenant's backlog yields this burst's slots to every
+        # backlogged tenant in weight proportion (single-tenant: plain FIFO).
+        reqs = queue.take(max_requests)
         # Hot loop: hoist per-request attribute lookups out of the loop and
         # fold per-request stats into ONE update after the batch.
         off_func = self.api.off_func
@@ -445,6 +449,7 @@ class OffloadEngine:
         lifecycle = self.lifecycle
         if lifecycle is not None:
             dpu_hist_add = lifecycle.hist["dpu_read"].add
+            tenant_add = lifecycle.add_tenant
             now_tick = lifecycle.clock.now
         completed = failed = bytes_served = 0
         burst_client = None
@@ -458,7 +463,11 @@ class OffloadEngine:
             if not ctx.consumed:
                 if lifecycle is not None:
                     # Response-publish tick for this offloaded read.
-                    dpu_hist_add(now_tick - ctx.open_tick)
+                    delta = now_tick - ctx.open_tick
+                    dpu_hist_add(delta)
+                    t = ctx.client.tenant
+                    if t:
+                        tenant_add(t, "dpu_read", delta)
                 pkts = self._create_pkts(ctx)
                 if ctx.status == COMPLETE:
                     # Indirect packets reference pool memory: ownership rides

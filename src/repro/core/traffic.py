@@ -32,6 +32,7 @@ that fails the predicate); nothing sleeps.
 
 from __future__ import annotations
 
+import bisect
 import struct
 import threading
 from collections import deque
@@ -51,25 +52,41 @@ FLAG_FIN = 4
 
 @dataclass(frozen=True)
 class FiveTuple:
+    """Flow identity: the classic 5-tuple plus a first-class ``tenant`` id.
+
+    The tenant rides the flow (it is part of identity and hashing): a
+    client binds its tenant once at connection time, and every request,
+    split host connection, and response inherits it — the wire format
+    the QoS layer (weighted-fair demux, token-bucket admission, per-tenant
+    histograms) keys on.  ``tenant == 0`` is the untenanted default.
+    """
+
     src_ip: str
     src_port: int
     dst_ip: str
     dst_port: int
     proto: str = "tcp"
+    tenant: int = 0
 
     def __post_init__(self):
         # Flows key every hot-path dict (connections, demux queues); caching
-        # the hash beats re-tupling five fields on each lookup.
+        # the hash beats re-tupling six fields on each lookup.
         object.__setattr__(self, "_hash", hash(
             (self.src_ip, self.src_port, self.dst_ip, self.dst_port,
-             self.proto)))
+             self.proto, self.tenant)))
 
     def __hash__(self) -> int:
         return self._hash
 
     def reversed(self) -> "FiveTuple":
         return FiveTuple(self.dst_ip, self.dst_port, self.src_ip,
-                         self.src_port, self.proto)
+                         self.src_port, self.proto, self.tenant)
+
+
+def _flow_order(ft: FiveTuple) -> tuple:
+    """Deterministic total order over flows (fair drains iterate sorted)."""
+    return (ft.tenant, ft.src_ip, ft.src_port, ft.dst_ip, ft.dst_port,
+            ft.proto)
 
 
 @dataclass(slots=True)
@@ -172,6 +189,11 @@ class FlowDemuxWire:
         self._q: dict[FiveTuple, deque[Packet]] = {}
         self._lock = threading.Lock()
         self._len = 0
+        # Tenant service weights for the fair drain (``pop_many``); None
+        # means every tenant weighs ``1``.  Installed by the owning server
+        # from its QoSProfile.
+        self.weight_of: Callable[[int], int] | None = None
+        self._next_tenant = 0   # fair-drain resume point (bounded starvation)
 
     def push(self, pkt: Packet) -> None:
         with self._lock:
@@ -222,6 +244,79 @@ class FlowDemuxWire:
                     return dq.popleft()
             return None
 
+    def pop_many(self, n: int) -> list[Packet]:
+        """Pop up to ``n`` packets, weighted-fairly ACROSS TENANTS.
+
+        Per-flow FIFO (the only order TCP guarantees) is always preserved.
+        With one backlogged flow this is exactly a FIFO burst pop; with
+        several, service rotates tenant-by-tenant — each backlogged tenant
+        takes up to ``weight_of(tenant)`` packets per round, its flows
+        round-robined one packet at a time — so a flooding tenant's backlog
+        cannot monopolize a drain slice.  The rotation resumes where the
+        previous call stopped (``_next_tenant``), bounding starvation
+        across calls even when ``n`` is smaller than the tenant count.
+        """
+        if self._len == 0 or n <= 0:
+            return []
+        with self._lock:
+            live = [f for f, dq in self._q.items() if dq]
+            if not live:
+                return []
+            if len(live) == 1:
+                dq = self._q[live[0]]
+                k = min(n, len(dq))
+                out = [dq.popleft() for _ in range(k)]
+                self._len -= k
+                return out
+            live.sort(key=_flow_order)
+            # Group the (sorted) flows by tenant, preserving flow order.
+            tenants: list[int] = []
+            flows_of: dict[int, list[deque]] = {}
+            for f in live:
+                g = flows_of.get(f.tenant)
+                if g is None:
+                    g = flows_of[f.tenant] = []
+                    tenants.append(f.tenant)
+                g.append(self._q[f])
+            # Rotate so service resumes after the last tenant served.
+            i = bisect.bisect_left(tenants, self._next_tenant)
+            tenants = tenants[i:] + tenants[:i]
+            weight_of = self.weight_of
+            out: list[Packet] = []
+            budget = n
+            while budget > 0 and tenants:
+                alive: list[int] = []
+                for ti, t in enumerate(tenants):
+                    quantum = weight_of(t) if weight_of is not None else 1
+                    if quantum > budget:
+                        quantum = budget
+                    group = flows_of[t]
+                    took = 1
+                    while quantum > 0 and took:
+                        took = 0
+                        for dq in group:
+                            if not dq:
+                                continue
+                            out.append(dq.popleft())
+                            took += 1
+                            quantum -= 1
+                            if quantum <= 0:
+                                break
+                    if any(group):
+                        alive.append(t)
+                    budget = n - len(out)
+                    if budget <= 0:
+                        nxt = tenants[ti + 1] if ti + 1 < len(tenants) \
+                            else tenants[0]
+                        self._next_tenant = nxt
+                        break
+                else:
+                    tenants = alive
+                    continue
+                break
+            self._len -= len(out)
+            return out
+
     def flows(self) -> list[FiveTuple]:
         with self._lock:
             return [f for f, dq in self._q.items() if dq]
@@ -232,6 +327,100 @@ class FlowDemuxWire:
 
     def __bool__(self) -> bool:
         return self._len > 0   # racy-but-safe peek (int read is atomic)
+
+
+class TenantFairQueue:
+    """The director's offload queue, demultiplexed per tenant.
+
+    PR 5's priority demux put offloaded reads ahead of host work — but the
+    offload queue itself was one FIFO, so a flooding tenant's GETs filled
+    it and a well-behaved tenant's reads queued behind ALL of them.  This
+    queue keys requests by ``flow.tenant`` and serves them weighted
+    round-robin: each ``take`` round gives every backlogged tenant up to
+    ``weight_of(tenant)`` requests, resuming across calls where the last
+    take stopped, so no tenant is ever starved and the queue stays
+    work-conserving (an idle tenant's share flows to the backlogged ones).
+
+    Single-tenant behavior is EXACTLY the old FIFO (same pop order), so
+    untenanted deployments keep byte-identical schedules.  Items are the
+    director's ``(flow, msg)`` pairs.  Single-threaded by design: the
+    queue is only touched from the owning server's pump (same discipline
+    as the plain deque it replaces).
+    """
+
+    __slots__ = ("weight_of", "_q", "_next_tenant", "_len")
+
+    def __init__(self, weight_of: Callable[[int], int] | None = None):
+        self.weight_of = weight_of
+        self._q: dict[int, deque] = {}
+        self._next_tenant = 0
+        self._len = 0
+
+    def append(self, item: tuple[FiveTuple, bytes]) -> None:
+        t = item[0].tenant
+        dq = self._q.get(t)
+        if dq is None:
+            dq = self._q[t] = deque()
+        dq.append(item)
+        self._len += 1
+
+    def take(self, budget: int) -> list[tuple[FiveTuple, bytes]]:
+        """Take up to ``budget`` requests, weighted-fairly across tenants."""
+        if self._len == 0 or budget <= 0:
+            return []
+        q = self._q
+        active = [t for t in q if q[t]]
+        if len(active) == 1:
+            dq = q[active[0]]
+            if len(dq) <= budget:
+                out = list(dq)
+                dq.clear()
+            else:
+                out = [dq.popleft() for _ in range(budget)]
+            self._len -= len(out)
+            return out
+        active.sort()
+        i = bisect.bisect_left(active, self._next_tenant)
+        active = active[i:] + active[:i]
+        weight_of = self.weight_of
+        out: list = []
+        while active and len(out) < budget:
+            alive: list[int] = []
+            exhausted = False
+            for ti, t in enumerate(active):
+                dq = q[t]
+                quantum = weight_of(t) if weight_of is not None else 1
+                k = min(quantum, budget - len(out), len(dq))
+                for _ in range(k):
+                    out.append(dq.popleft())
+                if dq:
+                    alive.append(t)
+                if len(out) >= budget:
+                    self._next_tenant = (active[ti + 1]
+                                         if ti + 1 < len(active)
+                                         else active[0])
+                    exhausted = True
+                    break
+            if exhausted:
+                break
+            active = alive
+        self._len -= len(out)
+        return out
+
+    def tenants(self) -> list[int]:
+        """Backlogged tenant ids (observability/tests)."""
+        return sorted(t for t, dq in self._q.items() if dq)
+
+    def clear(self) -> None:
+        self._q.clear()
+        self._len = 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    def __bool__(self) -> bool:
+        # Lock-free peek, same contract as Wire.__bool__ (busy-predicates).
+        return self._len > 0
 
 
 class TCPReceiver:
@@ -291,6 +480,7 @@ class DirectorStats:
     to_dpu: int = 0               # messages handed to the offload engine
     resp_from_host: int = 0
     resp_from_dpu: int = 0
+    admission_shed: int = 0       # requests dropped by token-bucket admission
     modeled_time_s: float = 0.0
     per_core_pkts: dict[int, int] = field(default_factory=dict)
 
@@ -310,12 +500,21 @@ class TrafficDirector:
         self.ncores = ncores
         self.host_port = host_port
         self.per_pkt_cost = TLDK_PER_PKT_S if userspace_stack else LINUX_TCP_PER_PKT_S
-        # Wires: ingress (from NIC), to-host, to-client, and the offload queue.
+        # Wires: ingress (from NIC), to-host, to-client, and the offload
+        # queue.  ``to_host`` is flow-demuxed so its drain is tenant-fair
+        # (same per-flow FIFO guarantee a TCP connection provides); the
+        # offload queue is tenant-demuxed with weighted round-robin take.
         self.ingress = Wire("nic-ingress")
-        self.to_host = Wire("dpu->host")
+        self.to_host = FlowDemuxWire("dpu->host")
         self.from_host = Wire("host->dpu")
         self.to_client = FlowDemuxWire("dpu->client")
-        self.offload_queue: deque[tuple[FiveTuple, bytes]] = deque()
+        self.offload_queue = TenantFairQueue()
+        # Tenancy hooks, installed by the owning server when admission is
+        # configured (QoSProfile): ``admit(tenant, n) -> granted`` and
+        # ``on_shed(client_flow, msg)`` for each dropped request.  None
+        # means admit-all (the untenanted default pays one attribute test).
+        self.admit: Callable[[int, int], int] | None = None
+        self.on_shed: Callable[[FiveTuple, bytes], None] | None = None
         self._conns: dict[FiveTuple, _PEPConnection] = {}
         self._host_flow_of: dict[FiveTuple, FiveTuple] = {}
         self._client_flow_of: dict[FiveTuple, FiveTuple] = {}  # reverse map
@@ -330,8 +529,11 @@ class TrafficDirector:
                                resp_flow=ft.reversed())
             self._conns[ft] = c
             # Second connection of the split: DPU -> host, own seq space.
+            # The client's tenant rides onto it, so host-path scheduling
+            # and per-tenant stats stay attributable after the split.
             host_flow = FiveTuple("dpu-proxy", 40000 + len(self._conns),
-                                  "host", self.host_port, ft.proto)
+                                  "host", self.host_port, ft.proto,
+                                  tenant=ft.tenant)
             self._host_flow_of[ft] = host_flow
             self._client_flow_of[host_flow] = ft
         return c
@@ -367,7 +569,8 @@ class TrafficDirector:
             return 0
         st = self.stats
         off_q = self.offload_queue
-        inspected = hw_forwarded = to_dpu = 0
+        admit = self.admit
+        inspected = hw_forwarded = to_dpu = adm_shed = 0
         modeled = 0.0
         for pkt in pkts:
             # Stage 1: application signature, evaluated in NIC hardware (§5.3).
@@ -389,6 +592,27 @@ class TrafficDirector:
             # Stage 2: the offload predicate inspects the payload (zero-copy:
             # the predicate sees the packet buffer itself, never a copy).
             host_msgs, dpu_msgs = self.off_pred(pkt.payload, self.cache_table)
+            if admit is not None and (host_msgs or dpu_msgs):
+                # Token-bucket admission, applied at the demux — BEFORE a
+                # request can occupy a context-ring slot or device queue
+                # entry.  Offloaded (latency-critical) requests draw tokens
+                # first; everything over the grant is shed terminally via
+                # ``on_shed`` (the server marks it E_SHED with a
+                # retry-after hint for the client).
+                n_off = len(host_msgs) + len(dpu_msgs)
+                granted = admit(pkt.flow.tenant, n_off)
+                if granted < n_off:
+                    keep_dpu = min(granted, len(dpu_msgs))
+                    keep_host = granted - keep_dpu
+                    on_shed = self.on_shed
+                    if on_shed is not None:
+                        for m in dpu_msgs[keep_dpu:]:
+                            on_shed(pkt.flow, m)
+                        for m in host_msgs[keep_host:]:
+                            on_shed(pkt.flow, m)
+                    adm_shed += n_off - granted
+                    dpu_msgs = dpu_msgs[:keep_dpu]
+                    host_msgs = host_msgs[:keep_host]
             if host_msgs:
                 self._send_to_host_many(conn, pkt.flow, host_msgs)
             if dpu_msgs:
@@ -402,6 +626,7 @@ class TrafficDirector:
         st.hw_forwarded += hw_forwarded
         st.inspected += inspected
         st.to_dpu += to_dpu
+        st.admission_shed += adm_shed
         st.modeled_time_s += modeled
         return len(pkts)
 
@@ -430,7 +655,7 @@ class TrafficDirector:
             pkts.append(Packet(host_flow, seq, m))
             seq += len(m)
         conn.host_next_seq = seq
-        self.to_host.push_many(pkts)
+        self.to_host.push_many(host_flow, pkts)
         self.stats.to_host += len(msgs)
         self.stats.modeled_time_s += ARM_FORWARD_LATENCY_S * len(msgs)
 

@@ -34,10 +34,34 @@ E_IO = 5
 E_INVAL = 22
 E_NOSPC = 28
 # Terminal client-side status for a request SHED under overload: the file
-# service's bounded E_NOSPC emergency path gave up, so no response will
-# ever arrive.  Never travels on the wire — clients synthesize it from the
-# lifecycle tracker's shed marks instead of spinning into a timeout.
+# service's bounded E_NOSPC emergency path gave up — or token-bucket
+# admission refused it at the demux — so no response will ever arrive.
+# Never travels on the wire — clients synthesize it from the lifecycle
+# tracker's shed marks instead of spinning into a timeout.  The response
+# BODY is a shed hint (see ``encode_shed_hint``) carrying the shedding
+# tenant's bucket state, not empty bytes: the client learns WHEN a retry
+# can be admitted instead of just that it was dropped.
 E_SHED = 131
+
+# Shed-hint body: tenant(u32) retry_after_ticks(u32).  ``retry_after`` is
+# the shedding bucket's estimate of when one token will be available
+# (admission sheds) or 1 (overload sheds: retry next tick is admissible).
+SHED_HINT = struct.Struct("<II")
+
+
+def encode_shed_hint(tenant: int, retry_after: int) -> bytes:
+    return SHED_HINT.pack(tenant & 0xFFFFFFFF,
+                          min(max(retry_after, 0), 0xFFFFFFFF))
+
+
+def decode_shed_hint(body: bytes | memoryview) -> tuple[int, int]:
+    """Decode an ``E_SHED`` body -> ``(tenant, retry_after_ticks)``.
+
+    Tolerates an empty body (legacy/unattributed sheds) as ``(0, 0)``.
+    """
+    if len(body) < SHED_HINT.size:
+        return (0, 0)
+    return SHED_HINT.unpack_from(body, 0)
 
 # request header: op(u8) request_id(u64) file_id(u32) offset(u64) nbytes(u32)
 REQ_HDR = struct.Struct("<BQIQI")

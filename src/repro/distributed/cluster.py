@@ -338,6 +338,20 @@ class DDSCluster:
             out["device"] = dev.summary()
         if dev_prio.n:
             out["device_prio"] = dev_prio.summary()
+        tenants = {t: {c: h.summary() for c, h in per.items() if h.n}
+                   for t, per in sorted(self._merged_tenants().items())}
+        for t, n in sorted(self._merged_tenant_sheds().items()):
+            tenants.setdefault(t, {})["sheds"] = n
+        if tenants:
+            out["tenants"] = tenants
+        admission = [srv.admission.summary() for srv in self.servers
+                     if srv.admission is not None]
+        if admission:
+            out["admission"] = {
+                "offered": sum(a["offered"] for a in admission),
+                "granted": sum(a["granted"] for a in admission),
+                "shed": sum(a["shed"] for a in admission),
+            }
         return out
 
     def _merged_classes(self) -> dict:
@@ -351,6 +365,41 @@ class DDSCluster:
                     agg = classes[cls] = TickHistogram()
                 agg.merge(h)
         return classes
+
+    def _merged_tenants(self) -> dict:
+        """Per-tenant per-class histograms across shards (tenant 0 — the
+        untenanted default — lives only in the aggregate classes)."""
+        tenants: dict[int, dict[str, TickHistogram]] = {}
+        for srv in self.servers:
+            for t, per in srv.lifecycle.tenant_hist.items():
+                agg_per = tenants.get(t)
+                if agg_per is None:
+                    agg_per = tenants[t] = {}
+                for cls, h in per.items():
+                    agg = agg_per.get(cls)
+                    if agg is None:
+                        agg = agg_per[cls] = TickHistogram()
+                    agg.merge(h)
+        return tenants
+
+    def _merged_tenant_sheds(self) -> dict[int, int]:
+        sheds: dict[int, int] = {}
+        for srv in self.servers:
+            for t, n in srv.lifecycle.tenant_sheds.items():
+                sheds[t] = sheds.get(t, 0) + n
+        return sheds
+
+    def tenant_latency(self, tenant: int, cls: str) -> TickHistogram:
+        """Merged cross-shard histogram for one (tenant, class) — the
+        tenancy benchmark's victim-p99 probe."""
+        agg = TickHistogram()
+        for srv in self.servers:
+            per = srv.lifecycle.tenant_hist.get(tenant)
+            if per is not None:
+                h = per.get(cls)
+                if h is not None:
+                    agg.merge(h)
+        return agg
 
     def latency_histograms(self) -> dict:
         """Exact merged per-class histograms (byte-identical across two

@@ -34,6 +34,7 @@ from repro.core.dds_server import DDSClient, DDSStorageServer, ServerConfig
 from repro.core.file_service import FileServiceRunner, SegmentFS
 from repro.core.host_lib import DDSFrontEnd
 from repro.core.lifecycle import TickClock, TickHistogram
+from repro.core.qos import QoSProfile
 from repro.distributed.cluster import DDSCluster
 from repro.storage.blockdev import BlockDevice
 
@@ -346,8 +347,8 @@ def test_read_write_fence_bounces_fenced_reads_to_host():
     (held / ring-queued / at the device) is bounced to the host, where the
     submission FIFO orders it after them — fresh bytes despite the device
     priority queue."""
-    srv = DDSStorageServer(ServerConfig(device_capacity=1 << 24,
-                                        read_write_fence=True))
+    srv = DDSStorageServer(ServerConfig(
+        device_capacity=1 << 24, qos=QoSProfile(read_write_fence=True)))
     srv.device.queue_depth = 1           # keep the write backlog alive
     cli = DDSClient(srv)
     fid = srv.frontend.create_file("fence")
@@ -429,7 +430,9 @@ def test_client_wait_surfaces_shed_as_terminal_status():
     assert len(frontend_rids) == 1
     srv.file_service.shed_hook(frontend_rids[0])   # the wired _on_shed
     status, body = cli.wait(rid, max_iters=2_000)  # no timeout spin
-    assert status == wire.E_SHED and body == b""
+    assert status == wire.E_SHED
+    # Overload sheds carry a retry-after hint (tenant 0, retry next tick).
+    assert wire.decode_shed_hint(body) == (0, 1)
     assert not srv.host_app.busy()                 # in-flight entry dropped
     assert not srv.frontend.any_outstanding()      # booking cancelled
     assert srv.lifecycle.sheds == 1
@@ -456,7 +459,8 @@ def test_shed_during_submit_many_reentry_is_not_lost():
     srv.host_app.step()                 # books the meta + reconciles
     assert not srv.host_app._orphan_sheds
     assert next_rid not in srv.host_app._inflight   # meta did not leak
-    assert cli.wait(rid, max_iters=2_000) == (wire.E_SHED, b"")
+    status, body = cli.wait(rid, max_iters=2_000)
+    assert status == wire.E_SHED and wire.decode_shed_hint(body) == (0, 1)
     srv.run_until_idle()                # server quiesces; nothing pinned
 
 
@@ -478,5 +482,6 @@ def test_cluster_wait_many_surfaces_shed():
     srv.file_service.shed_hook(frontend_rids[0])
     got = cli.wait_many([ok_rid, shed_rid], max_iters=20_000)
     assert got[ok_rid][0] == wire.E_OK
-    assert got[shed_rid] == (wire.E_SHED, b"")
+    assert got[shed_rid][0] == wire.E_SHED
+    assert wire.decode_shed_hint(got[shed_rid][1]) == (0, 1)
     assert cli.outstanding() == 0
