@@ -25,6 +25,8 @@ LATENCY_JSON = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_latency.json")
 TENANCY_JSON = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_tenancy.json")
+FAILOVER_JSON = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_failover.json")
 
 
 def _load(d: str) -> dict:
@@ -90,9 +92,33 @@ def tenancy_compare() -> None:
          f"hog sheds {cur['qos']['hog_sheds']}, solo p99 {solo}t")
 
 
+def failover_compare() -> None:
+    """Committed failover record: what the kill-a-shard run cost, in ticks."""
+    if not os.path.exists(FAILOVER_JSON):
+        print("# no BENCH_failover.json; failover comparison skipped")
+        return
+    with open(FAILOVER_JSON) as fh:
+        doc = json.load(fh)
+    cur = doc.get("current", {}).get("full")
+    if not cur:
+        print("# BENCH_failover.json lacks current/full; skipped")
+        return
+    section("kill-a-shard failover (ticks): steady state -> crash round")
+    emit("failover_blip", float(cur["blip_ticks"]),
+         f"steady p99 {cur['steady_p99']}t -> crash round "
+         f"{cur['blip_ticks']}t -> recovered p99 {cur['post_p99']}t, "
+         f"lost_acked={cur['lost_acked']}")
+    emit("failover_repl_cost", cur["tput_ratio_vs_unreplicated"],
+         f"replicated steady at "
+         f"{cur['tput_ratio_vs_unreplicated']:.2f}x the unreplicated "
+         f"ops/tick ({cur['unreplicated_steady_ops_per_tick']}/t), "
+         f"deterministic={cur.get('deterministic')}")
+
+
 def main() -> None:
     latency_compare()
     tenancy_compare()
+    failover_compare()
     if not (os.path.isdir(BASE) and os.path.isdir(OPT)):
         print("# need both results/dryrun and results/dryrun_opt")
         return

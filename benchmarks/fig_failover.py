@@ -1,0 +1,357 @@
+"""Kill-a-shard failover gate: zero lost acks, bounded blip, cheap replicas.
+
+PR 7 adds replication groups (primary + K ring successors), primary-backup
+forwarding over the host wire (a write ack releases only after every
+replica holds the bytes), tick-clock heartbeat detection, replica
+promotion with ring repair, and an epoch fence that turns a crash into
+transparent client-side replay.  This benchmark holds that whole stack to
+the paper's §8.1 availability story under the fig_scaleout-style workload:
+a Zipfian-skewed sharded-KV read-modify-write loop, except here the shard
+that owns the HOTTEST key is killed mid-run.
+
+One scenario, three measurements — all in deterministic TICKS of the
+shared cluster clock, so every gate is machine-independent:
+
+  * **zero lost acknowledged writes** — every PUT the client saw ack is
+    re-read and byte-compared after failover (inline every round AND in a
+    final sweep).  K=1, one crash: nothing acked may vanish.  Hard gate,
+    any mode.
+  * **bounded p99 blip** — per-round settle times are recorded in ticks;
+    the crash round is allowed the heartbeat timeout plus a fixed
+    promotion allowance on top of the steady-state p99, and post-failover
+    rounds must return to (near) the steady-state p99 even though the
+    promoted shard now serves two shards' heat.
+  * **replication is cheap** — the same workload runs on an unreplicated
+    cluster (K=0, no crash); the replicated run's steady-state ops/tick
+    must stay >= ``TPUT_GATE`` (0.9x) of it.  Write acks wait for the
+    replica, so this bounds the ack-hold pipeline cost.
+
+Two same-seed replicated runs must produce IDENTICAL round-tick traces,
+failover events and ack ledgers (determinism gate).  Wall-clock ops/sec is
+reported (calibrated) but never gated — the tick domain carries the
+contract.  Results go to ``BENCH_failover.json``; ``--smoke`` (CI) runs a
+reduced config and additionally fails on a >30% tick regression vs the
+committed ``current`` numbers.
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import struct
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, section  # noqa: E402
+from repro.apps.kv_store import KVClient, ShardedKVStore, decode_record  # noqa: E402
+from repro.core import wire  # noqa: E402
+from repro.core.dds_server import ServerConfig  # noqa: E402
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_failover.json")
+
+TPUT_GATE = 0.9         # replicated steady ops/tick >= 0.9x unreplicated
+BLIP_SLACK = 24         # crash-round allowance beyond timeout + steady p99
+RECOVERY_SLACK = 8      # post-failover round p99 may exceed steady p99 by
+                        # this many ticks (promoted shard serves 2x heat)
+SMOKE_REGRESSION = 1.3  # CI: fail when blip/steady ticks grow >30% vs current
+
+CONFIGS = {
+    "full": dict(shards=8, clients=2, hot_keys=64, zipf_a=2.5, rounds=32,
+                 crash_round=16, gets=144, overwrites=48, value_size=64,
+                 queue_depth=4, heartbeat_timeout_ticks=8),
+    "smoke": dict(shards=4, clients=2, hot_keys=24, zipf_a=2.5, rounds=12,
+                  crash_round=6, gets=144, overwrites=48, value_size=64,
+                  queue_depth=4, heartbeat_timeout_ticks=6),
+}
+
+ZIPF_SEED = 0xFA110
+
+
+def calibrate(iters: int = 200_000) -> float:
+    """Reference ops/sec of a fixed pure-Python loop (machine-speed proxy)."""
+    pack = struct.Struct("<QII").pack
+    blob = bytes(range(256)) * 8
+    t0 = time.perf_counter()
+    d: dict[int, bytes] = {}
+    for i in range(iters):
+        d[i & 1023] = blob[i & 255 : (i & 255) + 64]
+        pack(i, i & 0xFFFF, 64)
+    return iters / (time.perf_counter() - t0)
+
+
+def percentile(vals: list[int], p: float) -> int:
+    """Exact percentile of a small integer sample (nearest-rank)."""
+    if not vals:
+        return 0
+    s = sorted(vals)
+    return s[min(len(s) - 1, -(-len(s) * int(p) // 100) - 1)]
+
+
+def _zipf_ranks(cfg: dict, total: int) -> list[int]:
+    """Seeded skewed rank sequence, precomputed (untimed): the exact same
+    key sequence every rep, every run, every machine."""
+    rng = np.random.default_rng(ZIPF_SEED)
+    return [(int(z) - 1) % cfg["hot_keys"]
+            for z in rng.zipf(cfg["zipf_a"], size=total)]
+
+
+def _value(key: bytes, rnd: int, size: int) -> bytes:
+    """Round-stamped value, a function of (key, round) ONLY — two clients
+    overwriting the same key in the same round agree on the bytes, so the
+    acked ledger is unambiguous."""
+    base = key + b"#%05d#" % rnd
+    return (base * (size // len(base) + 1))[:size]
+
+
+def run_failover_workload(cfg: dict, replication: int, crash: bool) -> dict:
+    """Drive the settle-per-round Zipfian RMW loop; optionally kill the
+    shard that owns the hottest key mid-run.  Returns tick-domain results
+    plus the acked-write ledger verification."""
+    config = ServerConfig(device_capacity=1 << 26, cache_items=1 << 14,
+                          replication=replication,
+                          heartbeat_timeout_ticks=cfg[
+                              "heartbeat_timeout_ticks"])
+    store = ShardedKVStore(num_shards=cfg["shards"], config=config)
+    cluster = store.cluster
+    for srv in cluster.servers:
+        # Bounded per-poll completion budget (as in fig_latency): rounds
+        # are limited by device service rate, not pipeline depth, so the
+        # workload is THROUGHPUT-bound and the replica hop has queueing to
+        # hide behind — the regime the 0.9x replication-cost gate is about.
+        srv.device.queue_depth = cfg["queue_depth"]
+    clients = [KVClient(store) for _ in range(cfg["clients"])]
+    vsize = cfg["value_size"]
+    hot = [b"hot-%04d" % i for i in range(cfg["hot_keys"])]
+
+    # Untimed warm: PUT-ack every hot key (arms the DPU cache, seeds the
+    # acked ledger) through client 0.
+    acked: dict[bytes, bytes] = {}
+    rids = clients[0].submit([("put", k, _value(k, -1, vsize)) for k in hot])
+    res = clients[0].harvest(rids)
+    assert all(s == wire.E_OK for s, _ in res.values())
+    for k in hot:
+        acked[k] = _value(k, -1, vsize)
+    res = clients[0].harvest(clients[0].submit([("get", k) for k in hot]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    for cli in clients:
+        cli.net.run_until_idle()
+
+    per_round = cfg["gets"] + cfg["overwrites"]
+    ranks = _zipf_ranks(cfg, cfg["rounds"] * cfg["clients"] * per_round)
+    rk = iter(ranks)
+    round_ticks: list[int] = []
+    lost = 0
+    total = 0
+    victim = promoted = None
+    gc.collect()
+    gc.disable()   # keep collector pauses out of the timed region
+    t0 = time.perf_counter()
+    for r in range(cfg["rounds"]):
+        if crash and r == cfg["crash_round"]:
+            # Kill the shard that owns the hottest key, two ticks into the
+            # round — mid-GET-burst, the worst moment for it to die.
+            victim = store.shard_for_key(hot[0])
+            cluster.crash_at(victim, cluster.clock.now + 2)
+        t_start = cluster.clock.now
+        # Read phase: every client GETs its Zipf-ranked keys and BLOCKS on
+        # the values; each value is byte-compared against the acked ledger
+        # (a failover in the middle must not surface stale or lost bytes).
+        gmeta = []
+        for cli in clients:
+            ks = [hot[next(rk)] for _ in range(cfg["gets"])]
+            gmeta.append((cli, ks, cli.submit([("get", k) for k in ks])))
+        for cli, ks, rg in gmeta:
+            res = cli.harvest(rg)
+            for k, rid in zip(ks, rg):
+                status, body = res[rid]
+                if status != wire.E_OK or decode_record(body)[1] != acked[k]:
+                    lost += 1
+        # Modify phase: overwrite-PUT hot keys; an E_OK harvest updates the
+        # ledger — from that moment the bytes must survive any crash.
+        pmeta = []
+        for cli in clients:
+            ks = [hot[next(rk)] for _ in range(cfg["overwrites"])]
+            pmeta.append((cli, ks, cli.submit(
+                [("put", k, _value(k, r, vsize)) for k in ks])))
+        for cli, ks, rp in pmeta:
+            res = cli.harvest(rp)
+            for k, rid in zip(ks, rp):
+                if res[rid][0] == wire.E_OK:
+                    acked[k] = _value(k, r, vsize)
+                else:
+                    lost += 1
+        for cli in clients:
+            cli.net.run_until_idle()
+        total += cfg["clients"] * per_round
+        round_ticks.append(cluster.clock.now - t_start)
+    # Make sure a scheduled kill whose round outran it still lands, then
+    # sweep the WHOLE ledger: every byte ever acked must be readable.
+    if crash and victim is not None and not cluster.failover_events:
+        deadline = cluster.clock.now + cfg["heartbeat_timeout_ticks"] + 5
+        while cluster.clock.now < deadline:
+            cluster.pump()
+    sweep = clients[0].submit([("get", k) for k in hot])
+    res = clients[0].harvest(sweep)
+    for k, rid in zip(hot, sweep):
+        status, body = res[rid]
+        if status != wire.E_OK or decode_record(body)[1] != acked[k]:
+            lost += 1
+    elapsed = time.perf_counter() - t0
+    gc.enable()
+
+    cr = cfg["crash_round"]
+    steady = round_ticks[:cr]
+    post = round_ticks[cr + 1:]
+    if crash:
+        events = cluster.failover_events
+        assert len(events) == 1 and events[0]["dead"] == victim, events
+        promoted = events[0]["promoted"]
+    stats = cluster.latency_stats()
+    out = {
+        "requests": total,
+        "ticks": cluster.clock.now,
+        "wall_s": elapsed,
+        "ops_per_s": total / elapsed,
+        "lost_acked": lost,
+        "round_ticks": round_ticks,
+        "steady_ops_per_tick": (cr * cfg["clients"] * per_round
+                                / max(sum(steady), 1)),
+        "steady_p99": percentile(steady, 99),
+        "blip_ticks": round_ticks[cr] if crash else 0,
+        "post_p99": percentile(post, 99) if crash else 0,
+    }
+    if crash:
+        out["failover"] = {"victim": victim, "promoted": promoted,
+                           "events": list(cluster.failover_events)}
+        out["replication"] = stats.get("replication", {})
+    return out
+
+
+def load_json() -> dict:
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as fh:
+            return json.load(fh)
+    return {"schema": 1, "configs": CONFIGS}
+
+
+def save_json(doc: dict) -> None:
+    with open(JSON_PATH, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = ("--smoke" in argv
+             or os.environ.get("DDS_BENCH_SMOKE", "0") == "1")
+    record = ("current" if "--record-current" in argv else None)
+    mode = "smoke" if smoke else "full"
+    cfg = CONFIGS[mode]
+
+    section(f"kill-a-shard failover ({mode}: {cfg['shards']} shards K=1, "
+            f"{cfg['clients']} clients, crash at round "
+            f"{cfg['crash_round']}/{cfg['rounds']}, Zipf a={cfg['zipf_a']} "
+            f"over {cfg['hot_keys']} hot keys)")
+    # Two same-seed replicated runs (determinism gate) + one unreplicated
+    # reference run for the replication-cost gate.  Wall-clock is paired
+    # with surrounding calibrations for the report line only — every gate
+    # below lives in the deterministic tick domain.
+    c1 = calibrate()
+    res = run_failover_workload(cfg, replication=1, crash=True)
+    rep2 = run_failover_workload(cfg, replication=1, crash=True)
+    plain = run_failover_workload(cfg, replication=0, crash=False)
+    c2 = calibrate()
+    calib = max(c1, c2)
+    identical = all(res[k] == rep2[k] for k in
+                    ("round_ticks", "failover", "lost_acked", "ticks",
+                     "requests"))
+    tput_ratio = (res["steady_ops_per_tick"]
+                  / max(plain["steady_ops_per_tick"], 1e-9))
+    emit(f"failover_{mode}", float(res["blip_ticks"]),
+         f"lost_acked={res['lost_acked']} blip={res['blip_ticks']}t "
+         f"steady_p99={res['steady_p99']}t post_p99={res['post_p99']}t "
+         f"tput_ratio={tput_ratio:.2f}x deterministic={identical} "
+         f"tput={res['ops_per_s']:.0f}op/s")
+    repl = res.get("replication", {})
+    if repl:
+        lag = repl.get("lag", {})
+        emit(f"failover_{mode}_replication", float(lag.get("p99", 0)),
+             f"forwarded={repl.get('forwarded', 0)} "
+             f"bytes={repl.get('bytes', 0)} lag_p99={lag.get('p99', 0)}t")
+
+    doc = load_json()
+    doc["configs"] = CONFIGS
+    res = {k: v for k, v in res.items() if k != "round_ticks"}
+    res["config"] = cfg
+    res["deterministic"] = identical
+    res["tput_ratio_vs_unreplicated"] = round(tput_ratio, 3)
+    res["unreplicated_steady_ops_per_tick"] = round(
+        plain["steady_ops_per_tick"], 3)
+    entry = {"calibration_ops_per_s": calib, mode: res}
+    if record:
+        doc.setdefault("current", {})["calibration_ops_per_s"] = calib
+        doc["current"][mode] = res
+        print(f"# recorded {mode} measurement into 'current'")
+    doc["last_run"] = {"mode": mode, **entry}
+    save_json(doc)
+
+    failures = []
+    if res["lost_acked"]:
+        failures.append(f"{res['lost_acked']} acknowledged writes lost or "
+                        f"stale after failover (gate: zero)")
+    if not identical:
+        failures.append("two same-seed runs diverged (round ticks, "
+                        "failover events or ledger) — determinism gate")
+    blip_limit = (res["steady_p99"] + cfg["heartbeat_timeout_ticks"]
+                  + BLIP_SLACK)
+    ok = res["blip_ticks"] <= blip_limit
+    print(f"# crash-round blip: {res['blip_ticks']}t (steady p99 "
+          f"{res['steady_p99']}t + timeout {cfg['heartbeat_timeout_ticks']}t "
+          f"+ slack {BLIP_SLACK}t = limit {blip_limit}t) -> "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"failover blip unbounded: {res['blip_ticks']} > "
+                        f"{blip_limit} ticks")
+    rec_limit = res["steady_p99"] + RECOVERY_SLACK
+    ok = res["post_p99"] <= rec_limit
+    print(f"# post-failover round p99: {res['post_p99']}t "
+          f"(limit {rec_limit}t) -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"post-failover p99 never recovered: "
+                        f"{res['post_p99']} > {rec_limit} ticks")
+    ok = tput_ratio >= TPUT_GATE
+    print(f"# steady ops/tick, replicated vs unreplicated (deterministic): "
+          f"{res['steady_ops_per_tick']:.2f} vs "
+          f"{plain['steady_ops_per_tick']:.2f} ({tput_ratio:.2f}x; gate "
+          f"{TPUT_GATE:.2f}x) -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"replication too expensive: {tput_ratio:.2f}x < "
+                        f"{TPUT_GATE:.2f}x unreplicated steady ops/tick")
+    if smoke and not record:
+        ref = doc.get("current", {}).get("smoke")
+        if ref and ref.get("config") == cfg:
+            for key in ("blip_ticks", "steady_p99"):
+                limit = max(ref[key], 1) * SMOKE_REGRESSION
+                if res[key] > limit:
+                    failures.append(
+                        f"{key} regressed >30% vs recorded current: "
+                        f"{res[key]} > {limit:.1f} ticks")
+            print(f"# smoke vs recorded current: blip {res['blip_ticks']}t "
+                  f"vs {ref['blip_ticks']}t, steady p99 {res['steady_p99']}t "
+                  f"vs {ref['steady_p99']}t")
+        else:
+            print("# no comparable recorded current numbers; "
+                  "smoke regression gate skipped")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

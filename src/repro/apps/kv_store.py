@@ -91,6 +91,15 @@ class _ShardState:
     index: dict = field(default_factory=dict)      # key -> KVLocation
     at_offset: dict = field(default_factory=dict)  # log offset -> (key, size)
     offsets: list = field(default_factory=list)    # sorted (log appends only)
+    # Replication: where OUR log is mirrored (replica shard -> its local
+    # fid), and the log copies WE adopted at a promotion — local fid ->
+    # (at_offset, offsets) invalidation view.  Adopted logs are read-only
+    # (new PUTs for adopted keys append to our OWN log), so each fid's
+    # offset space stays internally consistent.
+    replica_fids: dict = field(default_factory=dict)
+    adopted: dict = field(default_factory=dict)
+    adopted_records: int = 0
+    adopted_bytes: int = 0
     puts: int = 0
     dels: int = 0
     host_gets: int = 0
@@ -107,9 +116,62 @@ class ShardedKVStore:
         for st, srv in zip(self._states, self.cluster.servers):
             st.log_fid = srv.frontend.create_file("kvlog")
             srv.run_until_idle()
+        if self.cluster.replication:
+            # Mirror every record log onto its ring successors: a PUT ack
+            # releases only after the replicas hold the record, and a crash
+            # promotes a replica (``_on_promote`` rebuilds the index from
+            # the adopted log copy).
+            for s, st in enumerate(self._states):
+                st.replica_fids = self.cluster.replicate_file(
+                    s, st.log_fid, "kvlog")
+            self.cluster.on_promote = self._on_promote
 
     def shard_for_key(self, key: bytes) -> int:
-        return self.cluster.ring.shard_for(key)
+        return self.cluster.shard_for_key(key)
+
+    def _on_promote(self, dead: int, promoted: int) -> None:
+        """Adopt the dead shard's log copy on the promoted shard.
+
+        Scans the replica log (every record the dead primary ever acked is
+        in it — acks were held on replication), rebuilding the host index
+        with later records winning, and registers an invalidation view so
+        the DPU can never serve an adopted record the host is mutating.
+        DPU cache entries for adopted keys are dropped-then-warmed so a
+        stale mapping can never survive the promotion.
+
+        Limitation (documented): deletes are not logged, so a key deleted
+        on the dead primary after its last PUT resurrects here.
+        """
+        fid = self._states[dead].replica_fids.get(promoted, -1)
+        if fid < 0:
+            return
+        st = self._states[promoted]
+        srv = self.cluster.servers[promoted]
+        size = srv.fs.file_size(fid)
+        data = srv.frontend.read_sync(fid, 0, size) if size else b""
+        adopted_index: dict[bytes, KVLocation] = {}
+        at_offset: dict = {}
+        offsets: list = []
+        pos = 0
+        while pos + REC_HDR.size <= len(data):
+            klen, vlen = REC_HDR.unpack_from(data, pos)
+            total = REC_HDR.size + klen + vlen
+            if pos + total > len(data):
+                break   # torn tail record: never acked, drop it
+            key = bytes(data[pos + REC_HDR.size : pos + REC_HDR.size + klen])
+            adopted_index[key] = KVLocation(fid, pos, total)  # later wins
+            at_offset[pos] = (key, total)
+            offsets.append(pos)
+            pos += total
+        st.adopted[fid] = (at_offset, offsets)
+        st.adopted_records += len(offsets)
+        st.adopted_bytes += pos
+        table = srv.cache_table
+        for key, loc in adopted_index.items():
+            st.index[key] = loc   # key spaces are ring-disjoint: no clobber
+            if table is not None:
+                table.delete(key)     # a stale pre-failover mapping
+                table.insert(key, loc)  # warm: post-failover GETs DPU-serve
 
     # -- Table 1 functions, closed over one shard's state ---------------------------
     def _api_for(self, shard: int) -> OffloadAPI:
@@ -185,35 +247,44 @@ class ShardedKVStore:
             already points the key at a newer offset outside the range
             (an overwrite must not invalidate its own fresh mapping).
 
-            ``st.offsets`` is sorted (the log only appends), so the scan is
-            a bisect plus the overlapped window; records whose mapping is
+            ``offsets`` is sorted (logs only append), so the scan is a
+            bisect plus the overlapped window; records whose mapping is
             resolved here are tombstoned out of ``at_offset`` so no read
-            pays for them twice."""
-            if op.file_id != st.log_fid:
-                return []
+            pays for them twice.  The view is picked per fid: our own log,
+            or a log copy adopted at a replica promotion."""
+            if op.file_id == st.log_fid:
+                at_offset, offsets = st.at_offset, st.offsets
+            else:
+                view = st.adopted.get(op.file_id)
+                if view is None:
+                    return []
+                at_offset, offsets = view
             keys = []
-            j = max(bisect.bisect_right(st.offsets, op.offset) - 1, 0)
-            while j < len(st.offsets):
-                off = st.offsets[j]
+            j = max(bisect.bisect_right(offsets, op.offset) - 1, 0)
+            while j < len(offsets):
+                off = offsets[j]
                 j += 1
                 if off >= op.offset + op.size:
                     break
-                ent = st.at_offset.get(off)
+                ent = at_offset.get(off)
                 if ent is None:
                     continue  # tombstoned by an earlier invalidation
                 key, size = ent
                 if off + size <= op.offset:
                     continue  # record just before the range; no overlap
                 cur: KVLocation | None = st.index.get(key)
-                if cur is not None and not (
-                        cur.offset < op.offset + op.size
-                        and cur.offset + cur.size > op.offset):
-                    # Key lives elsewhere now: keep its fresh mapping, and
-                    # this stale record can never matter again — prune it.
-                    del st.at_offset[off]
+                if cur is not None and (
+                        cur.file_id != op.file_id
+                        or not (cur.offset < op.offset + op.size
+                                and cur.offset + cur.size > op.offset)):
+                    # Key lives elsewhere now — a newer offset, or a fresh
+                    # record in a DIFFERENT log (a post-promotion overwrite
+                    # of an adopted key): keep its fresh mapping, and this
+                    # stale record can never matter again — prune it.
+                    del at_offset[off]
                     continue
                 keys.append(key)
-                del st.at_offset[off]
+                del at_offset[off]
             return keys
 
         def response_header(msg: bytes, op: ReadOp, err: int) -> bytes:
@@ -283,13 +354,22 @@ class ShardedKVStore:
         (lookups/hits on the director's predicate path, inserts from
         cache-on-write, deletes from invalidate-on-read, cuckoo kicks), so
         an operator can see hit rate and insert pressure per shard."""
-        return [{"puts": st.puts, "dels": st.dels, "host_gets": st.host_gets,
-                 "dpu_gets": srv.offload.stats.completed,
-                 "log_bytes": st.log_off,
-                 "cache": srv.cache_table.stats.as_dict(),
-                 "cache_items": len(srv.cache_table),
-                 "latency": srv.lifecycle.summary()}
-                for st, srv in zip(self._states, self.cluster.servers)]
+        out = []
+        for st, srv in zip(self._states, self.cluster.servers):
+            ent = {"puts": st.puts, "dels": st.dels,
+                   "host_gets": st.host_gets,
+                   "dpu_gets": srv.offload.stats.completed,
+                   "log_bytes": st.log_off,
+                   "cache": srv.cache_table.stats.as_dict(),
+                   "cache_items": len(srv.cache_table),
+                   "latency": srv.lifecycle.summary()}
+            if st.adopted_records:
+                ent["adopted_records"] = st.adopted_records
+                ent["adopted_bytes"] = st.adopted_bytes
+            if srv.replicator is not None:
+                ent["replication"] = srv.replicator.summary()
+            out.append(ent)
+        return out
 
     def latency_stats(self) -> dict:
         """Cluster-wide measured tick-latency per class (see README)."""
@@ -309,18 +389,26 @@ class KVClient:
 
     def __init__(self, store: ShardedKVStore, ip: str = "10.0.0.9",
                  port: int | None = None, shard_cache: int = 1 << 16,
-                 tenant: int = 0):
+                 tenant: int = 0, retry_attempts: int = 0):
         self.store = store
         self.tenant = tenant
         self.net = ClusterClient(store.cluster, ip=ip, port=port,
-                                 tenant=tenant)
-        # Consistent-hash placement is stable, so the key->shard mapping is
-        # cacheable: repeat traffic skips the blake2b ring walk (bounded to
-        # keep pathological key churn from growing without limit).
+                                 tenant=tenant,
+                                 retry_attempts=retry_attempts)
+        # Consistent-hash placement is stable WITHIN a ring epoch, so the
+        # key->shard mapping is cacheable: repeat traffic skips the blake2b
+        # ring walk (bounded to keep pathological key churn from growing
+        # without limit).  A failover's epoch bump flushes the cache — the
+        # dead shard's keys now route to the promoted replica.
         self._shard_of: dict[bytes, int] = {}
         self._shard_cache = shard_cache
+        self._epoch_seen = store.cluster.epoch
 
     def _shard(self, key: bytes) -> int:
+        cl = self.store.cluster
+        if cl.epoch != self._epoch_seen:
+            self._epoch_seen = cl.epoch
+            self._shard_of.clear()
         shard = self._shard_of.get(key)
         if shard is None:
             shard = self.store.shard_for_key(key)

@@ -54,6 +54,9 @@ class ShardConnection:
         self._pending: list[bytes] = []
         self._rx = bytearray()
         self.arrival_order: list[int] = []   # req ids in response order
+        # Ring epoch stamped on every sent packet (-1 = untagged: standalone
+        # and unreplicated traffic skips the director's epoch fence).
+        self.epoch = -1
         server.director.ingress.push(Packet(self.flow, 0, b"", flags=FLAG_SYN))
         server.signal()
         server.director.step()
@@ -68,7 +71,8 @@ class ShardConnection:
         payload = encode_batch(self._pending)
         n = len(self._pending)
         self._pending.clear()
-        self.server.director.ingress.push(Packet(self.flow, self._seq, payload))
+        self.server.director.ingress.push(
+            Packet(self.flow, self._seq, payload, epoch=self.epoch))
         self._seq += len(payload)
         self.server.signal()   # client send: mark the target shard runnable
         return n
@@ -96,7 +100,8 @@ class ClusterClient:
     _port_lock = threading.Lock()
 
     def __init__(self, cluster: "DDSCluster", ip: str = "10.0.0.9",
-                 port: int | None = None, tenant: int = 0):
+                 port: int | None = None, tenant: int = 0,
+                 retry_attempts: int = 0):
         self.cluster = cluster
         self.tenant = tenant
         if port is None:
@@ -107,6 +112,27 @@ class ClusterClient:
                 ClusterClient._next_base_port += len(cluster.servers)
         self.conns = [ShardConnection(srv, ip, port + i, tenant)
                       for i, srv in enumerate(cluster.servers)]
+        # Failover awareness, armed only on replicated clusters: packets are
+        # epoch-tagged, issued requests keep a replay note, and a failover's
+        # epoch bump transparently re-routes everything parked on the dead
+        # shard.  Unreplicated clusters pay one attribute test per pump.
+        self._armed = cluster.supervisor is not None
+        self._epoch_seen = cluster.epoch
+        epoch = cluster.epoch if self._armed else -1
+        for conn in self.conns:
+            conn.epoch = epoch
+        # Shed retry (bounded exponential backoff honoring the server's
+        # ``retry_after`` hint): 0 = surface E_SHED to the caller directly.
+        self.retry_attempts = retry_attempts
+        self._replay_on = self._armed or retry_attempts > 0
+        # rid -> ("op", kind, gfid, offset, arg) for fid-addressed requests
+        # (MUST re-encode at replay: the promoted shard's adopted copy has a
+        # different local fid) or ("raw", shard, msg, cls) for application
+        # messages (key-addressed; the bytes stay valid on the new shard).
+        self._replay: dict[int, tuple] = {}
+        self._retries: dict[int, int] = {}        # rid -> shed retry count
+        self._redirects_seen: dict[int, int] = {}  # rid -> redirect replays
+        self._backoff: list[tuple[int, int]] = []  # (due tick, rid)
         self._next_rid = 1
         self._rid_shard: dict[int, int] = {}
         self._outstanding = 0          # issued, response not yet collected
@@ -190,6 +216,8 @@ class ClusterClient:
     def read(self, gfid: int, offset: int, nbytes: int) -> int:
         loc = self.cluster.locate(gfid)
         rid = self._rid(loc.shard)
+        if self._replay_on:
+            self._replay[rid] = ("op", "r", gfid, offset, nbytes)
         self._enqueue(loc.shard,
                       encode_app_read(rid, loc.local_fid, offset, nbytes))
         return rid
@@ -215,7 +243,10 @@ class ClusterClient:
             locs.append(locate(op[1]))
         rids = self.reserve_rids([loc.shard for loc in locs], cls)
         enqueue = self._enqueue
+        replay = self._replay if self._replay_on else None
         for rid, loc, k, op in zip(rids, locs, cls, ops):
+            if replay is not None:
+                replay[rid] = ("op", k, op[1], op[2], op[3])
             if k == "r":
                 enqueue(loc.shard,
                         encode_app_read(rid, loc.local_fid, op[2], op[3]))
@@ -232,6 +263,8 @@ class ClusterClient:
     def write(self, gfid: int, offset: int, data: bytes) -> int:
         loc = self.cluster.locate(gfid)
         rid = self._rid(loc.shard, "w")
+        if self._replay_on:
+            self._replay[rid] = ("op", "w", gfid, offset, data)
         self._enqueue(loc.shard,
                       encode_app_write(rid, loc.local_fid, offset, data))
         return rid
@@ -248,7 +281,10 @@ class ClusterClient:
                  cls: str = "r") -> int:
         """Route an application-defined message to an explicit shard."""
         rid = self._rid(shard, cls)
-        self._enqueue(shard, build_msg(rid))
+        msg = build_msg(rid)
+        if self._replay_on:
+            self._replay[rid] = ("raw", shard, msg, cls)
+        self._enqueue(shard, msg)
         return rid
 
     def issue_many(self, shards: list[int],
@@ -263,8 +299,13 @@ class ClusterClient:
         per-shard outstanding bookkeeping cannot be bypassed."""
         rids = self.reserve_rids(shards, cls)
         enqueue = self._enqueue
+        replay = self._replay if self._replay_on else None
         for i, (rid, shard) in enumerate(zip(rids, shards)):
-            enqueue(shard, build_msg(rid, i))
+            msg = build_msg(rid, i)
+            if replay is not None:
+                replay[rid] = ("raw", shard, msg,
+                               cls if isinstance(cls, str) else cls[i])
+            enqueue(shard, msg)
         return rids
 
     # -- pipelined scheduling ---------------------------------------------------------
@@ -290,9 +331,17 @@ class ClusterClient:
         return sent
 
     def pump(self) -> int:
-        """One cooperative step: flush -> step every shard -> drain responses."""
+        """One cooperative step: flush -> step every shard -> drain responses.
+
+        On replicated clusters the step also reconciles failovers (a ring
+        epoch bump re-routes and replays everything parked on the dead
+        shard) and releases shed retries whose backoff expired."""
         work = self.flush()
         work += self.cluster.pump()
+        if self._armed:
+            work += self._sync_epoch()
+        if self._backoff:
+            work += self._pump_backoff()
         return work + self.poll()
 
     def poll(self) -> int:
@@ -360,17 +409,28 @@ class ClusterClient:
             if t0 is not None:
                 wadd(now - t0)
 
-    def _check_shed(self, rids) -> int:
-        """Surface terminal SHED marks as ``(E_SHED, hint)`` responses.
+    def _check_terminal(self, rids) -> int:
+        """Reconcile terminal server-side marks for ``rids``.
 
-        A shed request never gets a wire response; without this, ``wait``
-        and ``harvest`` would spin their whole iteration budget into a
-        timeout heuristic.  The hint body is the shedding tenant's bucket
-        state (``wire.decode_shed_hint``).  Each shed is reconciled against
-        ITS OWN shard's outstanding counter exactly once — the rid->shard
-        entry is consumed here, so a rid can never be double-decremented
-        (or charged against another tenant's connection) even if callers
-        probe it again."""
+        A terminally marked request never gets a wire response; without
+        this, ``wait`` and ``harvest`` would spin their whole iteration
+        budget into a timeout heuristic.  Two mark kinds:
+
+        ``E_SHED``
+            Dropped under overload/admission — surfaced to the caller as a
+            ``(E_SHED, hint)`` response (``harvest`` may then retry it
+            under the bounded-backoff policy).
+
+        ``E_REDIRECT``
+            Refused by the epoch fence: the request was routed before a
+            failover repaired the ring.  Replayed transparently against
+            the repaired ring with the SAME request id (bounded per rid);
+            surfaced terminally only past the cap or with no replay note.
+
+        Each mark is reconciled against ITS OWN shard's outstanding counter
+        exactly once — the rid->shard entry is consumed on surfacing, so a
+        rid can never be double-decremented (or charged against another
+        tenant's connection) even if callers probe it again."""
         found = 0
         responses = self.responses
         conns = self.conns
@@ -380,17 +440,166 @@ class ClusterClient:
             if shard is None:
                 continue
             conn = conns[shard]
-            hint = conn.server.lifecycle.take_shed(conn.flow, rid)
-            if hint is not None:
-                responses[rid] = (wire.E_SHED, hint)
-                rid_shard.pop(rid, None)
-                self._issued_r.pop(rid, None)
-                self._issued_w.pop(rid, None)
-                with self._lock:
-                    self._shard_outstanding[shard] -= 1
-                    self._outstanding -= 1
-                found += 1
+            term = conn.server.lifecycle.take_terminal(conn.flow, rid)
+            if term is None:
+                continue
+            code, hint = term
+            if code == wire.E_REDIRECT:
+                seen = self._redirects_seen.get(rid, 0)
+                if rid in self._replay and seen < 8:
+                    self._redirects_seen[rid] = seen + 1
+                    self._sync_epoch()
+                    if self._resubmit(rid):
+                        found += 1
+                        continue
+                    continue  # _resubmit surfaced it terminally
+            responses[rid] = (code, hint)
+            rid_shard.pop(rid, None)
+            self._issued_r.pop(rid, None)
+            self._issued_w.pop(rid, None)
+            with self._lock:
+                self._shard_outstanding[shard] -= 1
+                self._outstanding -= 1
+            found += 1
         return found
+
+    # -- failover reconciliation -------------------------------------------------------
+    def _sync_epoch(self) -> int:
+        """Adopt the cluster's ring epoch after a failover.
+
+        Updates every connection's outgoing epoch tag and re-routes each
+        unanswered request parked on a now-dead shard — the dead shard can
+        never answer, so without this those rids would hang forever.
+        Returns the number of requests moved (work, for pump loops)."""
+        cur = self.cluster.epoch
+        if cur == self._epoch_seen:
+            return 0
+        self._epoch_seen = cur
+        for conn in self.conns:
+            conn.epoch = cur
+        dead = self.cluster._dead
+        if not dead:
+            return 0
+        moved = 0
+        responses = self.responses
+        for rid, shard in list(self._rid_shard.items()):
+            if shard not in dead or rid in responses:
+                continue
+            if self._resubmit(rid):
+                moved += 1
+        return moved
+
+    def _replay_msg(self, rid: int, entry: tuple) -> tuple[int, bytes]:
+        """Re-materialize a request against the CURRENT ring: fid-addressed
+        ops re-encode (the promoted shard's adopted copy has a different
+        local fid); raw application messages re-route by repaired shard."""
+        if entry[0] == "op":
+            _, kind, gfid, offset, arg = entry
+            loc = self.cluster.locate(gfid)
+            if kind == "r":
+                return loc.shard, encode_app_read(rid, loc.local_fid,
+                                                  offset, arg)
+            return loc.shard, encode_app_write(rid, loc.local_fid,
+                                               offset, arg)
+        _, shard, msg, _cls = entry
+        return self.cluster.route_of(shard), msg
+
+    def _resubmit(self, rid: int) -> bool:
+        """Move a still-booked rid to its repaired shard and re-enqueue it.
+
+        Counters stay booked (the request never surfaced); only the
+        per-shard split moves.  A rid with no replay note — or whose
+        repaired route is itself dead (unrecoverable group) — is surfaced
+        terminally as ``(E_REDIRECT, current epoch)`` instead, so callers
+        see a retryable error rather than a hang."""
+        old = self._rid_shard.get(rid)
+        if old is None:
+            return False
+        entry = self._replay.get(rid)
+        shard = None
+        if entry is not None:
+            shard, msg = self._replay_msg(rid, entry)
+        if shard is None or shard in self.cluster._dead:
+            self.responses[rid] = (
+                wire.E_REDIRECT, wire.encode_redirect_hint(self.cluster.epoch))
+            self._rid_shard.pop(rid, None)
+            self._issued_r.pop(rid, None)
+            self._issued_w.pop(rid, None)
+            with self._lock:
+                self._shard_outstanding[old] -= 1
+                self._outstanding -= 1
+            return False
+        if shard != old:
+            with self._lock:
+                self._shard_outstanding[old] -= 1
+                self._shard_outstanding[shard] += 1
+            self._rid_shard[rid] = shard
+        self._enqueue(shard, msg)
+        return True
+
+    # -- shed retry with bounded exponential backoff ------------------------------------
+    def _maybe_retry_shed(self, got: dict, pending: set) -> None:
+        """Pull retryable E_SHED results back into ``pending``.
+
+        Honors the server's ``retry_after`` hint scaled by an exponential
+        per-attempt factor; after ``retry_attempts`` tries the E_SHED
+        surfaces to the caller as the terminal answer."""
+        if not self.retry_attempts:
+            return
+        for rid in list(got):
+            code, hint = got[rid]
+            if code != wire.E_SHED or rid not in self._replay:
+                continue
+            attempt = self._retries.get(rid, 0)
+            if attempt >= self.retry_attempts:
+                continue   # cap reached: surface the terminal error
+            del got[rid]
+            pending.add(rid)
+            self._retries[rid] = attempt + 1
+            _, retry_after = wire.decode_shed_hint(hint)
+            self._backoff.append(
+                (self.cluster.clock.now + max(1, retry_after) * (1 << attempt),
+                 rid))
+
+    def _pump_backoff(self) -> int:
+        """Re-issue shed retries whose backoff deadline passed."""
+        now = self.cluster.clock.now
+        due = [rid for t, rid in self._backoff if t <= now]
+        if not due:
+            return 0
+        self._backoff = [(t, rid) for t, rid in self._backoff if t > now]
+        n = 0
+        for rid in due:
+            if self._rebook(rid):
+                n += 1
+        return n
+
+    def _rebook(self, rid: int) -> bool:
+        """Re-book a fully surfaced rid (counters were released when the
+        E_SHED surfaced) and re-issue it along the repaired route."""
+        entry = self._replay.get(rid)
+        if entry is None:
+            return False
+        shard, msg = self._replay_msg(rid, entry)
+        if shard in self.cluster._dead:
+            return False
+        cls = entry[1] if entry[0] == "op" else entry[3]
+        with self._lock:
+            self._outstanding += 1
+            self._shard_outstanding[shard] += 1
+        self._rid_shard[rid] = shard
+        # Re-stamp the issue tick: the latency histogram records this
+        # attempt's issue->drain, not time spent parked in backoff.
+        issued = self._issued_r if cls == "r" else self._issued_w
+        issued[rid] = self.cluster.clock.now
+        self._enqueue(shard, msg)
+        return True
+
+    def _finalize(self, rid: int) -> None:
+        """Drop replay/retry bookkeeping once a result reaches the caller."""
+        self._replay.pop(rid, None)
+        self._retries.pop(rid, None)
+        self._redirects_seen.pop(rid, None)
 
     def outstanding(self) -> int:
         """Issued-but-unanswered requests — an O(1) counter, not a dict scan."""
@@ -419,11 +628,18 @@ class ClusterClient:
             if self.outstanding() == 0:
                 return
             self._drain_busy_devices()
-            # Reconcile terminal sheds: an admission-shed request will never
-            # produce wire work, so without this the outstanding counters
-            # stay elevated forever and idle convergence always burns the
-            # full 8-round escape hatch.
-            if self._check_shed(list(self._rid_shard)):
+            # Reconcile terminal marks: a shed or epoch-refused request
+            # will never produce wire work, so without this the
+            # outstanding counters stay elevated forever and idle
+            # convergence always burns the full 8-round escape hatch.
+            if self._check_terminal(list(self._rid_shard)):
+                continue
+            if self._armed and any(s in self.cluster._dead
+                                   for s in set(self._rid_shard.values())):
+                # Requests parked on a crashed shard are not unanswerable —
+                # the supervisor will promote a replica within its timeout;
+                # keep pumping so detection and replay can run.
+                idle = 0
                 continue
             idle += 1
             if idle >= 8:
@@ -435,10 +651,11 @@ class ClusterClient:
         for _ in range(max_iters):
             if rid in self.responses:
                 self._rid_shard.pop(rid, None)
+                self._finalize(rid)
                 return self.responses.pop(rid)
             if self.pump() == 0:
                 self._drain_busy_devices()
-                self._check_shed((rid,))   # terminal: answered as E_SHED
+                self._check_terminal((rid,))   # answered terminally
         raise TimeoutError(f"no response for request {rid}")
 
     def harvest(self, handles=None, block: bool = True,
@@ -463,6 +680,7 @@ class ClusterClient:
             rid_shard = self._rid_shard
             for rid in out:
                 rid_shard.pop(rid, None)
+                self._finalize(rid)
             self.responses.clear()
             return out
         got: dict[int, tuple[int, bytes]] = {}
@@ -470,16 +688,22 @@ class ClusterClient:
         pending -= self._harvest(pending, got)
         if not block:
             self.poll()
-            self._check_shed(pending)
+            self._check_terminal(pending)
             pending -= self._harvest(pending, got)
+            for rid in got:
+                self._finalize(rid)
             return got
         for _ in range(max_iters):
             if not pending:
+                for rid in got:
+                    self._finalize(rid)
                 return {rid: got[rid] for rid in handles}  # caller's order
             if self.pump() == 0:
                 self._drain_busy_devices()
-                self._check_shed(pending)
+                self._check_terminal(pending)
             pending -= self._harvest(pending, got)
+            if self.retry_attempts:
+                self._maybe_retry_shed(got, pending)
         raise TimeoutError(f"no response for requests {sorted(pending)[:8]}...")
 
     def wait_many(self, rids: list[int],

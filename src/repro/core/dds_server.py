@@ -210,8 +210,23 @@ class ServerConfig:
     cache_items: int = 1 << 16
     offload_enabled: bool = True             # False => all requests to host
     qos: QoSProfile | str = field(default_factory=QoSProfile)
+    # Crash consistency: segments reserved for the SegmentFS redo journal
+    # (0 disables journaling; silently disabled on devices too small to
+    # hold metadata + journal + one data segment).
+    journal_segments: int = 2
+    # Replication factor for a DDSCluster built from this config: each
+    # shard's acked writes are forwarded to this many ring-successor
+    # replicas BEFORE the client sees the ack.  0 = unreplicated.
+    replication: int = 0
+    # Failover detection: ticks of heartbeat silence before the cluster
+    # supervisor declares a shard dead and promotes a replica.
+    heartbeat_timeout_ticks: int = 16
 
     def __post_init__(self):
+        if self.journal_segments < 0 or self.replication < 0:
+            raise ValueError("journal_segments/replication must be >= 0")
+        if self.heartbeat_timeout_ticks < 1:
+            raise ValueError("heartbeat_timeout_ticks must be >= 1")
         if isinstance(self.qos, str):
             self.qos = QoSProfile.preset(self.qos)
         elif isinstance(self.qos, dict):
@@ -256,7 +271,11 @@ class DDSStorageServer:
                                   prio_interleave=q.prio_interleave)
         self.device.doorbell = self.signal
         self.device.clock = self.clock
-        self.fs = SegmentFS(self.device, cfg.segment_size)
+        js = cfg.journal_segments
+        if cfg.device_capacity // cfg.segment_size < 2 + js:
+            js = 0   # device too small for a journal: run unjournaled
+        self.fs = SegmentFS(self.device, cfg.segment_size,
+                            journal_segments=js)
         self.dma = DMAEngine()
         self.cache_table = CacheTable(cfg.cache_items)
         self.api = api or OffloadAPI(default_off_pred, default_off_func,
@@ -312,6 +331,10 @@ class DDSStorageServer:
         self.frontend = DDSFrontEnd(self.file_service, doorbell=self.signal)
         self.host_app = _HostApp(self)
         self.host_cpu_busy_s = 0.0   # modeled host CPU seconds consumed
+        # Primary-backup replication (installed by DDSCluster when
+        # ``config.replication`` > 0): forwards acked writes to replica
+        # shards and gates client write acks on replica acks.
+        self.replicator = None
 
     # -- work-signaled scheduling hooks --------------------------------------------
     def set_doorbell(self, doorbell) -> None:
@@ -330,6 +353,8 @@ class DDSStorageServer:
         self.file_service.adopt_clock(clock)
         if self.admission is not None:
             self.admission.clock = clock   # buckets refill on the shared clock
+        if self.replicator is not None:
+            self.replicator.clock = clock
 
     def _on_shed(self, frontend_rid: int) -> None:
         """A host-path request was shed (bounded E_NOSPC path gave up).
@@ -371,6 +396,20 @@ class DDSStorageServer:
             client_flow.tenant, self.admission.retry_after(client_flow.tenant))
         self.lifecycle.mark_shed(client_flow, req_id_of(msg), hint)
 
+    def _on_stale_epoch(self, client_flow: FiveTuple, payload,
+                        current_epoch: int) -> None:
+        """A packet tagged with a pre-failover ring epoch hit the director.
+
+        Its requests are refused wholesale with a retryable terminal
+        redirect (the shed plumbing's sibling): each request id is marked
+        ``E_REDIRECT`` in the lifecycle tracker with the CURRENT epoch as
+        the hint, so the client re-routes on the repaired ring and
+        resubmits the same ids."""
+        req_id_of = self.api.req_id_of or default_req_id_of
+        hint = wire.encode_redirect_hint(current_epoch)
+        for m in decode_batch(payload):
+            self.lifecycle.mark_redirect(client_flow, req_id_of(m), hint)
+
     def signal(self) -> None:
         """Mark this server runnable.  Called by every work producer: client
         sends into the director's ingress, ring inserts, block-device
@@ -396,7 +435,8 @@ class DDSStorageServer:
                 or self.director.busy()
                 or self.host_app.busy()
                 or self.file_service.busy()
-                or self.frontend.any_outstanding())
+                or self.frontend.any_outstanding()
+                or (self.replicator is not None and self.replicator.busy()))
 
     # -- §6.1 hooks: translate file-service ops into user Cache/Invalidate ----------
     # (called with plain header fields: the file service's data plane keeps
@@ -424,6 +464,8 @@ class DDSStorageServer:
             self.clock.tick()
         work = self.director.step_n(64)   # whole ingress burst, one lock round
         work += self.offload.step()       # polls device + completes internally
+        if self.replicator is not None:
+            work += self.replicator.step()   # forwarded writes + replica acks
         host_work = self.host_app.step(self._host_drain_slice)
         # The host path (file service rings + completion polling) only runs
         # when it can have work; the offloaded fast path never pays for it.
@@ -440,6 +482,12 @@ class DDSStorageServer:
         out = {"classes": self.lifecycle.summary()}
         if self.admission is not None:
             out["admission"] = self.admission.summary()
+        if self.replicator is not None:
+            out["replication"] = self.replicator.summary()
+        if self.fs.journal_replayed_records:
+            out["journal_replay"] = {
+                "records": self.fs.journal_replayed_records,
+                "bytes": self.fs.journal_replayed_bytes}
         if dev.completion_ticks.n:
             out["device"] = dev.completion_ticks.summary()
         if dev.prio_completion_ticks.n:
@@ -488,6 +536,10 @@ class _HostApp:
         self.server = server
         self._inflight: dict[int, tuple] = {}  # rid -> (host_flow, app req)
         self._burst: list[tuple] = []          # (host_flow, msg) drained batch
+        # Write acks gated on replication: locally durable, awaiting the
+        # replica's ack (rid -> (host_flow, req_id, error, body, t0)).  The
+        # client NEVER sees an ack for bytes a shard crash could lose.
+        self._held_acks: dict[int, tuple] = {}
         # Rids shed during frontend.submit_many's re-entrant file-service
         # step, BEFORE their in-flight meta was recorded (see
         # DDSStorageServer._on_shed); reconciled right after booking.
@@ -496,7 +548,7 @@ class _HostApp:
 
     def busy(self) -> bool:
         """True while host requests are in flight (pump must keep stepping)."""
-        return bool(self._inflight)
+        return bool(self._inflight) or bool(self._held_acks)
 
     def step(self, max_pkts: int | None = None) -> int:
         """Drain a bounded slice of the host wire, then execute the WHOLE
@@ -594,6 +646,15 @@ class _HostApp:
             inflight = self._inflight
             for rid, meta in zip(rids, metas):
                 inflight[rid] = meta
+            repl = srv.replicator
+            if repl is not None:
+                # Primary-backup forward at the one point where the final
+                # on-disk bytes are known (KV handlers rewrite payloads into
+                # log records): the replica applies the identical bytes at
+                # the identical file offset through its own host path.
+                for rid, sub in zip(rids, submits):
+                    if sub[0] == "w":
+                        repl.forward(rid, sub[1], sub[2], sub[3])
             orphans = self._orphan_sheds
             if orphans:
                 # A shed fired inside submit_many (re-entrant ring-full
@@ -621,12 +682,22 @@ class _HostApp:
         r_add = hist["host_read"].add
         w_add = hist["write"].add
         tenant_add = srv.lifecycle.add_tenant
+        repl = srv.replicator
         for gid in list(srv.frontend._groups):
             for c in srv.frontend.poll_wait(gid, 0.0):
                 info = inflight.pop(c.request_id, None)
                 if info is None:
                     continue
                 host_flow, typ, req_id, nbytes, ack_body, t0 = info
+                if (typ != APP_READ and repl is not None
+                        and repl.holds(c.request_id)):
+                    # Locally durable but the replica has not acked: HOLD
+                    # the client ack (released below once the replica — or
+                    # the supervisor dropping a dead replica — signs off).
+                    body = ack_body if c.error == wire.E_OK else b""
+                    self._held_acks[c.request_id] = (host_flow, req_id,
+                                                     c.error, body, t0)
+                    continue
                 delta = now - t0
                 if typ == APP_READ:
                     body = c.data if c.error == wire.E_OK else b""
@@ -640,6 +711,17 @@ class _HostApp:
                                delta)
                 per_flow.setdefault(host_flow, []).append(
                     APP_RESP_HDR.pack(req_id, c.error, len(body)) + body)
+                n += 1
+        held = self._held_acks
+        if held and repl is not None:
+            for rid in [r for r in held if not repl.holds(r)]:
+                host_flow, req_id, err, body, t0 = held.pop(rid)
+                delta = now - t0
+                w_add(delta)
+                if host_flow.tenant:
+                    tenant_add(host_flow.tenant, "write", delta)
+                per_flow.setdefault(host_flow, []).append(
+                    APP_RESP_HDR.pack(req_id, err, len(body)) + body)
                 n += 1
         if n:
             srv.host_cpu_busy_s += self.HOST_NET_US * 1e-6 * n  # response path
@@ -681,12 +763,20 @@ class DDSClient:
         self._issued_r: dict[int, int] = {}
         self._issued_w: dict[int, int] = {}
         self.latency = ClientLatency()
+        # Ring epoch this client believes in, stamped on every packet.  -1
+        # (the default) means epoch-unaware: the director accepts untagged
+        # packets unconditionally.  Epoch-aware clients (>= 0) additionally
+        # keep each outstanding request's encoded message so an E_REDIRECT
+        # can be answered by resubmitting the SAME request id.
+        self.epoch = -1
+        self._replay: dict[int, bytes] = {}
         server.director.ingress.push(Packet(self.flow, 0, b"", flags=FLAG_SYN))
         server.signal()
         server.director.step()
 
     def _send(self, payload: bytes) -> None:
-        self.server.director.ingress.push(Packet(self.flow, self._seq, payload))
+        self.server.director.ingress.push(
+            Packet(self.flow, self._seq, payload, epoch=self.epoch))
         self._seq += len(payload)
         self.server.signal()   # client sends are a scheduler wakeup source
 
@@ -695,7 +785,10 @@ class DDSClient:
             rid = self._next_req
             self._next_req += 1
         self._issued_r[rid] = self.server.clock.now
-        self._send(encode_batch([encode_app_read(rid, file_id, offset, nbytes)]))
+        msg = encode_app_read(rid, file_id, offset, nbytes)
+        if self.epoch >= 0:
+            self._replay[rid] = msg
+        self._send(encode_batch([msg]))
         return rid
 
     def write(self, file_id: int, offset: int, data: bytes) -> int:
@@ -703,7 +796,10 @@ class DDSClient:
             rid = self._next_req
             self._next_req += 1
         self._issued_w[rid] = self.server.clock.now
-        self._send(encode_batch([encode_app_write(rid, file_id, offset, data)]))
+        msg = encode_app_write(rid, file_id, offset, data)
+        if self.epoch >= 0:
+            self._replay[rid] = msg
+        self._send(encode_batch([msg]))
         return rid
 
     # -- unified burst surface --------------------------------------------------------
@@ -743,11 +839,12 @@ class DDSClient:
                 out[rid] = responses.pop(rid)
         if not block:
             for rid in list(pending):
-                hint = lt.take_shed(self.flow, rid)
-                if hint is not None:
+                term = lt.take_terminal(self.flow, rid)
+                if term is not None:
                     self._issued_r.pop(rid, None)
                     self._issued_w.pop(rid, None)
-                    out[rid] = (wire.E_SHED, hint)
+                    self._replay.pop(rid, None)
+                    out[rid] = term
                     pending.remove(rid)
             return out
         for rid in pending:
@@ -773,6 +870,9 @@ class DDSClient:
                 else:
                     encoded.append(encode_app_write(rid, m[1], m[2], m[3]))
                     self._issued_w[rid] = now
+        if self.epoch >= 0:
+            for rid, msg in zip(rids, encoded):
+                self._replay[rid] = msg
         self._send(encode_batch(encoded))
         return rids
 
@@ -827,15 +927,26 @@ class DDSClient:
         for _ in range(max_iters):
             self.collect()
             if rid in self.responses:
+                self._replay.pop(rid, None)
                 return self.responses.pop(rid)
-            hint = lt.take_shed(self.flow, rid)
-            if hint is not None:
+            term = lt.take_terminal(self.flow, rid)
+            if term is not None:
+                code, hint = term
+                if code == wire.E_REDIRECT and rid in self._replay:
+                    # Retryable: adopt the repaired ring's epoch and
+                    # resubmit the SAME request id (the old owner never
+                    # answered it, so the id cannot alias).
+                    self.epoch = max(self.epoch,
+                                     wire.decode_redirect_hint(hint))
+                    self._send(encode_batch([self._replay[rid]]))
+                    continue
                 # Terminal: the request was shed under overload or by
                 # admission — no response will EVER arrive.  Surface it
                 # (with the retry-after hint as the body) instead of
                 # spinning the full iteration budget into a timeout.
                 self._issued_r.pop(rid, None)
                 self._issued_w.pop(rid, None)
-                return (wire.E_SHED, hint)
+                self._replay.pop(rid, None)
+                return (code, hint)
             self.server.pump()
         raise TimeoutError(f"no response for request {rid}")

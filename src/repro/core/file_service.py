@@ -52,6 +52,7 @@ are deterministic; ``start()`` wraps it in a thread for the live system.
 from __future__ import annotations
 
 import json
+import struct
 import threading
 from collections import deque
 from dataclasses import dataclass, field
@@ -66,6 +67,20 @@ from repro.core.ring import (FRAME_HDR, DMAEngine, ProgressiveRing, Region,
 from repro.storage.blockdev import STATUS_PENDING, BlockDevice
 
 META_SEGMENT = 0
+
+# ---- redo journal (crash-consistent writes) ---------------------------------
+# Record header: magic(u32) commit(u32) seq(u64) file_id(u32) offset(u64)
+# nbytes(u32) new_size(u64) nsegs(u32), then nsegs * u32 segment ids (the
+# file mapping AT SUBMIT TIME — replay needs no metadata sync), then the
+# run's payload bytes, then an 8-byte zero terminator that clobbers any
+# stale record header behind this one.  ``commit`` is written 0 with the
+# record and flipped to 1 by a separate single-slot device write — the
+# ordered metadata flip that makes the whole run atomic under power loss.
+JOURNAL_MAGIC = 0x4A444453          # "SDDJ"
+_JREC = struct.Struct("<IIQIQIQI")
+_JCOMMIT_OFF = 4                    # byte offset of ``commit`` in the header
+_JCOMMIT_ONE = (1).to_bytes(4, "little")
+_JTERM = bytes(8)
 
 
 class FSError(Exception):
@@ -93,12 +108,13 @@ class DirMeta:
 class SegmentFS:
     """Segment-granular file system over a :class:`BlockDevice`."""
 
-    def __init__(self, device: BlockDevice, segment_size: int = 1 << 20):
+    def __init__(self, device: BlockDevice, segment_size: int = 1 << 20,
+                 journal_segments: int = 0):
         assert segment_size % device.block_size == 0
         self.device = device
         self.segment_size = segment_size
         self.num_segments = device.capacity // segment_size
-        if self.num_segments < 2:
+        if self.num_segments < 2 + journal_segments:
             raise ValueError("device too small for SegmentFS")
         self.bitmap = np.zeros(self.num_segments, dtype=bool)
         self.bitmap[META_SEGMENT] = True  # reserved for metadata
@@ -107,6 +123,22 @@ class SegmentFS:
         self._next_file_id = 1
         self._next_dir_id = 1
         self._lock = threading.Lock()
+        # Redo journal: ``journal_segments`` segments after META_SEGMENT
+        # hold a circular log of committed write runs.  0 disables
+        # journaling (writes land in place directly, the pre-PR7 behavior).
+        self.journal_segments = journal_segments
+        self._journal_start = (META_SEGMENT + 1) * segment_size
+        self._journal_len = journal_segments * segment_size
+        self._journal_head = 0        # next append offset within the region
+        self._journal_tail = 0        # oldest byte still awaiting in-place
+        self._journal_seq = 1
+        # cookie -> (record_start, record_end): reclaimed when the run's
+        # in-place writev completes (``journal_reaped``).
+        self._journal_pending: dict[int, tuple[int, int]] = {}
+        self.journal_replayed_records = 0
+        self.journal_replayed_bytes = 0
+        for s in range(journal_segments):
+            self.bitmap[META_SEGMENT + 1 + s] = True
 
     # -- metadata persistence (segment 0) ----------------------------------------
     def sync_metadata(self) -> None:
@@ -125,8 +157,9 @@ class SegmentFS:
         self.device.raw_write(META_SEGMENT * self.segment_size, hdr + blob)
 
     @classmethod
-    def mount(cls, device: BlockDevice, segment_size: int = 1 << 20) -> "SegmentFS":
-        fs = cls(device, segment_size)
+    def mount(cls, device: BlockDevice, segment_size: int = 1 << 20,
+              journal_segments: int = 0) -> "SegmentFS":
+        fs = cls(device, segment_size, journal_segments)
         raw = device.raw_read(META_SEGMENT * segment_size, 8)
         n = int.from_bytes(raw, "little")
         if n == 0:
@@ -134,6 +167,8 @@ class SegmentFS:
         blob = device.raw_read(META_SEGMENT * segment_size + 8, n)
         doc = json.loads(blob.decode())
         fs.bitmap = np.frombuffer(bytes.fromhex(doc["bitmap"]), dtype=bool).copy()
+        for s in range(journal_segments):   # journal stays reserved regardless
+            fs.bitmap[META_SEGMENT + 1 + s] = True
         fs.files = {int(k): FileMeta(int(k), v[0], v[1], v[2], list(v[3]))
                     for k, v in doc["files"].items()}
         fs.dirs = {int(k): DirMeta(int(k), v[0], list(v[1]))
@@ -358,6 +393,16 @@ class SegmentFS:
         if not runs:
             self.device.push_completion(cookie)
             return wire.E_OK
+        if self.journal_segments:
+            # Crash-consistent apply: journal the WHOLE run (record with
+            # commit=0), flip the commit word with one ordered single-slot
+            # write, THEN land the bytes in place.  The device completes
+            # its normal queue strictly in order, so a crash at any point
+            # leaves the file either fully pre-run (commit never landed —
+            # recovery ignores the record and the in-place writev never
+            # executed) or fully post-run (committed — recovery replays it
+            # idempotently over whatever prefix landed in place).
+            self._journal_append(file_id, offset, total, bufs, cookie)
         bi = 0       # current buffer index / position for the run walk
         bpos = 0
         last = len(runs) - 1
@@ -389,6 +434,120 @@ class SegmentFS:
                 self.device.push_completion(cookie, op.status)
                 return wire.E_OK
         return wire.E_OK
+
+    # -- redo journal ---------------------------------------------------------------
+    def _journal_append(self, file_id: int, offset: int, total: int,
+                        bufs: list, cookie: int) -> None:
+        f = self.files[file_id]
+        seg_blob = np.asarray(f.segments, dtype=np.uint32).tobytes()
+        rec_len = _JREC.size + len(seg_blob) + total + len(_JTERM)
+        if rec_len > self._journal_len:
+            raise FSError(wire.E_NOSPC, "write run exceeds journal capacity")
+        head, tail = self._journal_head, self._journal_tail
+        wrapped = head + rec_len > self._journal_len
+        pos = 0 if wrapped else head
+        if self._journal_pending:
+            # Unapplied region is [tail, head) (circularly).  The append
+            # must not clobber it: if it would, force every outstanding
+            # in-place write to media first — after a drain the whole
+            # region is reclaimable.
+            if tail > head:          # occupied wraps around the region end
+                conflict = wrapped or head + rec_len > tail
+            else:                    # occupied is the linear [tail, head)
+                conflict = wrapped and rec_len > tail
+            if conflict:
+                self.device.drain()
+                self._journal_pending.clear()
+        if not self._journal_pending:
+            self._journal_tail = pos
+        hdr = _JREC.pack(JOURNAL_MAGIC, 0, self._journal_seq, file_id,
+                         offset, total, f.size, len(f.segments))
+        lba = self._journal_start + pos
+        self.device.submit_writev(lba, [hdr + seg_blob, *bufs, _JTERM])
+        self.device.submit_write(lba + _JCOMMIT_OFF, _JCOMMIT_ONE)
+        self._journal_seq += 1
+        self._journal_head = pos + rec_len
+        self._journal_pending[cookie] = (pos, pos + rec_len)
+
+    def journal_reaped(self, cookie: int) -> None:
+        """The run under ``cookie`` finished its in-place writev: its
+        journal record is reclaimable (the runner calls this from its bulk
+        completion reap)."""
+        pend = self._journal_pending
+        if not pend or pend.pop(cookie, None) is None:
+            return
+        self._journal_tail = (next(iter(pend.values()))[0] if pend
+                              else self._journal_head)
+
+    def recover_journal(self) -> dict:
+        """Replay committed journal records after a crash (idempotent).
+
+        Scans from the region start: records of the latest pass sit there
+        back to back with strictly increasing ``seq``; the scan stops at
+        the first bad magic (the zero terminator), non-increasing seq
+        (stale tail of an earlier wrap) or uncommitted record (its in-place
+        writev — and everything after it — never executed, and the record
+        itself may be torn).  Each committed record carries its own file
+        mapping + size, so replay needs no trust in the possibly-stale
+        metadata segment.  Returns ``{"records": n, "bytes": b}``.
+        """
+        out = {"records": 0, "bytes": 0}
+        if not self.journal_segments:
+            return out
+        dev = self.device
+        base = self._journal_start
+        pos = 0
+        prev_seq = 0
+        while pos + _JREC.size <= self._journal_len:
+            (magic, commit, seq, fid, off, nbytes, new_size,
+             nsegs) = _JREC.unpack(dev.raw_read(base + pos, _JREC.size))
+            rec_len = _JREC.size + nsegs * 4 + nbytes + len(_JTERM)
+            if (magic != JOURNAL_MAGIC or seq <= prev_seq or not commit
+                    or pos + rec_len > self._journal_len):
+                break
+            segs = np.frombuffer(
+                dev.raw_read(base + pos + _JREC.size, nsegs * 4),
+                dtype=np.uint32).tolist()
+            payload = dev.raw_read(base + pos + _JREC.size + nsegs * 4, nbytes)
+            self._replay_record(fid, off, nbytes, new_size, segs, payload)
+            out["records"] += 1
+            out["bytes"] += nbytes
+            prev_seq = seq
+            pos += rec_len
+        self._journal_head = pos
+        self._journal_tail = pos
+        self._journal_seq = prev_seq + 1
+        self._journal_pending.clear()
+        if out["records"]:
+            self.sync_metadata()
+        self.journal_replayed_records += out["records"]
+        self.journal_replayed_bytes += out["bytes"]
+        return out
+
+    def _replay_record(self, fid: int, off: int, nbytes: int, new_size: int,
+                       segs: list, payload: bytes) -> None:
+        f = self.files.get(fid)
+        if f is None:
+            # Created after the last metadata sync: resurrect it from the
+            # record (name is lost — only the id routes data-plane ops).
+            f = FileMeta(fid, f"recovered-{fid}", 0)
+            self.files[fid] = f
+            self.dirs[0].files.append(fid)
+            self._next_file_id = max(self._next_file_id, fid + 1)
+        if len(segs) > len(f.segments):
+            f.segments = list(segs)
+        for s in f.segments:
+            self.bitmap[s] = True
+        if new_size > f.size:
+            f.size = new_size
+        seg_sz = self.segment_size
+        pos = 0
+        while pos < nbytes:    # address through the record's OWN mapping
+            seg_off = (off + pos) % seg_sz
+            n = min(nbytes - pos, seg_sz - seg_off)
+            phys = segs[(off + pos) // seg_sz] * seg_sz + seg_off
+            self.device.raw_write(phys, payload[pos : pos + n])
+            pos += n
 
 
 # ---------------------------------------------------------------------------
@@ -815,8 +974,11 @@ class FileServiceRunner:
             return 0
         inflight = self._inflight
         finish = self._finish
+        journaled = self.fs.journal_segments
         for cookie, status in done:
             g, slots = inflight.pop(cookie)
+            if journaled:
+                self.fs.journal_reaped(cookie)   # run landed in place
             err = (wire.E_OK if status == 0 else
                    wire.E_INVAL if status == wire.E_INVAL else wire.E_IO)
             for slot in slots:

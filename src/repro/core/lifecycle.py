@@ -46,6 +46,8 @@ because the stamps ride the hot path; a component whose ``lifecycle`` is
 
 from __future__ import annotations
 
+from . import wire
+
 
 class TickClock:
     """Monotonic logical clock; one tick per scheduling step."""
@@ -141,8 +143,8 @@ class LifecycleTracker:
     here (there is no other structure left to carry them).
     """
 
-    __slots__ = ("clock", "read_types", "_shed", "hist", "sheds",
-                 "tenant_hist", "tenant_sheds")
+    __slots__ = ("clock", "read_types", "_terminal", "hist", "sheds",
+                 "redirects", "tenant_hist", "tenant_sheds")
 
     def __init__(self, clock: TickClock, read_types=None):
         self.clock = clock
@@ -151,13 +153,19 @@ class LifecycleTracker:
         # stamp rides the host-path data plane).  The server passes the
         # §8.1 default; the KV app passes {KV_GET}.
         self.read_types = frozenset(read_types or ())
-        self._shed: dict[tuple, bytes] = {}     # (flow, rid) -> hint bytes
+        # (flow, rid) -> (status code, hint bytes).  Terminal marks: no
+        # response will ever arrive for these; the client synthesizes the
+        # status.  E_SHED = dropped under overload/admission (hint = shed
+        # hint); E_REDIRECT = stale ring epoch after a failover (hint =
+        # redirect hint; retryable with the same request id).
+        self._terminal: dict[tuple, tuple[int, bytes]] = {}
         self.hist: dict[str, TickHistogram] = {
             DPU_READ: TickHistogram(),
             HOST_READ: TickHistogram(),
             WRITE: TickHistogram(),
         }
         self.sheds = 0
+        self.redirects = 0
         # Per-tenant split, recorded ONLY for nonzero tenants (tenant 0 is
         # the untenanted default and lives purely in the aggregate above),
         # so single-tenant deployments pay one int test per completion.
@@ -177,29 +185,50 @@ class LifecycleTracker:
     def add_tenant(self, tenant: int, cls: str, delta: int) -> None:
         self.tenant_hist_for(tenant, cls).add(delta)
 
-    # -- terminal shed status ----------------------------------------------------
+    # -- terminal request status -------------------------------------------------
     def mark_shed(self, flow, rid: int, hint: bytes = b"") -> None:
         """The request was SHED (bounded E_NOSPC overload path gave up, or
         token-bucket admission refused it): no response will ever arrive.
         Clients poll ``take_shed`` instead of timing out.  ``hint`` is the
         retry-after body the client's E_SHED response will carry."""
-        self._shed[(flow, rid)] = hint
+        self._terminal[(flow, rid)] = (wire.E_SHED, hint)
         self.sheds += 1
         t = getattr(flow, "tenant", 0)
         if t:
             self.tenant_sheds[t] = self.tenant_sheds.get(t, 0) + 1
 
+    def mark_redirect(self, flow, rid: int, hint: bytes = b"") -> None:
+        """The request's routing is stale — it carried a pre-failover ring
+        epoch, or its target shard died before answering.  ``hint`` is the
+        redirect body (current ring epoch); the client retries the same
+        request id against the repaired ring."""
+        self._terminal[(flow, rid)] = (wire.E_REDIRECT, hint)
+        self.redirects += 1
+
     def take_shed(self, flow, rid: int) -> bytes | None:
         """The shed hint for ``(flow, rid)``, or None if it was not shed.
 
         Distinguish with ``is not None`` — an empty hint is still a shed.
+        Leaves non-shed terminal marks (redirects) in place for
+        ``take_terminal`` consumers.
         """
-        return self._shed.pop((flow, rid), None)
+        key = (flow, rid)
+        entry = self._terminal.get(key)
+        if entry is None or entry[0] != wire.E_SHED:
+            return None
+        del self._terminal[key]
+        return entry[1]
+
+    def take_terminal(self, flow, rid: int) -> tuple[int, bytes] | None:
+        """Pop any terminal ``(status, hint)`` for ``(flow, rid)``."""
+        return self._terminal.pop((flow, rid), None)
 
     def summary(self) -> dict:
         out = {cls: h.summary() for cls, h in self.hist.items() if h.n}
         if self.sheds:
             out["sheds"] = self.sheds
+        if self.redirects:
+            out["redirects"] = self.redirects
         tenants = self._tenant_summary()
         if tenants:
             out["tenants"] = tenants

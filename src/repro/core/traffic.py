@@ -101,6 +101,12 @@ class Packet:
     # releases it AFTER copying the payload out — like a NIC TX-completion —
     # so pool memory is never rewritten under an in-flight packet.
     pool_ref: tuple | None = None
+    # Ring epoch the sender routed under (-1 = untagged: standalone clients
+    # and control traffic skip epoch fencing entirely).  A tagged packet
+    # older than the receiving director's current epoch is answered with a
+    # terminal redirect instead of being served — post-failover, the keys it
+    # addressed may live on a different shard.
+    epoch: int = -1
 
     @property
     def nbytes(self) -> int:
@@ -515,6 +521,14 @@ class TrafficDirector:
         # means admit-all (the untenanted default pays one attribute test).
         self.admit: Callable[[int, int], int] | None = None
         self.on_shed: Callable[[FiveTuple, bytes], None] | None = None
+        # Ring-epoch fence, installed by the owning server when it joins a
+        # replicated cluster: ``epoch_of() -> int`` is the current ring
+        # epoch; a tagged packet with an older epoch is handed WHOLE to
+        # ``on_stale_epoch(client_flow, payload, current)`` (the server
+        # marks each request terminally redirected) and never served.  The
+        # director stays policy-free: it only compares integers.
+        self.epoch_of: Callable[[], int] | None = None
+        self.on_stale_epoch: Callable[[FiveTuple, object, int], None] | None = None
         self._conns: dict[FiveTuple, _PEPConnection] = {}
         self._host_flow_of: dict[FiveTuple, FiveTuple] = {}
         self._client_flow_of: dict[FiveTuple, FiveTuple] = {}  # reverse map
@@ -589,6 +603,15 @@ class TrafficDirector:
             if pkt.seq != conn.client_next_seq:
                 continue  # PEP handles client-side reliability; drop dup/ooo
             conn.client_next_seq += pkt.nbytes
+            if pkt.epoch >= 0 and self.epoch_of is not None:
+                cur = self.epoch_of()
+                if pkt.epoch < cur:
+                    # Stale ring epoch: the sender routed before a failover
+                    # repaired the ring.  Refuse the whole batch — serving
+                    # it could apply writes to a demoted replica set.
+                    if self.on_stale_epoch is not None:
+                        self.on_stale_epoch(pkt.flow, pkt.payload, cur)
+                    continue
             # Stage 2: the offload predicate inspects the payload (zero-copy:
             # the predicate sees the packet buffer itself, never a copy).
             host_msgs, dpu_msgs = self.off_pred(pkt.payload, self.cache_table)

@@ -42,11 +42,39 @@ E_NOSPC = 28
 # tenant's bucket state, not empty bytes: the client learns WHEN a retry
 # can be admitted instead of just that it was dropped.
 E_SHED = 131
+# Terminal client-side status for a request addressed to a shard the ring
+# no longer routes there: the packet carried a stale ring epoch (or the
+# owning shard died before responding) and a failover re-homed the keys.
+# Like ``E_SHED`` it never travels on the wire — the director (or the
+# cluster supervisor, for requests parked on a dead shard) marks the
+# request terminally in the lifecycle tracker and the client synthesizes
+# the status.  The body is a redirect hint (``encode_redirect_hint``)
+# carrying the CURRENT ring epoch, so one retry against the repaired ring
+# is guaranteed fresh.  Retryable: clients resubmit the same request id to
+# the new owner (the old owner is dead or refused it, so the id cannot
+# alias).
+E_REDIRECT = 132
 
 # Shed-hint body: tenant(u32) retry_after_ticks(u32).  ``retry_after`` is
 # the shedding bucket's estimate of when one token will be available
 # (admission sheds) or 1 (overload sheds: retry next tick is admissible).
 SHED_HINT = struct.Struct("<II")
+
+# Redirect-hint body: ring epoch(u32) after the repair that obsoleted the
+# request's routing.  A client that re-routes with an epoch >= this value
+# is acting on the post-failover ring.
+REDIRECT_HINT = struct.Struct("<I")
+
+
+def encode_redirect_hint(epoch: int) -> bytes:
+    return REDIRECT_HINT.pack(min(max(epoch, 0), 0xFFFFFFFF))
+
+
+def decode_redirect_hint(body: bytes | memoryview) -> int:
+    """Decode an ``E_REDIRECT`` body -> current ring epoch (0 if absent)."""
+    if len(body) < REDIRECT_HINT.size:
+        return 0
+    return REDIRECT_HINT.unpack_from(body, 0)[0]
 
 
 def encode_shed_hint(tenant: int, retry_after: int) -> bytes:

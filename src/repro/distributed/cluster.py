@@ -50,9 +50,13 @@ import threading
 from dataclasses import dataclass, field, replace
 from typing import Callable, Iterable
 
-from repro.core.dds_server import DDSStorageServer, ServerConfig
+from repro.core import wire
+from repro.core.client import ShardConnection
+from repro.core.dds_server import (DDSStorageServer, ServerConfig,
+                                   encode_app_write)
 from repro.core.lifecycle import TickClock, TickHistogram
 from repro.core.offload import OffloadAPI
+from repro.distributed.fault_tolerance import ClusterSupervisor
 
 
 def stable_hash(key: object, salt: bytes = b"") -> int:
@@ -92,6 +96,32 @@ class HashRing:
             i = 0  # wrap around the ring
         return self._owners[i]
 
+    def successors(self, shard: int, k: int) -> list[int]:
+        """The first ``k`` DISTINCT other shards clockwise from ``shard``'s
+        first vnode — its replica group.  Deterministic (the ring is), and
+        stable under failover because failover repairs a ROUTE table on top
+        of the ring instead of removing vnodes (removal would re-home the
+        dead shard's keys onto arbitrary ring successors, not onto the
+        replicas actually holding the data)."""
+        if k <= 0 or self.num_shards <= 1:
+            return []
+        owners = self._owners
+        n = len(owners)
+        try:
+            i = owners.index(shard)
+        except ValueError:
+            return []
+        out: list[int] = []
+        seen = {shard}
+        for j in range(1, n):
+            o = owners[(i + j) % n]
+            if o not in seen:
+                seen.add(o)
+                out.append(o)
+                if len(out) >= k:
+                    break
+        return out
+
     def distribution(self, keys: Iterable[object]) -> dict[int, int]:
         out: dict[int, int] = {s: 0 for s in range(self.num_shards)}
         for k in keys:
@@ -112,9 +142,15 @@ class ClusterStats:
 
 @dataclass
 class FileLocation:
-    """Where a cluster-global file id actually lives."""
+    """Where a cluster-global file id actually lives.
+
+    ``replicas`` maps replica shard -> that shard's LOCAL fid of the copy
+    (replica files are ordinary files on the replica's own SegmentFS).  On
+    failover the promoted copy becomes ``(shard, local_fid)`` and leaves
+    ``replicas``; the surviving copies stay listed."""
     shard: int
     local_fid: int
+    replicas: dict[int, int] = field(default_factory=dict)
 
 
 class ReadySet:
@@ -168,6 +204,151 @@ class ReadySet:
         return bool(self._queue)
 
 
+class _Replicator:
+    """Primary-backup write forwarding for ONE primary shard.
+
+    Owns a :class:`~repro.core.client.ShardConnection` to each replica
+    target, so forwarded writes ride the SAME host wire, batching and
+    ordering guarantees as client traffic (the paper's wire is the only
+    transport).  ``forward`` encodes the final on-disk bytes — called at
+    the one point where they are known, after the primary's host handler
+    rewrote the payload (e.g. a KV PUT into a log record) — as a raw
+    ``APP_WRITE`` against the target's replica file, and HOLDS the
+    primary's client ack (the ``token`` request id) until every live
+    target acked, or the supervisor dropped a dead target.  The client
+    therefore never sees an ack for bytes a single crash could lose.
+
+    Replicator flows are epoch-UNTAGGED: replication must keep working
+    across the epoch bump its own failover causes.  Replica-side fan-out
+    does not chain — a replica never maps its replica files into its own
+    replicator, so depth is exactly one (primary-backup, not chain
+    replication).
+    """
+
+    def __init__(self, primary: int,
+                 targets: list[tuple[int, DDSStorageServer]],
+                 clock: TickClock):
+        self.primary = primary
+        self.clock = clock
+        # Distinct source ip per primary keeps replicator flows disjoint
+        # from every client's (client ports allocate from 10.0.*).
+        self.conns = {t: ShardConnection(srv, f"10.1.{primary}.1", 45000 + t)
+                      for t, srv in targets}
+        self._fid_map: dict[int, dict[int, int]] = {t: {} for t, _ in targets}
+        self._next_rrid = 1
+        self._hold: dict[int, int] = {}      # token -> outstanding replica acks
+        self._rrid_meta: dict[int, tuple[int, int, int]] = {}  # rrid -> (token, target, t0)
+        self._pending: dict[int, set[int]] = {t: set() for t, _ in targets}
+        self._responses: dict[int, tuple[int, bytes]] = {}
+        self._dirty = False
+        self.lag = TickHistogram()           # forward tick -> replica-ack tick
+        self.forwarded = 0
+        self.forwarded_bytes = 0
+        self.failures = 0                    # replica error/terminal statuses
+        self.dropped = 0                     # acks released by drop_target
+
+    def map_file(self, target: int, primary_fid: int, replica_fid: int) -> None:
+        m = self._fid_map.get(target)
+        if m is not None:
+            m[primary_fid] = replica_fid
+
+    def forward(self, token: int, file_id: int, offset: int, data) -> bool:
+        """Forward one acked write; True if the client ack is now held."""
+        held = 0
+        t0 = self.clock.now
+        for t, conn in self.conns.items():
+            rfid = self._fid_map[t].get(file_id)
+            if rfid is None:
+                continue   # unreplicated file (e.g. checkpoints): no hold
+            rrid = self._next_rrid
+            self._next_rrid += 1
+            conn.enqueue(encode_app_write(rrid, rfid, offset, data))
+            self._rrid_meta[rrid] = (token, t, t0)
+            self._pending[t].add(rrid)
+            held += 1
+        if not held:
+            return False
+        self._hold[token] = held
+        self._dirty = True
+        self.forwarded += held
+        self.forwarded_bytes += held * len(data)
+        return True
+
+    def holds(self, token: int) -> bool:
+        return token in self._hold
+
+    def busy(self) -> bool:
+        return self._dirty or bool(self._hold)
+
+    def step(self) -> int:
+        """Flush queued forwards, harvest replica acks, release holds."""
+        work = 0
+        if self._dirty:
+            self._dirty = False
+            for conn in self.conns.values():
+                work += conn.flush()
+        resp = self._responses
+        for t, conn in self.conns.items():
+            conn.collect(resp)
+            conn.arrival_order.clear()   # unused here; don't grow unbounded
+            pend = self._pending[t]
+            if pend and not resp:
+                # A replica overload-shed never produces a wire response:
+                # reconcile terminal marks so holds cannot wedge forever.
+                lt = conn.server.lifecycle
+                for rrid in [r for r in pend
+                             if lt.take_terminal(conn.flow, r) is not None]:
+                    self.failures += 1
+                    work += self._resolve(rrid)
+        if resp:
+            now = self.clock.now
+            for rrid in list(resp):
+                status, _body = resp.pop(rrid)
+                meta = self._rrid_meta.get(rrid)
+                if meta is not None:
+                    self.lag.add(now - meta[2])
+                    if status != wire.E_OK:
+                        self.failures += 1
+                work += self._resolve(rrid)
+        return work
+
+    def _resolve(self, rrid: int) -> int:
+        meta = self._rrid_meta.pop(rrid, None)
+        if meta is None:
+            return 0
+        token, target, _t0 = meta
+        pend = self._pending.get(target)
+        if pend is not None:
+            pend.discard(rrid)
+        left = self._hold.get(token, 0) - 1
+        if left <= 0:
+            self._hold.pop(token, None)
+        else:
+            self._hold[token] = left
+        return 1
+
+    def drop_target(self, target: int) -> None:
+        """A replica died: stop forwarding to it and release every client
+        ack held on replica acks it will never send."""
+        if self.conns.pop(target, None) is None:
+            return
+        self._fid_map.pop(target, None)
+        for rrid in list(self._pending.pop(target, ())):
+            self.dropped += 1
+            self._resolve(rrid)
+
+    def summary(self) -> dict:
+        out = {"targets": sorted(self.conns), "forwarded": self.forwarded,
+               "bytes": self.forwarded_bytes}
+        if self.lag.n:
+            out["lag"] = self.lag.summary()
+        if self.failures:
+            out["failures"] = self.failures
+        if self.dropped:
+            out["dropped_acks"] = self.dropped
+        return out
+
+
 class DDSCluster:
     """N DDS storage servers behind consistent-hash file-id sharding."""
 
@@ -199,6 +380,39 @@ class DDSCluster:
             self.servers.append(srv)
         self._files: dict[int, FileLocation] = {}
         self._next_fid = 1
+        # -- replication / failover state ----------------------------------
+        # ``epoch`` is the ring generation, bumped on every failover and
+        # stamped onto epoch-aware clients' packets; ``_route`` repairs
+        # routing ON TOP of the ring (dead shard -> promoted replica) so
+        # vnode placement — and therefore which replica holds which keys —
+        # never shifts.  ``replication`` is the effective factor K.
+        self.epoch = 0
+        self._route: dict[int, int] = {}
+        self._dead: set[int] = set()
+        self._crash_at: dict[int, int] = {}
+        self.replication = (min(base.replication, num_shards - 1)
+                            if num_shards > 1 else 0)
+        self.failover_events: list[dict] = []
+        # Application hook (e.g. the KV store): called as
+        # ``on_promote(dead_shard, promoted_shard)`` after ring repair.
+        self.on_promote = None
+        self.supervisor: ClusterSupervisor | None = None
+        if self.replication > 0:
+            for i, srv in enumerate(self.servers):
+                targets = [(t, self.servers[t])
+                           for t in self.ring.successors(i, self.replication)]
+                srv.replicator = _Replicator(i, targets, self.clock)
+            self.supervisor = ClusterSupervisor(
+                self, base.heartbeat_timeout_ticks)
+            for srv in self.servers:
+                # Epoch fence: a packet tagged with a pre-failover epoch is
+                # refused with a retryable terminal redirect.
+                srv.director.epoch_of = lambda: self.epoch
+                srv.director.on_stale_epoch = srv._on_stale_epoch
+
+    @property
+    def failover_armed(self) -> bool:
+        return self.supervisor is not None
 
     def runnable(self) -> list[int]:
         """Currently armed shard indices (introspection/tests only)."""
@@ -209,10 +423,34 @@ class DDSCluster:
         """Create a file on the shard the ring assigns; return a GLOBAL id."""
         gfid = self._next_fid
         self._next_fid += 1
-        shard = self.ring.shard_for(gfid)
+        shard = self.route_of(self.ring.shard_for(gfid))
         lfid = self.servers[shard].frontend.create_file(f"{name}@{gfid}")
-        self._files[gfid] = FileLocation(shard, lfid)
+        loc = FileLocation(shard, lfid)
+        if self.replication:
+            loc.replicas = self.replicate_file(shard, lfid, f"{name}@{gfid}")
+        self._files[gfid] = loc
         return gfid
+
+    def replicate_file(self, primary: int, lfid: int,
+                       name: str) -> dict[int, int]:
+        """Create replica copies of a shard-LOCAL file on the primary's ring
+        successors and register them with its replicator.
+
+        The public API for applications that create files directly on shard
+        frontends (the KV store's record logs): every write the primary acks
+        against ``lfid`` is thereafter forwarded before the ack releases.
+        Returns ``{replica shard: replica-local fid}``."""
+        out: dict[int, int] = {}
+        repl = self.servers[primary].replicator
+        if not self.replication or repl is None:
+            return out
+        for t in self.ring.successors(primary, self.replication):
+            if t in self._dead:
+                continue
+            rlfid = self.servers[t].frontend.create_file(f"{name}:r{primary}")
+            repl.map_file(t, lfid, rlfid)
+            out[t] = rlfid
+        return out
 
     def locate(self, gfid: int) -> FileLocation:
         loc = self._files.get(gfid)
@@ -223,11 +461,96 @@ class DDSCluster:
     def shard_for_file(self, gfid: int) -> int:
         return self.locate(gfid).shard
 
+    def route_of(self, shard: int) -> int:
+        """Post-failover routing: follow the repair chain to a live shard.
+        Chains are compressed at failover time, so this is usually one
+        dict miss; a key's route never lands on a dead shard."""
+        r = self._route
+        while shard in r:
+            shard = r[shard]
+        return shard
+
+    def shard_for_key(self, key: object) -> int:
+        """Key routing clients should use: ring placement + route repair."""
+        return self.route_of(self.ring.shard_for(key))
+
     def write_sync(self, gfid: int, offset: int, data: bytes) -> None:
         """Host-side bulk load (e.g. benchmark setup), bypassing the network."""
         loc = self.locate(gfid)
         self.servers[loc.shard].frontend.write_sync(loc.local_fid, offset, data)
         self.servers[loc.shard].run_until_idle()
+        # The bulk load bypassed the wire (and so the replicator): mirror it
+        # onto the replica copies directly, preserving the invariant that
+        # replicas hold every byte the primary considers durable.
+        for t, rlfid in loc.replicas.items():
+            if t in self._dead:
+                continue
+            self.servers[t].frontend.write_sync(rlfid, offset, data)
+            self.servers[t].run_until_idle()
+
+    # -- fault injection + failover -------------------------------------------------
+    def crash(self, shard: int) -> None:
+        """Deterministic fault injection: power-fail ``shard`` NOW.
+
+        Its device loses every queued-but-unexecuted op (bytes already
+        executed stay durable for a recovery mount), it stops being
+        scheduled, and its heartbeat goes silent — the supervisor detects
+        the death and promotes a replica ``heartbeat_timeout_ticks`` later.
+        """
+        if shard in self._dead:
+            return
+        self._dead.add(shard)
+        self.servers[shard].device.crash()
+
+    def crash_at(self, shard: int, tick: int) -> None:
+        """Schedule ``crash(shard)`` for the first pump at/after ``tick``."""
+        self._crash_at[shard] = tick
+
+    def _failover(self, dead: int) -> int | None:
+        """Promote a replica of ``dead``: drain the promoted shard, adopt
+        its replica copies as primaries, repair key routing, release client
+        acks held on the dead shard's replica acks, and bump the ring epoch
+        (in-flight stale-epoch requests are refused with retryable
+        redirects; clients replay against the repaired ring)."""
+        promoted = None
+        for cand in self.ring.successors(dead, self.replication):
+            if cand not in self._dead:
+                promoted = cand
+                break
+        if promoted is not None:
+            # Drain FIRST: every forwarded write the dead primary acked is
+            # applied on the replica before any adopted file is served.
+            self.servers[promoted].run_until_idle()
+            prepl = self.servers[promoted].replicator
+            for loc in self._files.values():
+                if loc.shard != dead:
+                    continue
+                rlfid = loc.replicas.pop(promoted, None)
+                if rlfid is None:
+                    continue   # not replicated onto the promoted shard
+                loc.shard = promoted
+                loc.local_fid = rlfid
+                # K >= 2: keep the surviving copies replicated from the
+                # new primary (no re-replication of lost copies — the
+                # repaired group is one smaller; documented limitation).
+                if prepl is not None:
+                    for t, rfid in loc.replicas.items():
+                        if t not in self._dead:
+                            prepl.map_file(t, rlfid, rfid)
+            self._route[dead] = promoted
+            for k, v in list(self._route.items()):
+                if v == dead:   # path compression: old chains point at the
+                    self._route[k] = promoted   # live end directly
+        for i, srv in enumerate(self.servers):
+            if i not in self._dead and srv.replicator is not None:
+                srv.replicator.drop_target(dead)
+        self.epoch += 1
+        self.failover_events.append(
+            {"tick": self.clock.now, "dead": dead, "promoted": promoted,
+             "epoch": self.epoch})
+        if promoted is not None and self.on_promote is not None:
+            self.on_promote(dead, promoted)
+        return promoted
 
     # -- work-signaled cooperative event loop -----------------------------------------
     def pump(self) -> int:
@@ -252,12 +575,28 @@ class DDSCluster:
         submissions); a new producer must too.
         """
         self.clock.tick()   # one tick per scheduling step (lifecycle clock)
+        if self._crash_at:
+            now = self.clock.now
+            for shard, at in list(self._crash_at.items()):
+                if now >= at:
+                    del self._crash_at[shard]
+                    self.crash(shard)
+        sup = self.supervisor
+        if sup is not None:
+            # Failure detection runs BEFORE the quiet-latch early returns:
+            # a dead shard produces no doorbells, so its detection must not
+            # depend on other work existing.  Unreplicated clusters skip
+            # both calls (sup is None) — zero cost on that path.
+            sup.beat_live()
+            sup.poll()
         runnable = self._ready.take()
         servers = self.servers
+        dead = self._dead
         if not runnable:
             if self._ready.quiet:
                 return 0   # verified idle, no doorbell since: nothing to do
-            runnable = [i for i, srv in enumerate(servers) if srv.busy()]
+            runnable = [i for i, srv in enumerate(servers)
+                        if i not in dead and srv.busy()]
             if not runnable:
                 self._ready.quiet = True
                 return 0
@@ -265,6 +604,8 @@ class DDSCluster:
         steps = self.pump_steps
         mark = self._ready.mark
         for i in runnable:
+            if i in dead:
+                continue   # crashed shards never step again
             srv = servers[i]
             steps[i] += 1
             w = srv.pump()
@@ -327,17 +668,34 @@ class DDSCluster:
         dev = TickHistogram()
         dev_prio = TickHistogram()
         sheds = 0
+        redirects = 0
         for srv in self.servers:
             sheds += srv.lifecycle.sheds
+            redirects += srv.lifecycle.redirects
             dev.merge(srv.device.stats.completion_ticks)
             dev_prio.merge(srv.device.stats.prio_completion_ticks)
         out = {"classes": {c: h.summary() for c, h in classes.items() if h.n}}
         if sheds:
             out["sheds"] = sheds
+        if redirects:
+            out["redirects"] = redirects
         if dev.n:
             out["device"] = dev.summary()
         if dev_prio.n:
             out["device_prio"] = dev_prio.summary()
+        repl = self._replication_summary()
+        if repl is not None:
+            out["replication"] = repl
+        jr_records = jr_bytes = 0
+        for srv in self.servers:
+            jr_records += srv.fs.journal_replayed_records
+            jr_bytes += srv.fs.journal_replayed_bytes
+        if jr_records:
+            out["journal_replay"] = {"records": jr_records,
+                                     "bytes": jr_bytes}
+        if self.failover_events:
+            out["failover"] = {"epoch": self.epoch,
+                               "events": list(self.failover_events)}
         tenants = {t: {c: h.summary() for c, h in per.items() if h.n}
                    for t, per in sorted(self._merged_tenants().items())}
         for t, n in sorted(self._merged_tenant_sheds().items()):
@@ -352,6 +710,30 @@ class DDSCluster:
                 "granted": sum(a["granted"] for a in admission),
                 "shed": sum(a["shed"] for a in admission),
             }
+        return out
+
+    def _replication_summary(self) -> dict | None:
+        """Cluster-wide replication accounting: merged lag histogram (all
+        stamps ride the shared clock) + forward/drop counters."""
+        lag = TickHistogram()
+        forwarded = fbytes = dropped = 0
+        any_repl = False
+        for srv in self.servers:
+            repl = srv.replicator
+            if repl is None:
+                continue
+            any_repl = True
+            lag.merge(repl.lag)
+            forwarded += repl.forwarded
+            fbytes += repl.forwarded_bytes
+            dropped += repl.dropped
+        if not any_repl:
+            return None
+        out: dict = {"forwarded": forwarded, "bytes": fbytes}
+        if lag.n:
+            out["lag"] = lag.summary()
+        if dropped:
+            out["dropped_acks"] = dropped
         return out
 
     def _merged_classes(self) -> dict:

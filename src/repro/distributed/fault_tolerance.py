@@ -1,25 +1,36 @@
-"""Fault tolerance for 1000+-node runs: heartbeats, stragglers, restart.
+"""Fault tolerance: heartbeats, stragglers, restart — and cluster failover.
 
 Components:
 
 ``HeartbeatMonitor``
     Tracks per-host heartbeats (monotonic step + timestamp).  A host whose
-    heartbeat is older than ``timeout_s`` is declared dead; the supervisor
-    then triggers an elastic restart.
+    heartbeat is older than ``timeout_s`` is declared dead.  The timeout's
+    UNIT follows the injected ``now`` callable: wall seconds under the
+    default ``time.monotonic``, logical TICKS when constructed via
+    :meth:`HeartbeatMonitor.on_ticks` against the deterministic
+    :class:`~repro.core.lifecycle.TickClock` (the storage cluster's mode —
+    wall time would make failover timing depend on interpreter speed).
 
 ``StragglerDetector``
     Collects per-host step durations and flags hosts slower than
-    ``threshold x`` the fleet median over a sliding window.  At pod scale a
-    straggler is usually a failing HBM/host: the mitigation (as in
-    production TPU fleets) is checkpoint-exclude-restart rather than work
-    stealing, so the detector emits *policy decisions*, not reassignments.
+    ``threshold x`` the fleet median over a sliding window.  Duration units
+    are caller-defined (wall seconds for training fleets, ticks for the
+    storage cluster's replication-lag feed) — the detector only compares
+    ratios, so it is clock-agnostic by construction.
+
+``ClusterSupervisor``
+    The storage data plane's failure detector: beats every live shard of a
+    replicated ``DDSCluster`` on the shared tick clock, declares a shard
+    dead after ``heartbeat_timeout_ticks`` of silence, and drives replica
+    promotion + ring repair (``DDSCluster._failover``).
 
 ``TrainSupervisor``
     Drives a Trainer with failure injection hooks: on a detected failure it
     restores the latest DDS checkpoint (write-behind saves mean at most
     ``ckpt_every`` steps are replayed) and continues — optionally on a
-    SHRUNKEN data-parallel world (elastic restart), re-sharding parameter
-    rows via ``CheckpointManager.restore_elastic``.
+    SHRUNKEN data-parallel world (elastic restart).  Its liveness clock is
+    the trainer's deterministic STEP counter, not wall time — the run loop
+    is cooperative, so wall-clock silence says nothing about host death.
 
 All timing here is injected (``now`` callables) so tests are deterministic.
 """
@@ -42,11 +53,20 @@ class HostState:
 
 
 class HeartbeatMonitor:
+    """Liveness by heartbeat age; ``timeout_s`` is in ``now``'s units."""
+
     def __init__(self, hosts: list[str], timeout_s: float = 60.0,
                  now: Callable[[], float] = time.monotonic):
         self.timeout_s = timeout_s
         self.now = now
         self.hosts = {h: HostState(h, last_beat_s=now()) for h in hosts}
+
+    @classmethod
+    def on_ticks(cls, hosts: list[str], clock,
+                 timeout_ticks: int) -> "HeartbeatMonitor":
+        """Tick-based monitor on a ``TickClock`` — deterministic timeouts
+        (two same-seed runs detect a death at the identical tick)."""
+        return cls(hosts, timeout_s=timeout_ticks, now=lambda: clock.now)
 
     def beat(self, host: str, step: int) -> None:
         st = self.hosts[host]
@@ -102,7 +122,75 @@ class FailureEvent:
     step: int
     kind: str          # "crash" | "straggler" | "heartbeat"
     host: str
-    action: str        # "restart" | "restart_shrunk"
+    action: str        # "restart" | "restart_shrunk" | "promote:shardN" | ...
+
+
+class ClusterSupervisor:
+    """Failure detector + failover driver for a replicated ``DDSCluster``.
+
+    Wired into the cluster pump when ``ServerConfig.replication`` > 0:
+    every pump beats each LIVE shard on the shared tick clock (a crashed
+    shard's heartbeat goes silent at its crash tick), and ``poll`` declares
+    a shard dead once its silence exceeds ``timeout_ticks`` — then drives
+    the cluster's replica promotion and ring repair.  Detection latency is
+    therefore exactly ``timeout_ticks`` pumps, deterministic across runs.
+
+    The straggler detector is fed per-shard replication-lag means (ticks
+    between a primary's forward and the replica's ack): a replica whose
+    lag grows against the fleet is the disaggregated analogue of the slow
+    host a training fleet would checkpoint-exclude.
+    """
+
+    def __init__(self, cluster, timeout_ticks: int = 16):
+        self.cluster = cluster
+        self.clock = cluster.clock
+        names = [self._name(i) for i in range(cluster.num_shards)]
+        self.monitor = HeartbeatMonitor.on_ticks(names, self.clock,
+                                                 timeout_ticks)
+        self.detector = StragglerDetector()
+        self.events: list[FailureEvent] = []
+        self._lag_seen = [(0, 0)] * cluster.num_shards  # (n, total) deltas
+
+    @staticmethod
+    def _name(shard: int) -> str:
+        return f"shard{shard}"
+
+    def beat_live(self) -> None:
+        """One heartbeat per live shard, stamped with the current tick."""
+        beat = self.monitor.beat
+        now = self.clock.now
+        dead = self.cluster._dead
+        for i in range(self.cluster.num_shards):
+            if i not in dead:
+                beat(self._name(i), now)
+
+    def poll(self) -> list[FailureEvent]:
+        """Detect newly dead shards; fail each over.  Returns new events."""
+        out: list[FailureEvent] = []
+        for name in self.monitor.dead_hosts():
+            self.monitor.remove(name)
+            shard = int(name[len("shard"):])
+            promoted = self.cluster._failover(shard)
+            ev = FailureEvent(self.clock.now, "heartbeat", name,
+                              f"promote:{self._name(promoted)}"
+                              if promoted is not None else "unrecoverable")
+            self.events.append(ev)
+            out.append(ev)
+        self._feed_stragglers()
+        return out
+
+    def _feed_stragglers(self) -> None:
+        """Record each live primary's mean replication lag since last poll."""
+        cl = self.cluster
+        for i, srv in enumerate(cl.servers):
+            repl = srv.replicator
+            if repl is None or i in cl._dead:
+                continue
+            n, tot = repl.lag.n, repl.lag.total
+            pn, pt = self._lag_seen[i]
+            if n > pn:
+                self.detector.record(self._name(i), (tot - pt) / (n - pn))
+                self._lag_seen[i] = (n, tot)
 
 
 class TrainSupervisor:
@@ -115,10 +203,17 @@ class TrainSupervisor:
     def __init__(self, trainer, hosts: list[str],
                  monitor: HeartbeatMonitor | None = None,
                  detector: StragglerDetector | None = None,
-                 inject_failure: Callable[[int], str | None] = lambda s: None):
+                 inject_failure: Callable[[int], str | None] = lambda s: None,
+                 heartbeat_timeout_steps: int = 25):
         self.trainer = trainer
         self.hosts = list(hosts)
-        self.monitor = monitor or HeartbeatMonitor(hosts)
+        # Step-counted liveness by default: the supervisor's run loop is
+        # cooperative and deterministic, so the trainer's step counter is
+        # the clock — the old wall-clock default could declare every host
+        # dead across an interpreter pause.
+        self.monitor = monitor or HeartbeatMonitor(
+            hosts, timeout_s=heartbeat_timeout_steps,
+            now=lambda: float(self.trainer.step))
         self.detector = detector or StragglerDetector()
         self.inject_failure = inject_failure
         self.events: list[FailureEvent] = []

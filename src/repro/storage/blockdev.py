@@ -102,6 +102,9 @@ class BlockDevice:
         self._cookie_done: list[tuple[int, int]] = []  # completion queue
         self._lock = threading.Lock()
         self._clock_s = 0.0  # modeled device clock
+        # Deterministic fault injection (see ``crash``/``inject_torn_writev``).
+        self.crashed = False
+        self._torn_writev: list[int] | None = None   # [ops_until_tear, chunks]
         self.stats = BlockDeviceStats()
         # Logical clock for submit->complete tick stamps; the owning server
         # (or cluster) replaces it with the shared scheduler clock.  The
@@ -123,6 +126,8 @@ class BlockDevice:
     # file service process a whole burst of completions without a Python
     # closure per submitted op.
     def _enqueue(self, op: IoOp, priority: bool = False) -> IoOp:
+        if self.crashed:
+            return op   # submission lost; status stays PENDING forever
         if op.lba < 0 or op.lba + op.nbytes > self.capacity:
             op.status = STATUS_EINVAL
             if op.on_complete:
@@ -179,6 +184,31 @@ class BlockDevice:
         if db is not None:
             db()
 
+    # -- fault injection ---------------------------------------------------------
+    def crash(self) -> None:
+        """Power-fail NOW: queued ops and undelivered completions vanish.
+
+        Bytes already executed stay durable in ``_mem`` (``raw_read`` still
+        works, so a recovery mount can scan the journal), but nothing
+        in-flight survives and the device accepts no further work.  The crash
+        model all failover tests build on: an op is durable iff ``poll``
+        executed it before the crash tick.
+        """
+        with self._lock:
+            self.crashed = True
+            self._queue.clear()
+            self._pq.clear()
+            self._cookie_done.clear()
+
+    def inject_torn_writev(self, nth: int = 1, chunks: int = 1) -> None:
+        """Arm a deterministic torn write: the ``nth`` writev executed from
+        now applies only its first ``chunks`` gathered buffers to media and
+        then the device power-fails mid-op (no completion, queued ops lost).
+        Exercises the exact hazard journaling exists for: a coalesced run
+        half-landed in place.
+        """
+        self._torn_writev = [max(1, nth), max(0, chunks)]
+
     def queue_len(self) -> int:
         with self._lock:
             return len(self._queue) + len(self._pq)
@@ -190,6 +220,8 @@ class BlockDevice:
         runnable until the backlog is polled AND the completion queue is
         reaped.  All probes are lock-free peeks (cheap on the idle path).
         """
+        if self.crashed:
+            return False
         return bool(self._queue) or bool(self._pq) or bool(self._cookie_done)
 
     # -- completion --------------------------------------------------------------
@@ -203,6 +235,8 @@ class BlockDevice:
         burst is claimed under ONE lock round; execution (and the
         completion callbacks) run outside the lock."""
         budget = max_completions if max_completions is not None else self.queue_depth
+        if self.crashed:
+            return 0
         if not self._queue and not self._pq:   # racy-but-safe peek: skip lock
             return 0
         with self._lock:
@@ -227,6 +261,7 @@ class BlockDevice:
         cookie_done = self._cookie_done
         cookies_before = len(cookie_done)
         now_tick = self.clock.now
+        torn = False
         lat_c = stats.prio_completion_ticks.counts  # inlined histogram add:
         for i, op in enumerate(ops):                # the stamp rides every
             if i == k_p:                            # completion
@@ -248,6 +283,21 @@ class BlockDevice:
                 writes += 1
                 write_bytes += n
             else:  # writev: one op, bytes streamed from each gathered view
+                tw = self._torn_writev
+                if tw is not None:
+                    tw[0] -= 1
+                    if tw[0] <= 0:
+                        # Power-fail MID-op: a prefix of the gathered
+                        # buffers reaches media; the rest — and the op's
+                        # completion — never happen.
+                        pos = op.lba
+                        for b in op.buf[: tw[1]]:
+                            ln = len(b)
+                            memv[pos : pos + ln] = b
+                            pos += ln
+                        self._torn_writev = None
+                        torn = True
+                        break
                 clock += wlat + n * inv_bw
                 pos = op.lba
                 for b in op.buf:
@@ -269,6 +319,9 @@ class BlockDevice:
         stats.writes += writes
         stats.read_bytes += read_bytes
         stats.write_bytes += write_bytes
+        if torn:
+            self.crash()   # remaining claimed + queued ops vanish
+            return k
         if len(cookie_done) > cookies_before:
             db = self.doorbell
             if db is not None:
