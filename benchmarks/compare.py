@@ -27,6 +27,8 @@ TENANCY_JSON = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_tenancy.json")
 FAILOVER_JSON = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_failover.json")
+GETSTORM_JSON = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_getstorm.json")
 
 
 def _load(d: str) -> dict:
@@ -115,10 +117,37 @@ def failover_compare() -> None:
          f"deterministic={cur.get('deterministic')}")
 
 
+def getstorm_compare() -> None:
+    """Committed GET-storm record: scalar data plane vs vectorized."""
+    if not os.path.exists(GETSTORM_JSON):
+        print("# no BENCH_getstorm.json; getstorm comparison skipped")
+        return
+    with open(GETSTORM_JSON) as fh:
+        doc = json.load(fh)
+    base = doc.get("baseline", {})
+    cur = doc.get("current", {})
+    bf, cf = base.get("full"), cur.get("full")
+    if not bf or not cf:
+        print("# BENCH_getstorm.json lacks baseline/current full; skipped")
+        return
+    section("vectorized data plane: scalar baseline -> array-at-a-time")
+    # Calibrate both sides to this machine so the ratio survives host drift.
+    b_cal = base.get("calibration_ops_per_s") or 1.0
+    c_cal = cur.get("calibration_ops_per_s") or 1.0
+    speedup = (cf["ops_per_s"] / c_cal) / (bf["ops_per_s"] / b_cal)
+    emit("getstorm_full", cf["ops_per_s"],
+         f"{bf['ops_per_s']:.0f} -> {cf['ops_per_s']:.0f} op/s "
+         f"({speedup:.2f}x calibrated, "
+         f"{cf['ops_per_s'] / bf['ops_per_s']:.2f}x raw), "
+         f"ticks {bf['ticks']} -> {cf['ticks']}, "
+         f"dpu_frac {cf['dpu_frac']:.2f}")
+
+
 def main() -> None:
     latency_compare()
     tenancy_compare()
     failover_compare()
+    getstorm_compare()
     if not (os.path.isdir(BASE) and os.path.isdir(OPT)):
         print("# need both results/dryrun and results/dryrun_opt")
         return

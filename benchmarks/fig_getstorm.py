@@ -1,0 +1,345 @@
+"""Cache-table-bound offloaded-GET storm: the vectorized data plane gate.
+
+PR 8 rebuilds the inner loops of the three hottest structures — cuckoo
+cache probing, wire frame decode/pack, and the checksummed writev path —
+as array-at-a-time kernels over contiguous numpy backing stores.  This
+benchmark is the workload those kernels are FOR: a high-hit-rate sharded-KV
+GET storm where every request crosses
+
+  batch decode (director) -> offload predicate (``lookup_many`` burst
+  cuckoo probe) -> offload engine -> device priority read -> packetize ->
+  client reassembly
+
+and the per-request Python work, not the device, is the bottleneck.  Keys
+are fixed-width (uniform frames — the vectorized structured-dtype decode
+path) and Zipf-skewed (realistic reuse; the cache table serves virtually
+everything after warmup).
+
+Measurements per run:
+
+  * **wall-clock GETs/sec** of the whole storm (calibrated: a fixed
+    pure-Python reference loop is timed alongside and committed numbers
+    are rescaled by reference-speed ratio before any gate),
+  * **modeled µs/request** — the paper-calibrated service time, which must
+    NOT drift when the simulator gets faster (<5% vs baseline),
+  * **DPU-served fraction** — deterministic and ~1.0: the storm must stay
+    on the offloaded path, and two same-seed reps must agree exactly.
+
+Results go to ``BENCH_getstorm.json`` (baseline / current / last_run, as
+in ``fig_hotpath``).  Gates:
+
+  * full mode asserts >= ``FULL_SPEEDUP_GATE`` (2.0x) calibrated ops/sec
+    over the recorded pre-PR baseline and <``DRIFT_GATE`` modeled drift;
+  * ``--smoke`` (CI) fails on a >30% calibrated regression vs recorded
+    ``current``;
+  * both modes gate the DPU-served fraction and its determinism.
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+from dataclasses import fields
+import os
+import struct
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, section  # noqa: E402
+from repro.apps.kv_store import (KVClient, ShardedKVStore,  # noqa: E402
+                                 decode_record, encode_get)
+from repro.core import wire  # noqa: E402
+from repro.core.dds_server import ServerConfig, drain_client_flow  # noqa: E402
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_getstorm.json")
+
+FULL_SPEEDUP_GATE = 2.0       # acceptance: vectorized >= 2x the pre-PR path
+SMOKE_REGRESSION_GATE = 0.70  # CI: fail below 70% of recorded current
+DRIFT_GATE = 0.05             # modeled us/req must stay within 5% of baseline
+DPU_FRAC_GATE = 0.95          # the storm must stay on the offloaded path
+
+CONFIGS = {
+    "full": dict(shards=4, clients=2, hot_keys=2048, zipf_a=1.15, rounds=6,
+                 gets_per_round=3072, value_size=96),
+    "smoke": dict(shards=2, clients=2, hot_keys=512, zipf_a=1.15, rounds=4,
+                  gets_per_round=256, value_size=96),
+}
+
+ZIPF_SEED = 0x6E75F0
+
+
+def calibrate(iters: int = 200_000) -> float:
+    """Reference ops/sec of a fixed pure-Python loop (machine-speed proxy).
+
+    Same loop as ``fig_hotpath``: struct packing, dict traffic and bytes
+    slicing — the primitives the request path leans on — so the ratio
+    between two machines tracks how the workload itself would scale.
+    """
+    pack = struct.Struct("<QII").pack
+    blob = bytes(range(256)) * 8
+    t0 = time.perf_counter()
+    d: dict[int, bytes] = {}
+    for i in range(iters):
+        d[i & 1023] = blob[i & 255 : (i & 255) + 64]
+        pack(i, i & 0xFFFF, 64)
+    return iters / (time.perf_counter() - t0)
+
+
+def _zipf_ranks(cfg: dict, total: int) -> list[int]:
+    """Seeded skewed rank sequence, precomputed (untimed): the exact same
+    key sequence every rep, every run, every machine."""
+    rng = np.random.default_rng(ZIPF_SEED)
+    return [(int(z) - 1) % cfg["hot_keys"]
+            for z in rng.zipf(cfg["zipf_a"], size=total)]
+
+
+def run_workload(cfg: dict) -> dict:
+    """Drive the offloaded-GET storm; return measured + modeled rates."""
+    kwargs = dict(device_capacity=1 << 26,
+                  cache_items=max(1 << 11, 2 * cfg["hot_keys"]),
+                  offload_ring=1024)
+    # Array-at-a-time engines want deep pulls; the pre-PR tree (baseline
+    # recording) has no burst knob — its engine pulls its fixed 64.
+    if any(f.name == "offload_burst" for f in fields(ServerConfig)):
+        kwargs["offload_burst"] = 128
+    config = ServerConfig(**kwargs)
+    store = ShardedKVStore(num_shards=cfg["shards"], config=config)
+    cluster = store.cluster
+    clients = [KVClient(store) for _ in range(cfg["clients"])]
+    # Fixed-width keys: every GET frame has the same size, so a burst is a
+    # UNIFORM batch — the regime the array-at-a-time decode kernels target.
+    keys = [b"g%07d" % i for i in range(cfg["hot_keys"])]
+    vsize = cfg["value_size"]
+
+    # Untimed warm: PUT-ack every key (arms the DPU cache at write
+    # completion), then one GET sweep to confirm the table serves them.
+    res = clients[0].harvest(clients[0].submit(
+        [("put", k, (k * (vsize // len(k) + 1))[:vsize]) for k in keys]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    res = clients[0].harvest(clients[0].submit([("get", k) for k in keys]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    for cli in clients:
+        cli.net.run_until_idle()
+
+    total = cfg["rounds"] * cfg["clients"] * cfg["gets_per_round"]
+    ranks = _zipf_ranks(cfg, total)
+    rk = iter(ranks)
+    dpu_before = store.dpu_served_gets()
+    ticks_before = cluster.clock.now
+    # Modeled time = the devices' calibrated service model (base latency +
+    # bytes/bandwidth).  The vectorization PR must make the SIMULATOR
+    # faster without moving this number.
+    modeled_before = sum(s.device.stats.modeled_busy_s
+                         for s in cluster.servers)
+    check = keys[ranks[0]]
+    # Pre-encode the storm (untimed): every GET frame, routed to its shard,
+    # batched per (round, client, shard).  The timed region then exercises
+    # the DATA PLANE — batch framing, the wire, the engine's vectorized
+    # probe/translate/submit path, device model, response reassembly — and
+    # not per-op client bookkeeping (rid ledgers, latency stamps, replay
+    # notes), which would otherwise dominate and hide what this PR changes.
+    nsh = cfg["shards"]
+    shard_of = [clients[0]._shard(k) for k in keys]
+    rid = 1 << 32   # clear of every rid the warmup used
+    plan = []
+    for _ in range(cfg["rounds"]):
+        per_client = []
+        for _cli in clients:
+            per_shard: list[list[bytes]] = [[] for _ in range(nsh)]
+            for _ in range(cfg["gets_per_round"]):
+                i = next(rk)
+                per_shard[shard_of[i]].append(encode_get(rid, keys[i]))
+                rid += 1
+            per_client.append(per_shard)
+        plan.append(per_client)
+    resp: list[dict[int, tuple[int, bytes]]] = [{} for _ in clients]
+    gc.collect()
+    gc.disable()   # keep collector pauses out of the timed region
+    t0 = time.perf_counter()
+    for per_client in plan:
+        need = 0
+        for cli, per_shard in zip(clients, per_client):
+            conns = cli.net.conns
+            for s, frames in enumerate(per_shard):
+                if frames:
+                    conn = conns[s]
+                    conn._pending.extend(frames)
+                    conn.flush()   # ONE batch-framed packet per shard
+                    need += len(frames)
+        spins = 0
+        while need:
+            cluster.pump()
+            for ci, cli in enumerate(clients):
+                r = resp[ci]
+                for conn in cli.net.conns:
+                    before = len(r)
+                    drain_client_flow(conn.server.director, conn._resp_flow,
+                                      conn._rx, r, None)
+                    need -= len(r) - before
+            spins += 1
+            assert spins < 100_000, "storm round failed to drain"
+    elapsed = time.perf_counter() - t0
+    gc.enable()
+    got = sum(1 for r in resp for s, _ in r.values() if s == wire.E_OK)
+
+    assert got == total, f"served {got}/{total} GETs"
+    dpu = store.dpu_served_gets() - dpu_before
+    modeled_s = sum(s.device.stats.modeled_busy_s
+                    for s in cluster.servers) - modeled_before
+    # Spot-check payload integrity once (untimed): the storm must return
+    # the record bytes the warmup wrote.
+    status, body = clients[0].harvest(
+        clients[0].submit([("get", check)])).popitem()[1]
+    assert status == wire.E_OK
+    assert decode_record(body)[1] == (check * (vsize // len(check) + 1))[:vsize]
+    return {
+        "requests": total,
+        "wall_s": elapsed,
+        "ops_per_s": total / elapsed,
+        "modeled_us_per_req": modeled_s / total * 1e6,
+        "dpu_frac": dpu / total,
+        "ticks": cluster.clock.now - ticks_before,
+    }
+
+
+def load_json() -> dict:
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as fh:
+            return json.load(fh)
+    return {"schema": 1, "configs": CONFIGS}
+
+
+def save_json(doc: dict) -> None:
+    with open(JSON_PATH, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = ("--smoke" in argv
+             or os.environ.get("DDS_BENCH_SMOKE", "0") == "1")
+    record = ("baseline" if "--record-baseline" in argv else
+              "current" if "--record-current" in argv else None)
+    mode = "smoke" if smoke else "full"
+    cfg = CONFIGS[mode]
+
+    section(f"offloaded-GET storm ({mode}: {cfg['shards']} shards, "
+            f"{cfg['clients']} clients, {cfg['rounds']}x"
+            f"{cfg['gets_per_round']} Zipf(a={cfg['zipf_a']}) GETs over "
+            f"{cfg['hot_keys']} keys)")
+    # Best-of-N workload reps, each PAIRED with calibrations taken
+    # immediately around it (machine speed drifts between reps on shared
+    # hosts, so an unpaired max-ops/max-calib quotient mixes two moments);
+    # the kept rep is the one with the best calibrated score.  The reps
+    # double as the determinism sample — the tick count and DPU-served
+    # count must agree exactly across same-seed runs, wall-clock noise
+    # notwithstanding.
+    reps = 2 if smoke else 5
+    calib, res, fingerprints = 0.0, None, set()
+    c_prev = calibrate()
+    for _ in range(reps):
+        r = run_workload(cfg)
+        c_next = calibrate()
+        c_here = max(c_prev, c_next)   # this rep's machine-speed estimate
+        c_prev = c_next
+        fingerprints.add((r["ticks"], r["dpu_frac"],
+                          round(r["modeled_us_per_req"], 9)))
+        if res is None or (r["ops_per_s"] / c_here
+                           > res["ops_per_s"] / calib):
+            res, calib = r, c_here
+    deterministic = len(fingerprints) == 1
+    emit(f"getstorm_{mode}", 1e6 / res["ops_per_s"],
+         f"tput={res['ops_per_s']:.0f}op/s "
+         f"modeled={res['modeled_us_per_req']:.2f}us/req "
+         f"dpu_frac={res['dpu_frac']:.3f} deterministic={deterministic}")
+
+    doc = load_json()
+    doc["configs"] = CONFIGS
+    res = {**res, "config": cfg, "deterministic": deterministic}
+    entry = {"calibration_ops_per_s": calib, mode: res}
+    if record:
+        doc.setdefault(record, {})["calibration_ops_per_s"] = calib
+        doc[record][mode] = res
+        print(f"# recorded {mode} measurement into '{record}'")
+    doc["last_run"] = {"mode": mode, **entry}
+    base, cur = doc.get("baseline", {}), doc.get("current", {})
+    if base.get("full") and cur.get("full"):
+        b = base["full"]["ops_per_s"] / base["calibration_ops_per_s"]
+        c = cur["full"]["ops_per_s"] / cur["calibration_ops_per_s"]
+        doc["speedup_full_calibrated"] = round(c / b, 3)
+        doc["speedup_full_raw"] = round(cur["full"]["ops_per_s"]
+                                        / base["full"]["ops_per_s"], 3)
+    save_json(doc)
+
+    def gate_ref(sec: dict, which: str):
+        """Recorded numbers are only comparable on the SAME workload."""
+        ref = sec.get(which)
+        if ref and ref.get("config") != cfg:
+            print(f"# recorded {which} numbers used a different workload "
+                  f"config; gate skipped — re-record with the new config")
+            return None
+        return ref
+
+    failures = []
+    if res["dpu_frac"] < DPU_FRAC_GATE:
+        failures.append(f"storm left the offloaded path: dpu_frac "
+                        f"{res['dpu_frac']:.3f} < {DPU_FRAC_GATE}")
+    if not deterministic:
+        failures.append("same-seed reps diverged (ticks / dpu_frac / "
+                        "modeled time) — determinism gate")
+    if not smoke and not record:
+        base = doc.get("baseline", {})
+        ref = gate_ref(base, "full")
+        if ref:
+            scale = calib / base["calibration_ops_per_s"]
+            target = ref["ops_per_s"] * scale * FULL_SPEEDUP_GATE
+            ok = res["ops_per_s"] >= target
+            print(f"# speedup vs baseline (calibrated): "
+                  f"{res['ops_per_s'] / (ref['ops_per_s'] * scale):.2f}x "
+                  f"(gate {FULL_SPEEDUP_GATE:.1f}x) -> {'OK' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"GET storm below {FULL_SPEEDUP_GATE}x baseline: "
+                    f"{res['ops_per_s']:.0f} < {target:.0f} op/s")
+            drift = (abs(res["modeled_us_per_req"] - ref["modeled_us_per_req"])
+                     / max(ref["modeled_us_per_req"], 1e-12))
+            ok = drift < DRIFT_GATE
+            print(f"# modeled-time drift vs baseline: {drift * 100:.2f}% "
+                  f"(gate <{DRIFT_GATE * 100:.0f}%) -> "
+                  f"{'OK' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"modeled us/req drifted {drift * 100:.1f}% from "
+                    f"baseline (vectorization must not change the model)")
+        else:
+            print("# no recorded baseline; speedup/drift gates skipped")
+    if smoke and not record:
+        cur = doc.get("current", {})
+        ref = gate_ref(cur, "smoke")
+        if ref:
+            scale = calib / cur["calibration_ops_per_s"]
+            target = ref["ops_per_s"] * scale * SMOKE_REGRESSION_GATE
+            ok = res["ops_per_s"] >= target
+            print(f"# smoke vs recorded current (calibrated): "
+                  f"{res['ops_per_s'] / (ref['ops_per_s'] * scale):.2f}x "
+                  f"(gate {SMOKE_REGRESSION_GATE:.2f}x) -> "
+                  f"{'OK' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"GET storm regressed >30% vs recorded current: "
+                    f"{res['ops_per_s']:.0f} < {target:.0f} op/s")
+        else:
+            print("# no recorded current numbers; gate skipped")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Micro A/B harnesses: scalar reference loops vs vectorized kernels.
+
+Not part of the CI gates — these exist for fast local iteration on the
+array-at-a-time kernels in ``repro.core.vector`` without paying for a
+full cluster benchmark run.  ``python -m benchmarks.micro.kernels_ab``.
+"""

@@ -1,0 +1,164 @@
+"""Scalar vs vectorized kernel A/B: probe, decode, pack, checksum.
+
+Each pair times the pure-Python per-item loop the data plane ran before
+the vectorization PR (A) against the array-at-a-time kernel it runs now
+(B), on identical inputs, and asserts the outputs agree before printing
+the ratio.  Rows follow the repo-wide ``name,us_per_call,derived``
+format so output diffs cleanly against ``benchmarks/run.py``.
+
+Usage::
+
+    python -m benchmarks.micro.kernels_ab            # default burst sizes
+    python -m benchmarks.micro.kernels_ab 64 1024    # specific burst sizes
+
+This is a local iteration tool, not a CI gate: absolute numbers are
+host-dependent, only the A/B ratio on one host is meaningful.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import sys
+
+# Mirror run.py: allow `python benchmarks/micro/kernels_ab.py` too.
+_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import numpy as np
+
+from benchmarks.common import emit, section, timeit
+from repro.core import vector
+from repro.core.cache_table import CacheTable
+
+_HDR = struct.Struct("<I")
+
+
+def _ab(name: str, n: int, scalar_fn, vector_fn, check=None) -> None:
+    if check is not None:
+        check()
+    a = timeit(scalar_fn, n=n)
+    b = timeit(vector_fn, n=n)
+    emit(name, b, f"scalar {a:.2f}us -> vector {b:.2f}us ({a / b:.2f}x)")
+
+
+def bench_probe(burst: int) -> None:
+    """Cache-table probe: per-key lookup loop vs ``lookup_many``."""
+    table = CacheTable(max_items=4 * burst)
+    keys = [b"key-%06d" % i for i in range(burst)]
+    for i, k in enumerate(keys):
+        table.insert(k, i)
+
+    want = list(range(burst))
+
+    def scalar():
+        return [table.lookup(k) for k in keys]
+
+    def vectorized():
+        return table.lookup_many(keys)
+
+    def check():
+        assert scalar() == want and vectorized() == want
+
+    _ab(f"probe_{burst}", max(2000 // burst, 20), scalar, vectorized, check)
+
+
+def bench_hash(burst: int) -> None:
+    """Key hashing alone: per-key splitmix64 vs one mixed array."""
+    keys = [b"key-%06d" % i for i in range(burst)]
+    raw = [hash(k) & vector.MASK64 for k in keys]
+
+    def scalar():
+        return [vector.scalar_mix(r) for r in raw]
+
+    def vectorized():
+        return vector.hash_keys(keys)
+
+    def check():
+        assert scalar() == list(vector.hash_keys(keys))
+
+    _ab(f"hash_{burst}", max(4000 // burst, 50), scalar, vectorized, check)
+
+
+def bench_decode(burst: int, payload: int = 64) -> None:
+    """Frame decode: greedy length-word walk vs uniform-stride proof."""
+    msgs = [bytes([i & 0xFF]) * payload for i in range(burst)]
+    blob = b"".join(_HDR.pack(len(m)) + m for m in msgs)
+
+    def scalar():
+        out, off, total = [], 0, len(blob)
+        while off + 4 <= total:
+            ln = _HDR.unpack_from(blob, off)[0]
+            if off + 4 + ln > total:
+                break
+            out.append(blob[off + 4:off + 4 + ln])
+            off += 4 + ln
+        return out
+
+    def vectorized():
+        got = vector.uniform_stride(blob, 4)
+        assert got is not None
+        n, stride, ln = got
+        a = np.frombuffer(blob, dtype=np.uint8,
+                          count=n * stride).reshape(n, stride)
+        return a[:, 4:]   # columnar payload view, zero per-frame Python
+
+    def check():
+        assert scalar() == [bytes(r) for r in vectorized()]
+
+    _ab(f"decode_{burst}", max(2000 // burst, 20), scalar, vectorized, check)
+
+
+def bench_pack(burst: int, payload: int = 64) -> None:
+    """Frame encode: 2n-fragment join vs batch header scatter."""
+    msgs = [bytes([i & 0xFF]) * payload for i in range(burst)]
+
+    def scalar():
+        return b"".join(_HDR.pack(len(m)) + m for m in msgs)
+
+    def vectorized():
+        return vector.pack_frames(msgs)
+
+    def check():
+        assert scalar() == bytes(vectorized())
+
+    _ab(f"pack_{burst}", max(2000 // burst, 20), scalar, vectorized, check)
+
+
+def bench_checksum(nbytes: int) -> None:
+    """Writev integrity checksum: per-word Python fold vs one numpy pass."""
+    data = np.random.default_rng(7).integers(
+        0, 256, size=nbytes, dtype=np.uint8).tobytes()
+
+    def scalar():
+        return vector.checksum64_scalar(data)
+
+    def vectorized():
+        return vector.checksum64(data)
+
+    def check():
+        assert scalar() == vectorized()
+
+    _ab(f"checksum_{nbytes}B", max(200_000 // nbytes, 5),
+        scalar, vectorized, check)
+
+
+def main() -> None:
+    bursts = [int(a) for a in sys.argv[1:]] or [32, 256, 2048]
+    section("kernel A/B: scalar loop vs array-at-a-time (same inputs)")
+    for n in bursts:
+        bench_probe(n)
+    for n in bursts:
+        bench_hash(n)
+    for n in bursts:
+        bench_decode(n)
+    for n in bursts:
+        bench_pack(n)
+    for n in bursts:
+        bench_checksum(n * 64)
+
+
+if __name__ == "__main__":
+    main()

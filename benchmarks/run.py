@@ -24,9 +24,9 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 from benchmarks import (compare, fig14_16_model, fig17_rings,
                         fig18_23_zerocopy, fig22_cache_table,
                         fig24_26_integration, fig_cluster_scaling,
-                        fig_failover, fig_hotpath, fig_latency,
-                        fig_scaleout, fig_tenancy, fig_writepath,
-                        kernels_bench, roofline)
+                        fig_failover, fig_getstorm, fig_hotpath,
+                        fig_latency, fig_scaleout, fig_tenancy,
+                        fig_writepath, kernels_bench, roofline)
 
 MODULES = {
     "cluster": fig_cluster_scaling,
@@ -36,6 +36,7 @@ MODULES = {
     "latency": fig_latency,
     "tenancy": fig_tenancy,
     "failover": fig_failover,
+    "getstorm": fig_getstorm,
     "fig14_16": fig14_16_model,
     "fig17": fig17_rings,
     "fig18_23": fig18_23_zerocopy,

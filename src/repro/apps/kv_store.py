@@ -30,7 +30,9 @@ import struct
 from dataclasses import dataclass, field
 from typing import NamedTuple
 
-from repro.core import wire
+import numpy as np
+
+from repro.core import vector, wire
 from repro.core.client import ClusterClient
 from repro.core.dds_server import APP_RESP_HDR, ServerConfig, decode_batch
 from repro.core.offload import OffloadAPI, ReadOp, WriteOp
@@ -176,6 +178,17 @@ class ShardedKVStore:
     # -- Table 1 functions, closed over one shard's state ---------------------------
     def _api_for(self, shard: int) -> OffloadAPI:
         st = self._states[shard]
+        # Single-probe handoff: the predicate's burst probe already resolved
+        # every DPU-bound GET, so its results ride to ``prepare_read_many``
+        # keyed by message identity (the SAME view objects flow demux ->
+        # fair queue -> engine).  Entries hold (msg, loc): the reference
+        # keeps the view alive, so an id() can never be reused while its
+        # entry exists, and the ``is`` check at pop time makes a hit exact.
+        # ``epoch`` guards staleness — ANY table mutation between probe and
+        # use invalidates the memo and the engine re-probes, preserving
+        # scalar re-probe semantics bit-for-bit.
+        probe_memo: dict[int, tuple] = {}
+        memo_state = [-1]   # table.epoch the memo entries were probed at
 
         def off_pred(payload: bytes, table) -> tuple[list[bytes], list[bytes]]:
             """Route a network batch: cached GETs -> DPU, the rest -> host.
@@ -184,8 +197,52 @@ class ShardedKVStore:
             :meth:`~repro.core.cache_table.CacheTable.lookup_many` burst
             (single stats round) instead of a lock/stats round per key;
             relative message order within each output list is preserved
-            (PUT-then-DEL of one key must reach the host in order)."""
-            msgs = decode_batch(payload)
+            (PUT-then-DEL of one key must reach the host in order).
+
+            A uniform all-GET batch (one key size repeated — the GET-storm
+            shape) is routed columnar: the opcode and klen columns are
+            checked with two array compares, keys are sliced at fixed
+            strides, and only the key materialization and the burst probe
+            remain per-message work."""
+            mv = payload if isinstance(payload, memoryview) \
+                else memoryview(payload)
+            end = len(mv)
+            if table is not None and end >= 512:
+                u = vector.uniform_stride(mv, 4, 0, min_frames=20)
+                if u is not None and u[0] * u[1] == end:
+                    cnt, stride, _ = u
+                    a = np.frombuffer(mv, dtype=np.uint8,
+                                      count=end).reshape(cnt, stride)
+                    # frame offset 4 = opcode; 13..17 = GET_HDR klen word
+                    if (a[:, 4] == KV_GET).all() \
+                            and (a[:, 13:17] == a[0, 13:17]).all():
+                        klen = int.from_bytes(mv[13:17], "little")
+                        k0 = 4 + GET_HDR.size
+                        if k0 + klen <= stride:
+                            keys = [bytes(mv[i * stride + k0:
+                                             i * stride + k0 + klen])
+                                    for i in range(cnt)]
+                            hits = table.lookup_many(keys)
+                            msgs = [mv[i * stride + 4:(i + 1) * stride]
+                                    for i in range(cnt)]
+                            ep = table.epoch
+                            if ep != memo_state[0] \
+                                    or len(probe_memo) > 16384:
+                                probe_memo.clear()
+                                memo_state[0] = ep
+                            if all(h is not None for h in hits):
+                                for m, h in zip(msgs, hits):
+                                    probe_memo[id(m)] = (m, h)
+                                return [], msgs
+                            host, dpu = [], []
+                            for m, h in zip(msgs, hits):
+                                if h is not None:
+                                    probe_memo[id(m)] = (m, h)
+                                    dpu.append(m)
+                                else:
+                                    host.append(m)
+                            return host, dpu
+            msgs = decode_batch(mv)
             # decode_batch hands out memoryviews; the cache table needs a
             # hashable key, so materialize ONLY the keys.
             keys = []
@@ -227,6 +284,93 @@ class ShardedKVStore:
                 return None
             return (ReadOp(loc.file_id, loc.offset, loc.size),
                     APP_RESP_HDR.pack(rid, wire.E_OK, loc.size))
+
+        def prepare_read_many(msgs: list, table) -> list:
+            """Burst form of ``prepare_read``: ONE ``lookup_many`` probe
+            covers every GET the offload engine pulled this step (the
+            engine previously re-probed the table once per request on top
+            of the predicate's burst probe — the single hottest scalar
+            loop on the offloaded-GET path).
+
+            Uniform bursts (every message a GET of one frame size — the
+            storm shape) decode columnar: one join, one structured-dtype
+            view for the rid/klen columns, and one preassembled response-
+            header arena instead of a ``Struct.pack`` per request."""
+            hdr = GET_HDR.size
+            n = len(msgs)
+            keys: list = []
+            if table is not None and n >= 8:
+                ln = len(msgs[0])
+                if ln > hdr and all(len(m) == ln for m in msgs):
+                    buf = b"".join(msgs)
+                    cols = np.frombuffer(buf, dtype={
+                        "names": ["op", "rid", "klen"],
+                        "formats": ["u1", "<u8", "<u4"],
+                        "offsets": [0, 1, 9], "itemsize": ln})
+                    if ((cols["op"] == KV_GET).all()
+                            and (cols["klen"] == ln - hdr).all()):
+                        end = n * ln
+                        # Batch-pack the OK response headers: fill the rid /
+                        # status / nbytes columns of one arena, then slice.
+                        arena = np.zeros(n, dtype={
+                            "names": ["rid", "status", "nbytes"],
+                            "formats": ["<u8", "<u4", "<u4"],
+                            "offsets": [0, 8, 12], "itemsize": 16})
+                        arena["rid"] = cols["rid"]
+                        arena["status"] = wire.E_OK
+                        locs = None
+                        if probe_memo and table.epoch == memo_state[0]:
+                            # Predicate probe still valid: consume it.  The
+                            # memo holds only HITS, so the miss branches
+                            # vanish from the fill below.
+                            locs = []
+                            pop = probe_memo.pop
+                            for m in msgs:
+                                e = pop(id(m), None)
+                                if e is None or e[0] is not m:
+                                    locs = None
+                                    break
+                                locs.append(e[1])
+                        # KVLocation IS the read op (same file_id / offset /
+                        # size fields the engine reads): returning it
+                        # directly skips a per-request ReadOp construction.
+                        if locs is not None:
+                            arena["nbytes"] = [l.size for l in locs]
+                            ab = arena.tobytes()
+                            return [(l, ab[i16:i16 + 16])
+                                    for l, i16 in zip(
+                                        locs, range(0, 16 * n, 16))]
+                        keys = [buf[o + hdr:o + ln]
+                                for o in range(0, end, ln)]
+                        locs = table.lookup_many(keys)
+                        arena["nbytes"] = [0 if l is None else l.size
+                                           for l in locs]
+                        ab = arena.tobytes()
+                        return [None if loc is None else
+                                (loc, ab[i16:i16 + 16])
+                                for loc, i16 in zip(locs,
+                                                    range(0, 16 * n, 16))]
+            metas: list = []
+            for m in msgs:
+                if m and m[0] == KV_GET:
+                    _, rid, klen = GET_HDR.unpack_from(m, 0)
+                    keys.append(bytes(m[hdr:hdr + klen]))
+                    metas.append(rid)
+                else:
+                    metas.append(None)
+            locs = iter(table.lookup_many(keys)) if (table is not None
+                                                     and keys) else iter(())
+            pack = APP_RESP_HDR.pack
+            ok = wire.E_OK
+            out: list = []
+            for rid in metas:
+                if rid is None:
+                    out.append(None)
+                    continue
+                loc = next(locs)
+                out.append(None if loc is None else
+                           (loc, pack(rid, ok, loc.size)))
+            return out
 
         def cache(op: WriteOp) -> list[tuple[object, object]]:
             if op.file_id != st.log_fid:
@@ -336,6 +480,7 @@ class ShardedKVStore:
                           response_header=response_header,
                           host_handler=host_handler,
                           prepare_read=prepare_read,
+                          prepare_read_many=prepare_read_many,
                           # Lifecycle classifier: GETs are reads; PUT/DEL
                           # are writes (mutations) in the latency stats.
                           read_types=frozenset({KV_GET}))

@@ -25,6 +25,25 @@ Readers proceed without taking the writer lock: buckets are versioned with a
 seqlock (even = stable); a reader retries if the version moved under it.
 Writers (file service) serialize on a single mutex — there is exactly one
 file-service writer thread in DDS, so this is not a scalability limit.
+
+Backing-store layout (the vectorized data plane): fingerprints, versions
+and chain occupancy live in flat contiguous numpy arrays —
+
+  * ``_keys_np``   uint64, shape (nbuckets * slots,): slot fingerprints,
+    ``_EMPTY`` marks a free slot; bucket ``b`` owns ``[b*slots, (b+1)*slots)``.
+  * ``_fulls_np`` / ``_vals_np``  object, same shape: the full keys and the
+    cached values (object refs; gathers are C loops, not interpreter loops).
+  * ``_versions_np`` uint64, shape (nbuckets,): the seqlock word per bucket.
+  * ``_chain_np``  int64, shape (nbuckets,): overflow-chain population, so a
+    burst can prove "no chain to consult" array-wise.
+
+Scalar probes still walk plain Python list mirrors (``_keys`` etc.) — a
+single-element numpy index costs a boxing per probe, ~10x a list index —
+so every writer mutation updates BOTH stores inside the same seqlock-odd
+window.  The seqlock-over-arrays rule for vectorized readers: gather the
+version column, gather whatever else you need, gather the version column
+again — a burst element is trusted only if both snapshots are equal and
+even; everything else retries on the scalar path.
 """
 
 from __future__ import annotations
@@ -33,6 +52,10 @@ import threading
 from dataclasses import asdict, dataclass
 from typing import Any, Iterator
 
+import numpy as np
+
+from repro.core import vector
+
 _EMPTY = 0xFFFFFFFFFFFFFFFF
 _MASK64 = 0xFFFFFFFFFFFFFFFF
 
@@ -40,7 +63,8 @@ _MASK64 = 0xFFFFFFFFFFFFFFFF
 # arithmetic: the table sits on BOTH hot paths (a lookup per directed
 # request in the offload predicate, an insert per cache-on-write), where a
 # numpy-scalar mix — ufunc dispatch + an errstate context manager per call —
-# cost ~10x the hash itself.
+# cost ~10x the hash itself.  ``vector.mix64`` is the bit-identical batch
+# form used by ``lookup_many``.
 _M1 = 0xBF58476D1CE4E5B9
 _M2 = 0x94D049BB133111EB
 
@@ -57,6 +81,14 @@ def _mix(x: int, seed: int) -> int:
     return x
 
 
+# Bursts shorter than this stay on the scalar path: the fixed cost of the
+# vectorized probe (a dozen ufunc dispatches) only amortizes past it.
+# Burst size below which the scalar probe loop beats the vectorized one
+# (fixed numpy dispatch cost vs ~2us/key scalar work; crossover measured
+# at ~44-48 keys by benchmarks/micro/kernels_ab.py on CPython 3.11).
+_VEC_MIN = 48
+
+
 @dataclass
 class CacheTableStats:
     inserts: int = 0
@@ -67,6 +99,7 @@ class CacheTableStats:
     chain_inserts: int = 0
     full_rejections: int = 0
     batched_lookups: int = 0   # lookup_many bursts served
+    locked_probes: int = 0     # seqlock retry budget exhausted -> locked read
 
     def as_dict(self) -> dict:
         """Plain-dict snapshot for app-level stats surfaces (e.g. the KV
@@ -99,9 +132,24 @@ class CacheTable:
         self._full_keys: list[list[Any]] = [[None] * slots_per_bucket for _ in range(nbuckets)]
         self._chains: list[dict[Any, Any]] = [dict() for _ in range(nbuckets)]
         self._versions = [0] * nbuckets  # seqlock (even = stable)
+        # Flat contiguous mirrors for the vectorized burst path (layout in
+        # the module docstring).  Writers keep both stores coherent inside
+        # one seqlock-odd window.
+        self._keys_np = np.full(nbuckets * slots_per_bucket, _EMPTY,
+                                dtype=np.uint64)
+        self._fulls_np = np.empty(nbuckets * slots_per_bucket, dtype=object)
+        self._vals_np = np.empty(nbuckets * slots_per_bucket, dtype=object)
+        self._versions_np = np.zeros(nbuckets, dtype=np.uint64)
+        self._chain_np = np.zeros(nbuckets, dtype=np.int64)
+        self._slot_iota = np.arange(slots_per_bucket, dtype=np.int64)
         self._count = 0
         self._wlock = threading.Lock()
         self.stats = CacheTableStats()
+        # Mutation epoch: bumped on every bucket write window.  Lets callers
+        # that probed a batch earlier in the SAME scheduling step (the
+        # offload predicate) reuse their results iff nothing changed since,
+        # instead of paying a second full probe per burst.
+        self.epoch = 0
 
     # -- hashing ---------------------------------------------------------------
     def _hash_key(self, key: Any) -> int:
@@ -122,9 +170,17 @@ class CacheTable:
         return b1, b2
 
     # -- read path (lock-free via seqlock) --------------------------------------
-    def lookup(self, key: Any) -> Any | None:
-        self.stats.lookups += 1
-        hk = self._hash_key(key)
+    def _lookup_one(self, key: Any, hk: int) -> tuple[bool, Any]:
+        """Authoritative single-key probe; shared by ``lookup`` and the
+        ``lookup_many`` fallback.  Does NOT touch stats (callers fold).
+
+        The value is bound ONLY under the version-stable check — an
+        unstable probe can never leak a value from a bucket a writer was
+        mid-mutation in.  If the seqlock retry budget runs dry (a writer
+        spinning on this bucket), the probe falls back to a brief LOCKED
+        read instead of reporting a false miss: present keys stay present
+        under any writer schedule.
+        """
         versions = self._versions
         for b in self._buckets_for(hk):
             for _ in range(64):  # seqlock retry budget
@@ -134,50 +190,123 @@ class CacheTable:
                 found, val = self._probe(b, hk, key)
                 if versions[b] == v0:
                     if found:
-                        self.stats.hits += 1
-                        return val
-                    break
+                        return True, val   # version-stable hit
+                    break                  # version-stable miss here
+            else:
+                # Budget exhausted with the writer still live: take the
+                # writer lock for one authoritative probe rather than
+                # treating "couldn't read" as "absent".
+                with self._wlock:
+                    found, val = self._probe(b, hk, key)
+                self.stats.locked_probes += 1
+                if found:
+                    return True, val
+        return False, None
+
+    def lookup(self, key: Any) -> Any | None:
+        self.stats.lookups += 1
+        found, val = self._lookup_one(key, self._hash_key(key))
+        if found:
+            self.stats.hits += 1
+            return val
         return None
 
     def lookup_many(self, keys: list) -> list:
-        """Burst lookup: one stats round for the whole batch.
+        """Burst lookup: ONE vectorized probe for the whole batch.
 
         The director's offload predicate probes the table once per message
-        of a network batch; the per-call stats updates (and per-call
-        attribute traffic) of :meth:`lookup` are pure overhead there, so
-        this walks the burst with everything hoisted and folds
-        ``lookups``/``hits`` into the stats ONCE.  Returns one value (or
-        ``None``) per key, in key order; the read path stays lock-free via
-        the same per-bucket seqlock retry."""
-        out: list = []
-        hits = 0
-        versions = self._versions
-        hash_key = self._hash_key
-        buckets_for = self._buckets_for
-        probe = self._probe
-        for key in keys:
-            hk = hash_key(key)
-            val = None
-            for b in buckets_for(hk):
-                hit = False
-                for _ in range(64):  # seqlock retry budget
-                    v0 = versions[b]
-                    if v0 & 1:
-                        continue  # writer active in this bucket
-                    found, v = probe(b, hk, key)
-                    if versions[b] == v0:
-                        hit = found  # ONLY version-stable reads are trusted
-                        break
-                if hit:
-                    val = v
-                    hits += 1
-                    break
-            out.append(val)
+        of a network batch.  The burst is resolved array-at-a-time — one
+        splitmix mix, a two-bucket fingerprint gather and an equality
+        reduce over the flat backing store — with the seqlock honored
+        array-wise: the version column is gathered before and after the
+        data gathers, and only elements whose buckets were even-and-equal
+        in both snapshots are trusted.  Unstable elements, fingerprint
+        collisions and chained buckets retry on the scalar path
+        (:meth:`_lookup_one`), which also shields them from writer
+        starvation via the locked-probe fallback.  Returns one value (or
+        ``None``) per key, in key order; stats fold once per burst.
+        """
+        n = len(keys)
         st = self.stats
-        st.lookups += len(keys)
-        st.hits += hits
+        st.lookups += n
         st.batched_lookups += 1
-        return out
+        if n < _VEC_MIN:
+            hits = 0
+            out: list = []
+            hash_key = self._hash_key
+            lookup_one = self._lookup_one
+            for key in keys:
+                found, val = lookup_one(key, hash_key(key))
+                out.append(val if found else None)
+                hits += found
+            st.hits += hits
+            return out
+
+        hk = vector.hash_keys(keys)
+        mask = np.uint64(self._mask)
+        b1 = (hk & mask).astype(np.int64)
+        b2 = ((hk >> np.uint64(32)) & mask).astype(np.int64)
+        same = b1 == b2
+        if same.any():
+            b2[same] = (b1[same] + 1) & self._mask
+        slots = self.slots
+        vnp = self._versions_np
+        knp = self._keys_np
+        # Seqlock over arrays: version snapshot -> data gathers -> version
+        # snapshot.  (CPython bytecode boundaries give the same atomicity
+        # the scalar reader relies on.)
+        v0_1 = vnp[b1]
+        v0_2 = vnp[b2]
+        rows1 = knp[(b1 * slots)[:, None] + self._slot_iota]
+        rows2 = knp[(b2 * slots)[:, None] + self._slot_iota]
+        eq1 = rows1 == hk[:, None]
+        eq2 = rows2 == hk[:, None]
+        hit1 = eq1.any(axis=1)
+        hit2 = eq2.any(axis=1)
+        chained = (self._chain_np[b1] > 0) | (self._chain_np[b2] > 0)
+        # Candidate hits: gather full keys + values for fingerprint matches
+        # (object gathers are C loops over refs, not interpreter loops).
+        only1 = hit1 & ~hit2
+        flat = np.where(only1, b1 * slots + eq1.argmax(axis=1),
+                        b2 * slots + eq2.argmax(axis=1))
+        cand = only1 | (hit2 & ~hit1)
+        cidx = np.nonzero(cand)[0]
+        if cidx.size:
+            cfulls = self._fulls_np[flat[cidx]]
+            cvals = self._vals_np[flat[cidx]]
+        # Close the seqlock window AFTER every data gather.
+        v1_1 = vnp[b1]
+        v1_2 = vnp[b2]
+        one = np.uint64(1)
+        stable = ((v0_1 == v1_1) & (v0_2 == v1_2)
+                  & ((v0_1 & one) == 0) & ((v0_2 & one) == 0))
+        out_np = np.empty(n, dtype=object)
+        hits = 0
+        resolved_hit = np.zeros(n, dtype=bool)
+        if cidx.size:
+            ckeys = np.empty(cidx.size, dtype=object)
+            ckeys[:] = [keys[i] for i in cidx]
+            good = (cfulls == ckeys) & stable[cidx]
+            gsel = cidx[good]
+            out_np[gsel] = cvals[good]
+            resolved_hit[gsel] = True
+            hits += int(good.sum())
+        # Resolved misses: stable, no fingerprint match, no chain to consult.
+        # Everything else — unstable buckets, fingerprint collisions (full
+        # key mismatched), double-bucket matches, chained buckets — retries
+        # on the scalar path.
+        resolved_miss = stable & ~hit1 & ~hit2 & ~chained
+        fallback = np.nonzero(~(resolved_hit | resolved_miss))[0]
+        if fallback.size:
+            lookup_one = self._lookup_one
+            for i in fallback:
+                i = int(i)
+                found, val = lookup_one(keys[i], int(hk[i]))
+                if found:
+                    out_np[i] = val
+                    hits += 1
+        st.hits += hits
+        return out_np.tolist()
 
     def _probe(self, b: int, hk: int, key: Any) -> tuple[bool, Any]:
         row = self._keys[b]
@@ -198,10 +327,24 @@ class CacheTable:
 
     # -- write path (single writer: the file service) ---------------------------
     def _bucket_begin(self, b: int) -> None:
+        # Both version stores go odd BEFORE either data store is touched.
+        self.epoch += 1
+        self._versions_np[b] += 1
         self._versions[b] += 1  # odd: writer active
 
     def _bucket_end(self, b: int) -> None:
         self._versions[b] += 1  # even: stable
+        self._versions_np[b] += 1
+
+    def _set_slot(self, b: int, s: int, hk: int, key: Any, value: Any) -> None:
+        """Mutate one in-line slot in BOTH backing stores (seqlock held odd)."""
+        self._keys[b][s] = hk
+        self._full_keys[b][s] = key
+        self._vals[b][s] = value
+        flat = b * self.slots + s
+        self._keys_np[flat] = hk
+        self._fulls_np[flat] = key
+        self._vals_np[flat] = value
 
     def insert(self, key: Any, value: Any) -> bool:
         """Insert or update.  Returns False iff the table is at capacity."""
@@ -218,6 +361,7 @@ class CacheTable:
                     if k == hk and full[s] == key:
                         self._bucket_begin(b)
                         self._vals[b][s] = value
+                        self._vals_np[b * self.slots + s] = value
                         self._bucket_end(b)
                         self.stats.inserts += 1
                         return True
@@ -243,13 +387,17 @@ class CacheTable:
                 self._count += 1
                 self.stats.inserts += 1
                 return True
-            self._bucket_begin(b1)
-            self._chains[b1][key] = value
-            self._bucket_end(b1)
+            self._chain_put(b1, key, value)
             self.stats.chain_inserts += 1
             self._count += 1
             self.stats.inserts += 1
             return True
+
+    def _chain_put(self, b: int, key: Any, value: Any) -> None:
+        self._bucket_begin(b)
+        self._chains[b][key] = value
+        self._chain_np[b] = len(self._chains[b])
+        self._bucket_end(b)
 
     def _free_slot(self, b: int) -> int | None:
         row = self._keys[b]
@@ -260,9 +408,7 @@ class CacheTable:
 
     def _place(self, b: int, s: int, hk: int, key: Any, value: Any) -> None:
         self._bucket_begin(b)
-        self._keys[b][s] = hk
-        self._full_keys[b][s] = key
-        self._vals[b][s] = value
+        self._set_slot(b, s, hk, key, value)
         self._bucket_end(b)
 
     def _kick_insert(self, b: int, hk: int, key: Any, value: Any,
@@ -285,9 +431,7 @@ class CacheTable:
             cur = (nb, vk, vfk, vv)
         # Could not re-home the last victim: chain it in its bucket.
         b, hk, key, value = cur
-        self._bucket_begin(b)
-        self._chains[b][key] = value
-        self._bucket_end(b)
+        self._chain_put(b, key, value)
         self.stats.chain_inserts += 1
         return True
 
@@ -301,9 +445,7 @@ class CacheTable:
                 for s in range(self.slots):
                     if row[s] == hk and full[s] == key:
                         self._bucket_begin(b)
-                        row[s] = _EMPTY
-                        full[s] = None
-                        self._vals[b][s] = None
+                        self._set_slot(b, s, _EMPTY, None, None)
                         self._bucket_end(b)
                         self._count -= 1
                         self.stats.deletes += 1
@@ -311,6 +453,7 @@ class CacheTable:
                 if key in self._chains[b]:
                     self._bucket_begin(b)
                     del self._chains[b][key]
+                    self._chain_np[b] = len(self._chains[b])
                     self._bucket_end(b)
                     self._count -= 1
                     self.stats.deletes += 1

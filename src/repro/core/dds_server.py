@@ -23,7 +23,9 @@ import struct
 import threading
 from dataclasses import dataclass, field
 
-from repro.core import wire
+import numpy as np
+
+from repro.core import vector, wire
 from repro.core.cache_table import CacheTable
 from repro.core.file_service import FileServiceRunner, SegmentFS
 from repro.core.host_lib import DDSFrontEnd
@@ -61,7 +63,16 @@ def encode_app_write(req_id: int, file_id: int, offset: int, data) -> bytes:
 
 
 def encode_batch(msgs: list[bytes]) -> bytes:
-    """Batch several app messages into one network message (§6.1 batching)."""
+    """Batch several app messages into one network message (§6.1 batching).
+
+    The generator join is the fast encode kernel on CPython: the
+    array-at-a-time pack (:func:`repro.core.vector.pack_frames`) only
+    reaches parity around 4096 uniform frames (crossover measured by
+    ``benchmarks/micro/kernels_ab.py``), so it is reserved for bursts of
+    that scale and the join keeps every realistic batch.
+    """
+    if len(msgs) >= 4096:
+        return bytes(vector.pack_frames(msgs))
     return b"".join(struct.pack("<I", len(m)) + m for m in msgs)
 
 
@@ -75,9 +86,20 @@ def decode_batch(payload) -> list[memoryview]:
     unpack in place (``Struct.unpack_from`` accepts views) and payload bytes
     are never duplicated on the decode path.  Callers that need a hashable
     key (cache-table lookups) convert just that field with ``bytes(...)``.
+
+    A large fixed-stride batch is proven uniform with one array compare
+    (:func:`repro.core.vector.uniform_stride`) and sliced columnar — no
+    per-message length unpack; anything irregular falls through to the
+    scalar walk.
     """
     mv = payload if isinstance(payload, memoryview) else memoryview(payload)
     out, off, end = [], 0, len(mv)
+    if end >= 512:
+        u = vector.uniform_stride(mv, 4, 0, min_frames=20)
+        if u is not None:
+            cnt, stride, _ = u
+            out = [mv[i * stride + 4:(i + 1) * stride] for i in range(cnt)]
+            off = cnt * stride
     unpack = _BATCH_LEN.unpack_from
     while off < end:
         (n,) = unpack(mv, off)
@@ -102,6 +124,33 @@ def reassemble_responses(rx: bytearray, responses: dict,
     hdr_size = APP_RESP_HDR.size
     unpack = APP_RESP_HDR.unpack_from
     mv = memoryview(rx)
+    if end >= 512:
+        # Uniform-stride fast path: one structured-dtype view decodes the
+        # req-id / status columns for the whole burst (the nbytes word at
+        # offset 12 doubles as the stride proof); payload copies and dict
+        # fills remain per-response, header unpacking does not.  A
+        # trailing partial frame (or a differently-sized tail) falls
+        # through to the scalar walk below.
+        u = vector.uniform_stride(mv, hdr_size, 12, min_frames=20)
+        if u is not None:
+            cnt, stride, nbytes = u
+            cols = np.frombuffer(mv, count=cnt, dtype=np.dtype(
+                {"names": ["rid", "status"], "formats": ["<u8", "<u4"],
+                 "offsets": [0, 8], "itemsize": stride}))
+            rids = cols["rid"].tolist()
+            stats = cols["status"].tolist()
+            del cols   # drop the buffer export before the trim below
+            # ONE strided gather peels every payload out of the burst; the
+            # per-response work shrinks to a C-level bytes slice.
+            blob = np.frombuffer(mv, dtype=np.uint8, count=cnt * stride) \
+                .reshape(cnt, stride)[:, hdr_size:].tobytes()
+            for i, rid in enumerate(rids):
+                s = i * nbytes
+                responses[rid] = (stats[i], blob[s:s + nbytes])
+            if order is not None:
+                order.extend(rids)
+            off = cnt * stride
+            n = cnt
     while end - off >= hdr_size:
         req_id, status, nbytes = unpack(mv, off)
         total = hdr_size + nbytes
@@ -132,13 +181,18 @@ def drain_client_flow(director, resp_flow, rx: bytearray, responses: dict,
         return 0
     release: list[int] = []
     pool = None
+    payloads = []
+    payload_append = payloads.append
     for pkt in pkts:
-        rx += pkt.payload
+        payload_append(pkt.payload)
         ref = pkt.pool_ref
         if ref is not None:   # TX-completion: reclaim the pool block
             pkt.pool_ref = None
             pool = ref[0]
             release.append(ref[1])
+    # One join + one extend: n small bytearray appends would realloc the
+    # rx buffer piecemeal and re-touch its tail n times.
+    rx += b"".join(payloads) if len(payloads) > 1 else payloads[0]
     if release:
         pool.release_many(release)  # one lock round for the whole drain
     reassemble_responses(rx, responses, order)
@@ -146,9 +200,25 @@ def drain_client_flow(director, resp_flow, rx: bytearray, responses: dict,
 
 
 def default_off_pred(payload: bytes, table) -> tuple[list[bytes], list[bytes]]:
-    """The paper's simple example: reads -> DPU, writes -> host (§6.1)."""
+    """The paper's simple example: reads -> DPU, writes -> host (§6.1).
+
+    On a uniform batch the opcode bytes form one strided column; when they
+    are ALL reads (the hot-path shape) the split is decided with a single
+    array compare instead of a per-message branch.
+    """
+    mv = payload if isinstance(payload, memoryview) else memoryview(payload)
+    end = len(mv)
+    if end >= 512:
+        u = vector.uniform_stride(mv, 4, 0, min_frames=20)
+        if u is not None and u[0] * u[1] == end:
+            cnt, stride, _ = u
+            ops = np.frombuffer(mv, dtype=np.uint8,
+                                count=cnt * stride).reshape(cnt, stride)[:, 4]
+            if (ops == APP_READ).all():
+                return [], [mv[i * stride + 4:(i + 1) * stride]
+                            for i in range(cnt)]
     host, dpu = [], []
-    for m in decode_batch(payload):
+    for m in decode_batch(mv):
         if m and m[0] == APP_READ:
             dpu.append(m)
         else:
@@ -209,6 +279,11 @@ class ServerConfig:
     userspace_stack: bool = True             # TLDK vs Linux-on-DPU (Fig 19)
     cache_items: int = 1 << 16
     offload_enabled: bool = True             # False => all requests to host
+    # Requests pulled per engine step (and ingress demux burst).  The
+    # vectorized data plane amortizes its fixed numpy cost over this burst:
+    # raise it for throughput-bound storms, keep the default for
+    # latency-sensitive configs (a pulled request commits to this step).
+    offload_burst: int = 64
     qos: QoSProfile | str = field(default_factory=QoSProfile)
     # Crash consistency: segments reserved for the SegmentFS redo journal
     # (0 disables journaling; silently disabled on devices too small to
@@ -221,6 +296,12 @@ class ServerConfig:
     # Failover detection: ticks of heartbeat silence before the cluster
     # supervisor declares a shard dead and promotes a replica.
     heartbeat_timeout_ticks: int = 16
+    # End-to-end integrity: per-4KiB media checksums on the block device,
+    # refreshed at every write commit (including the torn-writev prefix)
+    # and verified on every read — a corrupted-media read completes E_IO
+    # instead of returning garbage.  Journal records carry their own body
+    # checksum regardless of this knob (replay always verifies).
+    verify_checksums: bool = False
 
     def __post_init__(self):
         if self.journal_segments < 0 or self.replication < 0:
@@ -271,6 +352,8 @@ class DDSStorageServer:
                                   prio_interleave=q.prio_interleave)
         self.device.doorbell = self.signal
         self.device.clock = self.clock
+        if cfg.verify_checksums:
+            self.device.enable_checksums()
         js = cfg.journal_segments
         if cfg.device_capacity // cfg.segment_size < 2 + js:
             js = 0   # device too small for a journal: run unjournaled
@@ -326,6 +409,7 @@ class DDSStorageServer:
         if q.read_write_fence:
             self.offload.busy_files = self.file_service.write_inflight
         self._host_drain_slice = q.host_drain_slice
+        self._offload_burst = cfg.offload_burst
         # The host storage application, adopting the DDS front-end library.
         # Its request rings ring our doorbell on every producer publish.
         self.frontend = DDSFrontEnd(self.file_service, doorbell=self.signal)
@@ -462,8 +546,9 @@ class DDSStorageServer:
         monopolize the step."""
         if self._owns_clock:
             self.clock.tick()
-        work = self.director.step_n(64)   # whole ingress burst, one lock round
-        work += self.offload.step()       # polls device + completes internally
+        burst = self._offload_burst
+        work = self.director.step_n(burst)  # whole ingress burst, 1 lock round
+        work += self.offload.step(burst)  # polls device + completes internally
         if self.replicator is not None:
             work += self.replicator.step()   # forwarded writes + replica acks
         host_work = self.host_app.step(self._host_drain_slice)

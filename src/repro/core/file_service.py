@@ -64,20 +64,25 @@ from repro.core import wire
 from repro.core.lifecycle import TickClock
 from repro.core.ring import (FRAME_HDR, DMAEngine, ProgressiveRing, Region,
                              ResponseRing, frame, unframe_batch)
+from repro.core.vector import checksum64
 from repro.storage.blockdev import STATUS_PENDING, BlockDevice
 
 META_SEGMENT = 0
 
 # ---- redo journal (crash-consistent writes) ---------------------------------
 # Record header: magic(u32) commit(u32) seq(u64) file_id(u32) offset(u64)
-# nbytes(u32) new_size(u64) nsegs(u32), then nsegs * u32 segment ids (the
-# file mapping AT SUBMIT TIME — replay needs no metadata sync), then the
-# run's payload bytes, then an 8-byte zero terminator that clobbers any
-# stale record header behind this one.  ``commit`` is written 0 with the
-# record and flipped to 1 by a separate single-slot device write — the
-# ordered metadata flip that makes the whole run atomic under power loss.
+# nbytes(u32) new_size(u64) nsegs(u32) crc(u64), then nsegs * u32 segment
+# ids (the file mapping AT SUBMIT TIME — replay needs no metadata sync),
+# then the run's payload bytes, then an 8-byte zero terminator that
+# clobbers any stale record header behind this one.  ``commit`` is written
+# 0 with the record and flipped to 1 by a separate single-slot device
+# write — the ordered metadata flip that makes the whole run atomic under
+# power loss.  ``crc`` is :func:`repro.core.vector.checksum64` over the
+# record body (segment ids + payload): replay refuses a committed record
+# whose body no longer matches — a torn/bit-rotted journal replays as
+# garbage otherwise, silently corrupting the file it meant to repair.
 JOURNAL_MAGIC = 0x4A444453          # "SDDJ"
-_JREC = struct.Struct("<IIQIQIQI")
+_JREC = struct.Struct("<IIQIQIQIQ")
 _JCOMMIT_OFF = 4                    # byte offset of ``commit`` in the header
 _JCOMMIT_ONE = (1).to_bytes(4, "little")
 _JTERM = bytes(8)
@@ -137,6 +142,9 @@ class SegmentFS:
         self._journal_pending: dict[int, tuple[int, int]] = {}
         self.journal_replayed_records = 0
         self.journal_replayed_bytes = 0
+        # Committed records whose body failed its checksum at recovery —
+        # each one stopped the replay scan (everything after it is suspect).
+        self.journal_crc_failures = 0
         for s in range(journal_segments):
             self.bitmap[META_SEGMENT + 1 + s] = True
 
@@ -307,6 +315,83 @@ class SegmentFS:
                                     priority=priority)
             pos += n
 
+    def submit_read_many(self, reads: list, priority: bool = False) -> None:
+        """Burst read submission: array-at-a-time address translation.
+
+        ``reads`` items are ``(file_id, offset, size, dest, on_complete)``.
+        The storm shape — many single-segment reads of a few files — is
+        translated with one segment-map gather per file and handed to the
+        device as ONE burst (one tick stamp / doorbell round).  Anything
+        irregular (invalid range, zero size, multi-segment span) falls back
+        to ``submit_read``; pending burst items are flushed first so the
+        device queue order matches a scalar submission loop exactly —
+        completion order, and therefore the modeled clock, are unchanged.
+        """
+        n = len(reads)
+        if n < 4:
+            for fid, off, size, dest, cb in reads:
+                self.submit_read(fid, off, size, dest, cb, priority=priority)
+            return
+        seg_sz = self.segment_size
+        offs = np.fromiter((r[1] for r in reads), dtype=np.int64, count=n)
+        sizes = np.fromiter((r[2] for r in reads), dtype=np.int64, count=n)
+        fid0 = reads[0][0]
+        one_fid = all(r[0] == fid0 for r in reads)
+        if one_fid:
+            # Storm shape: every read targets ONE file (the shard's log) —
+            # translate the whole burst with a single segment-map gather.
+            f = self.files.get(fid0)
+            if f is not None and f.segments:
+                si = offs // seg_sz
+                so = offs - si * seg_sz
+                segarr = np.asarray(f.segments, dtype=np.int64)
+                good = (sizes > 0) & (offs + sizes <= f.size) \
+                    & (so + sizes <= seg_sz)
+                si_safe = np.minimum(si, len(segarr) - 1)  # guard gather
+                phys = segarr[si_safe] * seg_sz + so
+                ok = good
+            else:
+                phys = np.zeros(n, dtype=np.int64)
+                ok = np.zeros(n, dtype=bool)
+            if ok.all():
+                pl = phys.tolist()
+                self.device.submit_read_many(
+                    [(pl[i], r[2], r[3], r[4]) for i, r in enumerate(reads)],
+                    priority=priority)
+                return
+        else:
+            phys = np.zeros(n, dtype=np.int64)
+            ok = np.zeros(n, dtype=bool)
+            by_fid: dict[int, list[int]] = {}
+            for i, r in enumerate(reads):
+                by_fid.setdefault(r[0], []).append(i)
+            for fid, idxs in by_fid.items():
+                f = self.files.get(fid)
+                if f is None or not f.segments:
+                    continue
+                ii = np.asarray(idxs, dtype=np.int64)
+                o = offs[ii]
+                s = sizes[ii]
+                si = o // seg_sz
+                so = o - si * seg_sz
+                segarr = np.asarray(f.segments, dtype=np.int64)
+                good = (s > 0) & (o + s <= f.size) & (so + s <= seg_sz)
+                si_safe = np.minimum(si, len(segarr) - 1)  # guard gather
+                phys[ii] = segarr[si_safe] * seg_sz + so
+                ok[ii] = good
+        dev = self.device
+        pending: list[tuple[int, int, memoryview, Callable[[int], None]]] = []
+        for i, (fid, off, size, dest, cb) in enumerate(reads):
+            if ok[i]:
+                pending.append((int(phys[i]), size, dest, cb))
+            else:
+                if pending:   # keep device queue order identical to scalar
+                    dev.submit_read_many(pending, priority=priority)
+                    pending = []
+                self.submit_read(fid, off, size, dest, cb, priority=priority)
+        if pending:
+            dev.submit_read_many(pending, priority=priority)
+
     def submit_write(self, file_id: int, offset: int, data,
                      on_complete: Callable[[int], None]) -> None:
         try:
@@ -460,8 +545,11 @@ class SegmentFS:
                 self._journal_pending.clear()
         if not self._journal_pending:
             self._journal_tail = pos
+        # Body checksum: one vectorized pass over the logical record body
+        # (mapping + payload), exactly what recovery reads back contiguously.
+        crc = checksum64(seg_blob + b"".join(bufs))
         hdr = _JREC.pack(JOURNAL_MAGIC, 0, self._journal_seq, file_id,
-                         offset, total, f.size, len(f.segments))
+                         offset, total, f.size, len(f.segments), crc)
         lba = self._journal_start + pos
         self.device.submit_writev(lba, [hdr + seg_blob, *bufs, _JTERM])
         self.device.submit_write(lba + _JCOMMIT_OFF, _JCOMMIT_ONE)
@@ -499,16 +587,21 @@ class SegmentFS:
         pos = 0
         prev_seq = 0
         while pos + _JREC.size <= self._journal_len:
-            (magic, commit, seq, fid, off, nbytes, new_size,
-             nsegs) = _JREC.unpack(dev.raw_read(base + pos, _JREC.size))
+            (magic, commit, seq, fid, off, nbytes, new_size, nsegs,
+             crc) = _JREC.unpack(dev.raw_read(base + pos, _JREC.size))
             rec_len = _JREC.size + nsegs * 4 + nbytes + len(_JTERM)
             if (magic != JOURNAL_MAGIC or seq <= prev_seq or not commit
                     or pos + rec_len > self._journal_len):
                 break
-            segs = np.frombuffer(
-                dev.raw_read(base + pos + _JREC.size, nsegs * 4),
-                dtype=np.uint32).tolist()
+            seg_raw = dev.raw_read(base + pos + _JREC.size, nsegs * 4)
             payload = dev.raw_read(base + pos + _JREC.size + nsegs * 4, nbytes)
+            if checksum64(seg_raw + payload) != crc:
+                # Committed but corrupt: replaying it would write garbage
+                # over good data, and every later record is suspect too —
+                # stop the scan and surface the failure.
+                self.journal_crc_failures += 1
+                break
+            segs = np.frombuffer(seg_raw, dtype=np.uint32).tolist()
             self._replay_record(fid, off, nbytes, new_size, segs, payload)
             out["records"] += 1
             out["bytes"] += nbytes
@@ -1108,23 +1201,37 @@ class FileServiceRunner:
         # once (DPU response buffer -> host ring).  TailC advances to the
         # end of the delivered prefix.
         space = g.resp_ring.free_space(self.dma)
-        parts: list = []
         hdr_n = FRAME_HDR.size
-        pack = FRAME_HDR.pack
         used = 0
         take = 0
         last = None
+        sizes: list = []
         for slot in g.ready:
             need = used + hdr_n + slot.size
             if need > space:
                 break
-            parts.append(pack(slot.size))
-            parts.append(self._resp_view(g, slot.off, slot.size))
+            sizes.append(slot.size)
             used = need
             take += 1
             last = slot
         if not take:
             return 0  # host ring full; retry next step
+        # Batch header-fill: every frame-length word of the burst lands in
+        # ONE preallocated header arena with a single array store; the
+        # parts list interleaves arena views with response-buffer views, so
+        # the publish stays one gathered DMA write (and response bytes
+        # still move exactly once).
+        arena = bytearray(take * hdr_n)
+        np.frombuffer(arena, dtype="<u4")[:] = sizes
+        amv = memoryview(arena)
+        parts: list = []
+        i = 0
+        for slot in g.ready:
+            if i >= take:
+                break
+            parts.append(amv[i * hdr_n:(i + 1) * hdr_n])
+            parts.append(self._resp_view(g, slot.off, slot.size))
+            i += 1
         if not g.resp_ring.publish_batch(self.dma, parts, used):
             return 0
         g.tail_c = last.off + last.size

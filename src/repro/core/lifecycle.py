@@ -79,6 +79,11 @@ class TickHistogram:
         c = self.counts
         c[delta] = c.get(delta, 0) + 1
 
+    def add_many(self, delta: int, k: int) -> None:
+        """Fold ``k`` samples of one delta (run-length burst completions)."""
+        c = self.counts
+        c[delta] = c.get(delta, 0) + k
+
     def merge(self, other: "TickHistogram") -> None:
         c = self.counts
         for d, k in other.counts.items():

@@ -83,6 +83,13 @@ class OffloadAPI:
     # header once instead of twice (OffFunc + response_header both unpack).
     prepare_read: Callable[[bytes, CacheTable | None],
                            tuple["ReadOp", bytes] | None] | None = None
+    # Optional BURST form of ``prepare_read``: one call for the whole pull
+    # returning one ``(ReadOp, ok_header) | None`` per request, so an app
+    # can resolve every request of the burst with a single vectorized
+    # cache-table probe (``lookup_many``) instead of a scalar lookup per
+    # request.  Must be side-effect free: the engine may still bounce
+    # individual prepared requests (ring full, read/write fence).
+    prepare_read_many: Callable[[list, CacheTable | None], list] | None = None
     # Lifecycle classifier: the message TYPE BYTES that mean "read", used
     # by the server's LifecycleTracker to split host-path completion-tick
     # histograms into host-read vs write classes (a set probe per message,
@@ -186,15 +193,67 @@ class SlabPool:
             self.allocs += 1
             return off, self._mv[off : off + n]
 
+    def allocate_many(self, count: int, n: int) -> list[tuple[int, memoryview]]:
+        """Burst-allocate up to ``count`` blocks of ``n`` bytes: ONE lock round.
+
+        Returns as many blocks as the freelist/bump region could satisfy
+        without borrowing (possibly fewer than ``count``, possibly empty);
+        callers fall back to per-item ``allocate`` — which may borrow from
+        larger classes — for the remainder, so exhaustion behaviour is
+        unchanged from the scalar path.
+        """
+        if count <= 0 or n <= 0 or n > self.size:
+            return []
+        cls = (n - 1).bit_length() - SLAB_MIN_SHIFT
+        if cls < 0:
+            cls = 0
+        cs = 1 << (SLAB_MIN_SHIFT + cls)
+        mv = self._mv
+        entry = (cls, n)
+        with self._lock:
+            free = self._free[cls]
+            take = min(count, len(free))
+            if take:
+                offs = free[len(free) - take:]
+                del free[len(free) - take:]
+            else:
+                offs = []
+            rem = count - take
+            if rem:
+                base = self._bump
+                carve = min(rem, (self.size - base) // cs)
+                if carve > 0:
+                    offs.extend(range(base, base + carve * cs, cs))
+                    self._bump = base + carve * cs
+            live = self._live
+            for off in offs:
+                live[off] = entry
+            got = len(offs)
+            self._live_committed += cs * got
+            self._live_requested += n * got
+            self.allocs += got
+        return [(off, mv[off : off + n]) for off in offs]
+
     def release(self, off: int, n: int) -> None:
         with self._lock:
             self._release_locked(off)
 
     def release_many(self, offs: list[int]) -> None:
         """Return a burst of blocks under ONE lock round (TX-batch reclaim)."""
+        committed = requested = 0
         with self._lock:
+            live = self._live
+            free = self._free
             for off in offs:
-                self._release_locked(off)
+                entry = live.pop(off, None)
+                if entry is None:
+                    raise ValueError(f"release of unallocated offset {off}")
+                cls, req = entry
+                free[cls].append(off)
+                committed += 1 << (SLAB_MIN_SHIFT + cls)
+                requested += req
+            self._live_committed -= committed
+            self._live_requested -= requested
 
     def _release_locked(self, off: int) -> None:
         entry = self._live.pop(off, None)
@@ -340,9 +399,33 @@ class OffloadEngine:
         off_func = self.api.off_func
         prepare = self.api.prepare_read
         table = self.cache_table
+        # Burst prepare: ONE call (and one vectorized cache-table probe)
+        # resolves the whole pull; the loop below only consumes results.
+        prepare_many = self.api.prepare_read_many
+        prepped_list = None
+        if prepare_many is not None and len(reqs) > 1:
+            prepped_list = prepare_many([r for _, r in reqs], table)
         allocate = self.pool.allocate
+        # Uniform-size burst alloc: when the whole pull wants one block size
+        # (the storm shape), ONE pool lock round reserves every buffer; any
+        # reserved-but-unused blocks (bounced requests) are released in one
+        # round at the end.  Non-uniform pulls keep the per-item path.
+        blocks: list[tuple[int, memoryview]] = []
+        blk_n = 0
+        if prepped_list is not None:
+            sizes = {PKT_HEADROOM + p[0].size
+                     for p in prepped_list if p is not None}
+            if len(sizes) == 1:
+                blk_n = sizes.pop()
+                blocks = self.pool.allocate_many(
+                    sum(p is not None for p in prepped_list), blk_n)
         app_header = self.app_header
         submit_read = self.fs.submit_read
+        # Zero-copy submissions are DEFERRED and flushed as one
+        # ``fs.submit_read_many`` burst — always before any device poll, so
+        # queue order and completion order match the scalar submission loop.
+        submit_read_many = self.fs.submit_read_many
+        deferred: list = []
         ring, ring_size = self._ring, self.ring_size
         zero_copy = self.zero_copy
         lifecycle = self.lifecycle
@@ -351,17 +434,28 @@ class OffloadEngine:
         now_tick = lifecycle.clock.now if lifecycle is not None else 0
         busy_files = self.busy_files
         tail = self._tail
+        head = self._head
         for i, (client, raw) in enumerate(reqs):
-            if tail - self._head >= ring_size:
+            if tail - head >= ring_size:
                 self._tail = tail
+                if deferred:   # flush so in-flight reads can complete below
+                    submit_read_many(deferred, priority=True)
+                    deferred = []
                 self.fs.device.poll()
                 self.complete_pending()  # reclaim consumed contexts first
-                if tail - self._head >= ring_size:
+                head = self._head
+                if tail - head >= ring_size:
                     # Ring fully occupied: send this and the REST to the host.
                     for c2, r2 in reqs[i:]:
                         self._bounce_to_host(c2, r2)
                     break
-            if prepare is not None:
+            if prepped_list is not None:
+                prepped = prepped_list[i]
+                if prepped is None:
+                    self._bounce_to_host(client, raw)
+                    continue
+                read_op, ok_hdr = prepped
+            elif prepare is not None:
                 # fused path: ONE header parse yields the op and its header
                 prepped = prepare(raw, table)
                 if prepped is None:
@@ -374,13 +468,17 @@ class OffloadEngine:
                     self._bounce_to_host(client, raw)
                     continue
                 ok_hdr = None
-            if busy_files is not None and read_op.file_id in busy_files:
+            fid = read_op.file_id
+            size = read_op.size
+            if busy_files is not None and fid in busy_files:
                 # Read/write fence: writes to this file are still in flight
                 # on the host path — serve the read there too, so the file
                 # service's submission FIFO orders it after them.
                 self._bounce_to_host(client, raw)
                 continue
-            alloc = allocate(PKT_HEADROOM + read_op.size)
+            want = PKT_HEADROOM + size
+            alloc = (blocks.pop() if blocks and want == blk_n
+                     else allocate(want))
             if alloc is None:
                 self._bounce_to_host(client, raw)
                 continue
@@ -390,21 +488,20 @@ class OffloadEngine:
             ctx.read_op = read_op
             ctx.raw = raw
             ctx.status = PENDING
-            ctx.pool_off, ctx.pool_len = off, PKT_HEADROOM + read_op.size
+            ctx.pool_off, ctx.pool_len = off, want
             ctx.buf = view
             ctx.app_hdr = (ok_hdr if ok_hdr is not None
                            else app_header(raw, read_op, wire.E_OK))
             ctx.consumed = False
             ctx.open_tick = now_tick
             tail += 1
-            self._tail = tail
             # Destination = pool memory; the device writes it exactly once.
             # Offloaded reads ride the device's PRIORITY queue: the
             # latency-critical path never waits behind host-path write runs
             # (the normal queue keeps a bounded interleave share).
-            dest = view[PKT_HEADROOM : PKT_HEADROOM + read_op.size]
+            dest = view[PKT_HEADROOM:want]
             if not zero_copy:
-                scratch = bytearray(read_op.size)
+                scratch = bytearray(size)
 
                 def done(err: int, ctx=ctx, scratch=scratch):
                     if err == wire.E_OK:
@@ -416,10 +513,13 @@ class OffloadEngine:
                                     read_op.size, memoryview(scratch), done,
                                     priority=True)
             else:
-                submit_read(read_op.file_id, read_op.offset, read_op.size,
-                            dest, ctx.mark, priority=True)
+                deferred.append((fid, read_op.offset, size, dest, ctx.mark))
             work += 1
         self._tail = tail
+        if deferred:
+            submit_read_many(deferred, priority=True)
+        if blocks:   # reserved for requests that bounced instead
+            self.pool.release_many([off for off, _ in blocks])
         self.stats.offloaded += work
         self.fs.device.poll()
         return work + self.complete_pending()
@@ -449,57 +549,99 @@ class OffloadEngine:
         lifecycle = self.lifecycle
         if lifecycle is not None:
             dpu_hist_add = lifecycle.hist["dpu_read"].add
+            dpu_hist_bulk = lifecycle.hist["dpu_read"].add_many
             tenant_add = lifecycle.add_tenant
             now_tick = lifecycle.clock.now
-        completed = failed = bytes_served = 0
+        run_delta = run_n = 0  # run-length fold for untenanted completions
+        completed = failed = bytes_served = pkt_count = 0
         burst_client = None
         burst: list[Packet] = []
         burst_n = 0
         dpu_response = self.director.dpu_response
+        mtu = self.mtu
+        burst_append = burst.append
         while head != tail:
             ctx = ring[head % ring_size]
-            if ctx.status == PENDING:
+            status = ctx.status
+            if status == PENDING:
                 break  # preserve response order
             if not ctx.consumed:
+                client = ctx.client
+                size = ctx.read_op.size
                 if lifecycle is not None:
-                    # Response-publish tick for this offloaded read.
+                    # Response-publish tick for this offloaded read.  Whole
+                    # bursts share one publish tick and (usually) one open
+                    # tick, so equal deltas are folded and counted once.
                     delta = now_tick - ctx.open_tick
-                    dpu_hist_add(delta)
-                    t = ctx.client.tenant
+                    t = client.tenant
                     if t:
+                        dpu_hist_add(delta)
                         tenant_add(t, "dpu_read", delta)
-                pkts = self._create_pkts(ctx)
-                if ctx.status == COMPLETE:
-                    # Indirect packets reference pool memory: ownership rides
-                    # on the last packet and is released at TX-consumption
-                    # (Fig 12) — releasing here would let a later read
-                    # overwrite a response the client has not drained yet.
-                    pkts[-1].pool_ref = (pool, ctx.pool_off, ctx.pool_len)
+                    elif delta == run_delta and run_n:
+                        run_n += 1
+                    else:
+                        if run_n:
+                            dpu_hist_bulk(run_delta, run_n)
+                        run_delta, run_n = delta, 1
+                if (status == COMPLETE
+                        and (h := len(ctx.app_hdr)) + size <= mtu):
+                    # Inlined ``_create_pkts`` common case — one indirect
+                    # packet, header placed in the buffer headroom.
+                    buf = ctx.buf
+                    buf[PKT_HEADROOM - h:PKT_HEADROOM] = ctx.app_hdr
+                    pkt = Packet(client, 0,
+                                 buf[PKT_HEADROOM - h:PKT_HEADROOM + size])
+                    pkt_count += 1
+                    # Ownership rides on the (single) packet and is
+                    # released at TX-consumption (Fig 12) — releasing here
+                    # would let a later read overwrite a response the
+                    # client has not drained yet.
+                    pkt.pool_ref = (pool, ctx.pool_off, ctx.pool_len)
                     completed += 1
-                    bytes_served += ctx.read_op.size
+                    bytes_served += size
+                    if client is burst_client:
+                        burst_append(pkt)
+                        burst_n += 1
+                    else:
+                        if burst:
+                            dpu_response(burst_client, burst, burst_n)
+                        burst_client, burst, burst_n = client, [pkt], 1
+                        burst_append = burst.append
                 else:
-                    # Error responses carry only header bytes — the pool
-                    # block is unreferenced and can be reclaimed now.
-                    pool.release(ctx.pool_off, ctx.pool_len)
-                    failed += 1
-                if ctx.client is burst_client:
-                    burst.extend(pkts)
-                    burst_n += 1
-                else:
-                    if burst:
-                        dpu_response(burst_client, burst, burst_n)
-                    burst_client, burst, burst_n = ctx.client, pkts, 1
+                    pkts = self._create_pkts(ctx)
+                    if status == COMPLETE:
+                        # Indirect packets reference pool memory: ownership
+                        # rides on the last packet (Fig 12), as above.
+                        pkts[-1].pool_ref = (pool, ctx.pool_off, ctx.pool_len)
+                        completed += 1
+                        bytes_served += size
+                    else:
+                        # Error responses carry only header bytes — the pool
+                        # block is unreferenced and can be reclaimed now.
+                        pool.release(ctx.pool_off, ctx.pool_len)
+                        failed += 1
+                    if client is burst_client:
+                        burst.extend(pkts)
+                        burst_n += 1
+                    else:
+                        if burst:
+                            dpu_response(burst_client, burst, burst_n)
+                        burst_client, burst, burst_n = client, pkts, 1
+                        burst_append = burst.append
                 ctx.consumed = True
                 ctx.buf = None
                 ctx.raw = b""
             head += 1
             done += 1
         self._head = head
+        if run_n:
+            dpu_hist_bulk(run_delta, run_n)
         if burst:
             dpu_response(burst_client, burst, burst_n)
         stats.completed += completed
         stats.failed += failed
         stats.bytes_served += bytes_served
+        stats.packets += pkt_count
         return done
 
     def _create_pkts(self, ctx: _Context) -> list[Packet]:

@@ -41,6 +41,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import vector
 from repro.core.lifecycle import TickHistogram
 
 CACHE_LINE = 64
@@ -707,13 +708,25 @@ def unframe_batch(batch) -> list[memoryview]:
     consumer's whole ``[head, tail)`` DMA read is split without duplicating
     any message bytes).  Views compare equal to ``bytes`` and unpack in
     place; callers that store or hash a message materialize it themselves.
+
+    Large fixed-stride batches (the common shape: one op size repeated)
+    are split columnar — :func:`repro.core.vector.uniform_stride` proves
+    the stream uniform in one array compare, so no per-frame header
+    unpack runs; irregular batches (and any remainder) take the scalar
+    walk, which is also cheaper for short batches.
     """
     mv = batch if isinstance(batch, memoryview) else memoryview(batch)
     out = []
     off = 0
     n = len(mv)
-    unpack = FRAME_HDR.unpack_from
     hdr = FRAME_HDR.size
+    if n >= 512:
+        u = vector.uniform_stride(mv, hdr, 0, min_frames=20)
+        if u is not None:
+            cnt, stride, _ = u
+            out = [mv[i * stride + hdr:(i + 1) * stride] for i in range(cnt)]
+            off = cnt * stride
+    unpack = FRAME_HDR.unpack_from
     while off < n:
         (sz,) = unpack(mv, off)
         off += hdr

@@ -37,6 +37,7 @@ import struct
 import threading
 from collections import deque
 from dataclasses import dataclass, field
+from itertools import repeat
 from typing import Callable
 
 # Modeled BF-2 constants (§5.3).
@@ -370,6 +371,17 @@ class TenantFairQueue:
         dq.append(item)
         self._len += 1
 
+    def extend_flow(self, flow: FiveTuple, msgs: list) -> None:
+        """Enqueue one flow's whole message burst: one tenant lookup, and
+        the (flow, msg) pairs are built by C-level ``zip`` instead of a
+        Python tuple per message."""
+        t = flow.tenant
+        dq = self._q.get(t)
+        if dq is None:
+            dq = self._q[t] = deque()
+        dq.extend(zip(repeat(flow), msgs))
+        self._len += len(msgs)
+
     def take(self, budget: int) -> list[tuple[FiveTuple, bytes]]:
         """Take up to ``budget`` requests, weighted-fairly across tenants."""
         if self._len == 0 or budget <= 0:
@@ -640,9 +652,7 @@ class TrafficDirector:
                 self._send_to_host_many(conn, pkt.flow, host_msgs)
             if dpu_msgs:
                 to_dpu += len(dpu_msgs)
-                flow = pkt.flow
-                for m in dpu_msgs:
-                    off_q.append((flow, m))
+                off_q.extend_flow(pkt.flow, dpu_msgs)
             elif host_msgs:
                 # matched the signature but fully host-bound: paid the round trip
                 modeled += PREDICATE_FAIL_RTT_S - self.per_pkt_cost

@@ -23,6 +23,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.lifecycle import TickClock, TickHistogram
+from repro.core.vector import block_checksums
 
 # v5-era datacenter NVMe-ish constants (§8.1: 1 TB NVMe SSD, 100-200us access).
 DEFAULT_READ_LATENCY_S = 90e-6
@@ -34,6 +35,11 @@ STATUS_PENDING = -1
 STATUS_OK = 0
 STATUS_EINVAL = 22
 STATUS_EIO = 5
+
+# Integrity-checksum granularity (see ``enable_checksums``): one 64-bit
+# position-salted checksum (repro.core.vector.block_checksums) per 4 KiB of
+# media, the protection-information block size of real datacenter NVMe.
+CRC_BLOCK = 4096
 
 
 @dataclass(slots=True)
@@ -63,6 +69,9 @@ class BlockDeviceStats:
     # are both directly observable.
     completion_ticks: TickHistogram = field(default_factory=TickHistogram)
     prio_completion_ticks: TickHistogram = field(default_factory=TickHistogram)
+    # Reads failed with EIO because the media bytes no longer matched their
+    # stored block checksum (only with ``enable_checksums()``).
+    crc_read_failures: int = 0
 
 
 class BlockDevice:
@@ -115,6 +124,53 @@ class BlockDevice:
         # runnable even when the submitter is not the server's own pump —
         # e.g. an application thread driving the host front-end directly.
         self.doorbell: Callable[[], None] | None = None
+        # End-to-end integrity (opt-in): one checksum per CRC_BLOCK of
+        # media, refreshed at every commit point and verified on every
+        # read — the NVMe protection-information role.  None = disabled.
+        self._crc: np.ndarray | None = None
+
+    # -- integrity checksums ------------------------------------------------------
+    def enable_checksums(self) -> None:
+        """Turn on per-block media checksums (CRC_BLOCK granularity).
+
+        The checksum array is (re)computed over the CURRENT media contents
+        in one vectorized pass, then kept current by every commit point
+        (``write``/``writev`` completion, the torn-writev prefix, and
+        ``raw_write``).  Every subsequent read verifies the blocks it
+        touches and completes ``STATUS_EIO`` — without copying bytes out —
+        when the media no longer matches, so corruption is detected on the
+        callback, burst and cookie read paths alike."""
+        assert self.capacity % CRC_BLOCK == 0, "capacity must be CRC_BLOCK-aligned"
+        nblk = self.capacity // CRC_BLOCK
+        self._crc = block_checksums(self._mem, 0, nblk, CRC_BLOCK).copy()
+
+    def _crc_update(self, lba: int, nbytes: int) -> None:
+        """Refresh the stored checksums of every block touched by a commit."""
+        if nbytes <= 0:
+            return
+        b0 = lba // CRC_BLOCK
+        b1 = (lba + nbytes - 1) // CRC_BLOCK + 1
+        self._crc[b0:b1] = block_checksums(self._mem, b0, b1 - b0, CRC_BLOCK)
+
+    def verify_blocks(self, lba: int = 0, nbytes: int | None = None) -> int:
+        """Recompute checksums over ``[lba, lba+nbytes)``; return the number
+        of blocks whose media bytes no longer match (0 = clean)."""
+        if self._crc is None:
+            return 0
+        if nbytes is None:
+            nbytes = self.capacity - lba
+        if nbytes <= 0:
+            return 0
+        b0 = lba // CRC_BLOCK
+        b1 = (lba + nbytes - 1) // CRC_BLOCK + 1
+        fresh = block_checksums(self._mem, b0, b1 - b0, CRC_BLOCK)
+        return int((fresh != self._crc[b0:b1]).sum())
+
+    def _crc_mismatch(self, lba: int, nbytes: int) -> bool:
+        b0 = lba // CRC_BLOCK
+        b1 = (lba + nbytes - 1) // CRC_BLOCK + 1
+        return bool((block_checksums(self._mem, b0, b1 - b0, CRC_BLOCK)
+                     != self._crc[b0:b1]).any())
 
     # -- submission --------------------------------------------------------------
     # deque.append is atomic under the GIL; poll() still serializes the
@@ -155,6 +211,44 @@ class BlockDevice:
                     priority: bool = False) -> IoOp:
         return self._enqueue(IoOp("read", lba, nbytes, dest, on_complete,
                                   cookie=cookie), priority)
+
+    def submit_read_many(self, reads: list, priority: bool = False) -> None:
+        """Burst read submission: ONE crash check / tick stamp / depth update /
+        doorbell for the whole burst instead of one per op.
+
+        ``reads`` items are ``(lba, nbytes, dest, on_complete)``.  Semantics
+        match a loop of ``submit_read`` calls in order: each op is bounds-
+        checked individually (EINVAL delivered via its callback), and ops
+        land on the queue in list order, so completion order — and therefore
+        the modeled clock accumulation — is identical to the scalar path.
+
+        Burst reads skip the ``IoOp`` wrapper entirely: each queue entry is
+        a plain ``(lba, nbytes, dest, cb, submit_tick)`` tuple, which costs
+        a fraction of a dataclass construction and drops the attribute
+        loads in ``poll``.  One entry still equals one device op, so claim
+        accounting, queue-depth stats, and tick dynamics are byte-for-byte
+        identical to the scalar path.  The op object is unobservable here
+        anyway — this API returns ``None`` — and cookie completions are not
+        supported on this path (callers pass callbacks).
+        """
+        if self.crashed:
+            return
+        now = self.clock.now
+        q = self._pq if priority else self._queue
+        append = q.append
+        cap = self.capacity
+        for lba, nbytes, dest, cb in reads:
+            if lba < 0 or lba + nbytes > cap:
+                if cb is not None:
+                    cb(STATUS_EINVAL)
+                continue
+            append((lba, nbytes, dest, cb, now))
+        d = len(self._queue) + len(self._pq)
+        if d > self.stats.max_queue_depth_seen:
+            self.stats.max_queue_depth_seen = d
+        db = self.doorbell
+        if db is not None:
+            db()
 
     def submit_write(self, lba: int, data,
                      on_complete: Callable[[int], None] | None = None,
@@ -247,13 +341,21 @@ class BlockDevice:
                 if pq else len(q)
             k_p = min(len(pq), budget - min(reserve, budget))
             k_n = min(len(q), budget - k_p)
-            ops = [pq.popleft() for _ in range(k_p)]
-            ops += [q.popleft() for _ in range(k_n)]
+            if k_p == len(pq):          # whole-queue claim: one C-level copy
+                ops = list(pq)
+                pq.clear()
+            else:
+                ops = [pq.popleft() for _ in range(k_p)]
+            if k_n == len(q):
+                ops += q
+                q.clear()
+            elif k_n:
+                ops += [q.popleft() for _ in range(k_n)]
             k = k_p + k_n
         # Inline completion loop: per-op stats folded into one update.
         stats = self.stats
-        mem = self._mem
         memv = self._memv
+        crc_arr = self._crc
         clock = self._clock_s
         inv_bw = 1.0 / self.bandwidth_Bps
         rlat, wlat = self.read_latency_s, self.write_latency_s
@@ -263,25 +365,65 @@ class BlockDevice:
         now_tick = self.clock.now
         torn = False
         lat_c = stats.prio_completion_ticks.counts  # inlined histogram add:
-        for i, op in enumerate(ops):                # the stamp rides every
-            if i == k_p:                            # completion
+        run_d = None                                # the stamp rides every
+        run_n = 0                                   # completion; runs of the
+        for i, op in enumerate(ops):                # same tick delta (the
+            if i == k_p:                            # burst norm) fold into
+                if run_n:                           # ONE dict update
+                    lat_c[run_d] = lat_c.get(run_d, 0) + run_n
+                    run_n = 0
                 lat_c = stats.completion_ticks.counts
-            d = now_tick - op.submit_tick
-            lat_c[d] = lat_c.get(d, 0) + 1
-            n = op.nbytes
-            kind = op.kind
-            if kind == "read":
+            if type(op) is tuple:   # burst-read entry: (lba, n, dest, cb, tick)
+                lba, n, dest, cb, st = op
+                d = now_tick - st
+                if d == run_d:
+                    run_n += 1
+                else:
+                    if run_n:
+                        lat_c[run_d] = lat_c.get(run_d, 0) + run_n
+                    run_d = d
+                    run_n = 1
                 clock += rlat + n * inv_bw
-                # Write straight into the caller's view (zero-copy contract)
-                op.buf[:n] = mem[op.lba : op.lba + n]
                 reads += 1
                 read_bytes += n
+                if crc_arr is not None and n and self._crc_mismatch(lba, n):
+                    stats.crc_read_failures += 1
+                    if cb is not None:
+                        cb(STATUS_EIO)   # corrupt media: no bytes delivered
+                    continue
+                dest[:n] = memv[lba : lba + n]   # mv->mv: cheapest copy path
+                if cb is not None:
+                    cb(STATUS_OK)
+                continue
+            d = now_tick - op.submit_tick
+            if d == run_d:
+                run_n += 1
+            else:
+                if run_n:
+                    lat_c[run_d] = lat_c.get(run_d, 0) + run_n
+                run_d = d
+                run_n = 1
+            n = op.nbytes
+            kind = op.kind
+            st = STATUS_OK
+            if kind == "read":
+                clock += rlat + n * inv_bw
+                reads += 1
+                read_bytes += n
+                if crc_arr is not None and n and self._crc_mismatch(op.lba, n):
+                    stats.crc_read_failures += 1
+                    st = STATUS_EIO   # corrupt media: no bytes delivered
+                else:
+                    # Write straight into the caller's view (zero-copy contract)
+                    op.buf[:n] = memv[op.lba : op.lba + n]
             elif kind == "write":
                 clock += wlat + n * inv_bw
                 # Read straight from the caller's buffer view (zero-copy)
                 memv[op.lba : op.lba + n] = op.buf
                 writes += 1
                 write_bytes += n
+                if crc_arr is not None:
+                    self._crc_update(op.lba, n)
             else:  # writev: one op, bytes streamed from each gathered view
                 tw = self._torn_writev
                 if tw is not None:
@@ -295,6 +437,8 @@ class BlockDevice:
                             ln = len(b)
                             memv[pos : pos + ln] = b
                             pos += ln
+                        if crc_arr is not None:   # the prefix DID commit
+                            self._crc_update(op.lba, pos - op.lba)
                         self._torn_writev = None
                         torn = True
                         break
@@ -306,13 +450,17 @@ class BlockDevice:
                     pos += ln
                 writes += 1
                 write_bytes += n
+                if crc_arr is not None:
+                    self._crc_update(op.lba, n)
             op.modeled_done_s = clock
-            op.status = STATUS_OK
+            op.status = st
             cb = op.on_complete
             if cb:
-                cb(STATUS_OK)
+                cb(st)
             elif op.cookie is not None:
-                cookie_done.append((op.cookie, STATUS_OK))
+                cookie_done.append((op.cookie, st))
+        if run_n:   # trailing histogram run (also flushed on a torn break)
+            lat_c[run_d] = lat_c.get(run_d, 0) + run_n
         self._clock_s = clock
         stats.modeled_busy_s = clock
         stats.reads += reads
@@ -346,3 +494,5 @@ class BlockDevice:
 
     def raw_write(self, lba: int, data: bytes) -> None:
         self._mem[lba : lba + len(data)] = np.frombuffer(data, dtype=np.uint8)
+        if self._crc is not None:   # raw writes are commits too
+            self._crc_update(lba, len(data))

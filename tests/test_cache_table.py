@@ -132,3 +132,58 @@ def test_lookup_many_property_vs_dict(ops):
             del model[key]
     keys = list(range(41))
     assert t.lookup_many(keys) == [model.get(k) for k in keys]
+
+
+def test_lookup_many_exact_under_contended_writer():
+    """Stable keys must resolve exactly — right value, never a false miss —
+    while a writer thread churns disjoint keys through the same buckets
+    (the seqlock-over-arrays discipline of the vectorized probe)."""
+    t = CacheTable(max_items=4096)
+    stable = {b"s%03d" % i: i for i in range(256)}
+    for k, v in stable.items():
+        t.insert(k, v)
+    stop = threading.Event()
+
+    def writer():
+        j = 0
+        while not stop.is_set():
+            k = b"w%03d" % (j % 512)
+            if j % 3 == 2:
+                t.delete(k)
+            else:
+                t.insert(k, j)
+            j += 1
+
+    th = threading.Thread(target=writer)
+    th.start()
+    try:
+        keys = list(stable)
+        for _ in range(300):
+            for k, v in zip(keys, t.lookup_many(keys)):
+                assert v == stable[k]
+    finally:
+        stop.set()
+        th.join()
+
+
+def test_seqlock_exhaustion_falls_back_to_locked_probe():
+    """A writer parked mid-window (version held odd) must not turn present
+    keys into false misses: the retry budget exhausts and the probe takes
+    the writer lock for one authoritative read instead."""
+    t = CacheTable(max_items=256)
+    t.insert(b"present", 42)
+    b1, b2 = t._buckets_for(t._hash_key(b"present"))
+    for b in {b1, b2}:
+        t._versions[b] += 1       # odd: simulated writer stuck in-window
+        t._versions_np[b] += 1
+    before = t.stats.locked_probes
+    assert t.lookup(b"present") == 42          # no false miss, no hang
+    assert t.stats.locked_probes > before
+    # The burst path funnels its unstable elements through the same
+    # fallback: every element of a vectorized probe stays exact.
+    assert t.lookup_many([b"present"] * 16) == [42] * 16
+    for b in {b1, b2}:                         # release the fake writer
+        t._versions[b] += 1
+        t._versions_np[b] += 1
+    assert t.lookup(b"present") == 42
+    assert t.stats.locked_probes > before

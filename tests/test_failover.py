@@ -429,3 +429,61 @@ def test_retry_disabled_surfaces_shed_immediately():
     c = ClusterClient(cl, tenant=7)           # retry_attempts=0
     res = c.harvest(c.submit([("r", g, 0, 64)] * 6))
     assert sum(1 for s, _ in res.values() if s == wire.E_SHED) == 4
+
+
+# ---------------------------------------------------------------------------
+# Batch-checksum integrity gate: corrupted writev bytes are DETECTED —
+# neither served to a reader nor replayed out of the journal.
+# ---------------------------------------------------------------------------
+
+
+def test_corrupted_writev_media_fails_reads_with_eio():
+    from repro.storage.blockdev import STATUS_EIO, STATUS_OK
+    dev, fs, svc, fe = _journal_stack()
+    dev.enable_checksums()
+    fid = fe.create_file("t")
+    fe.write_sync(fid, 0, b"\xC3" * 4096)
+    phys = fs.files[fid].segments[0] * (1 << 16)
+    assert dev.verify_blocks() == 0        # journaled run committed its CRCs
+
+    dev._mem[phys + 123] ^= 0x01           # single-bit rot inside the run
+    assert dev.verify_blocks() == 1        # exactly one block flagged
+
+    sts, dst = [], memoryview(bytearray(4096))
+    dev.submit_read(phys, 4096, dst, on_complete=sts.append)
+    dev.poll()
+    assert sts == [STATUS_EIO]
+    assert bytes(dst) == bytes(4096)       # corrupt bytes never delivered
+    assert dev.stats.crc_read_failures == 1
+
+    # Rewriting the span re-commits: the same read succeeds again.
+    fe.write_sync(fid, 0, b"\xC4" * 4096)
+    sts2 = []
+    dev.submit_read(phys, 4096, dst, on_complete=sts2.append)
+    dev.poll()
+    assert sts2 == [STATUS_OK] and bytes(dst) == b"\xC4" * 4096
+
+
+def test_corrupted_journal_record_is_refused_at_recovery():
+    from repro.core.file_service import _JREC
+    dev, fs, svc, fe = _journal_stack()
+    fid = fe.create_file("t")
+    old = b"\xAA" * 2048
+    fe.write_sync(fid, 0, old)
+    # Commit flip lands, in-place writev applies ZERO chunks: media stays
+    # fully old, and recovery alone decides whether the record applies.
+    dev.inject_torn_writev(nth=2, chunks=0)
+    fe.submit_many([("w", fid, 0, b"\xBB" * 2048)])
+    _drive_until_crash(svc, dev)
+
+    # Rot one payload byte of the committed-but-unapplied record on the
+    # survived media (its region is the only one still journal-pending).
+    pos, _end = next(iter(fs._journal_pending.values()))
+    dev._mem[fs._journal_start + pos + _JREC.size + 4 + 10] ^= 0x80
+
+    fs2 = SegmentFS.mount(dev, 1 << 16, journal_segments=2)
+    rec = fs2.recover_journal()
+    assert rec["records"] == 1             # the seed write_sync only
+    assert fs2.journal_crc_failures == 1   # the rotted record was refused
+    phys = fs2.files[fid].segments[0] * (1 << 16)
+    assert dev.raw_read(phys, 2048) == old  # corrupt bytes never applied
