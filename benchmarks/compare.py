@@ -29,6 +29,8 @@ FAILOVER_JSON = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_failover.json")
 GETSTORM_JSON = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_getstorm.json")
+CHAOS_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_chaos.json")
 
 
 def _load(d: str) -> dict:
@@ -143,11 +145,45 @@ def getstorm_compare() -> None:
          f"dpu_frac {cf['dpu_frac']:.2f}")
 
 
+def chaos_compare() -> None:
+    """Committed chaos record: what the fault storm cost, in ticks."""
+    if not os.path.exists(CHAOS_JSON):
+        print("# no BENCH_chaos.json; chaos comparison skipped")
+        return
+    with open(CHAOS_JSON) as fh:
+        doc = json.load(fh)
+    cur = doc.get("current", {}).get("full")
+    if not cur:
+        print("# BENCH_chaos.json lacks current/full; skipped")
+        return
+    section("lossy-network chaos (ticks): fault storm + partition + "
+            "dead DPU")
+    inj = cur.get("injection", {})
+    emit("chaos_blip", float(cur["blip_ticks"]),
+         f"steady median {cur['steady_median']}t -> partition round "
+         f"{cur['blip_ticks']}t -> recovered median "
+         f"{cur['post_median']}t, lost_acked={cur['lost_acked']}, "
+         f"dup_applies={cur['dup_applies']}")
+    emit("chaos_injection", float(sum(inj.values())),
+         f"dropped={inj.get('dropped', 0)} dup={inj.get('duplicated', 0)} "
+         f"reorder={inj.get('reordered', 0)} delay={inj.get('delayed', 0)} "
+         f"corrupt={inj.get('corrupted', 0)}; "
+         f"resends={cur.get('client', {}).get('resends', 0)}, "
+         f"replayed_acks="
+         f"{cur.get('exactly_once', {}).get('replayed_acks', 0)}")
+    emit("chaos_disarmed_cost", cur["disarmed_tput_ratio_vs_bare"],
+         f"disarmed wrappers at "
+         f"{cur['disarmed_tput_ratio_vs_bare']:.2f}x the bare ops/tick "
+         f"({cur['bare_steady_ops_per_tick']}/t), "
+         f"deterministic={cur.get('deterministic')}")
+
+
 def main() -> None:
     latency_compare()
     tenancy_compare()
     failover_compare()
     getstorm_compare()
+    chaos_compare()
     if not (os.path.isdir(BASE) and os.path.isdir(OPT)):
         print("# need both results/dryrun and results/dryrun_opt")
         return

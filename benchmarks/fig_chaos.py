@@ -1,0 +1,473 @@
+"""Chaos gate: lossy wire, partitioned primary, dead DPU — zero loss, once.
+
+PR 9 makes network faults first-class: a seeded :class:`FaultSchedule`
+drops / duplicates / reorders / delays / bit-corrupts frames on every
+shard's client-facing wires, frame checksums turn corruption into loss,
+client tick-timeouts resend from replay notes, and the server-side
+dedup/reply cache makes every resend exactly-once.  On top of that ride
+two degradation paths: a partitioned primary is failed over after two
+silent heartbeat windows and later REJOINS as a replica (no split-brain),
+and a failed DPU transparently bounces its offloaded GETs to the host.
+
+This benchmark drives the fig_failover-style Zipfian RMW workload through
+all of it at once — seeded fault storm on every wire, one timed partition
+of the hottest shard (healed mid-run), one DPU failure on another shard —
+and gates, all in deterministic TICKS:
+
+  * **zero lost acked writes** — every value the client saw ack is
+    byte-compared on every read and in a final sweep;
+  * **zero duplicate applies** — per-(key, round) single-writer PUTs mean
+    any resend that re-ran would leave an identical record twice in some
+    shard's append-only log; the union of live shards' own logs is
+    scanned (the ledger oracle);
+  * **bounded blip** — the partition round gets detection (two heartbeat
+    windows) + slack on top of the steady p99; later rounds recover;
+  * **injection disarmed is free** — the same workload with FaultWire
+    wrappers installed but NO schedule must stay >= ``TPUT_GATE`` (0.9x)
+    of the bare, unwrapped run's ops/tick;
+  * **determinism** — two same-seed faulted runs produce identical round
+    ticks, events, ledgers and injection counters.
+
+Results go to ``BENCH_chaos.json``; ``--smoke`` (CI) runs a reduced
+config and fails on a >30% tick regression vs the committed ``current``.
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import struct
+import sys
+import time
+import zlib
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, section  # noqa: E402
+from repro.apps.kv_store import (KVClient, REC_HDR, ShardedKVStore,  # noqa: E402
+                                 decode_record)
+from repro.core import wire  # noqa: E402
+from repro.core.dds_server import ServerConfig  # noqa: E402
+from repro.core.faultnet import FaultSchedule, wrap_director  # noqa: E402
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_chaos.json")
+
+TPUT_GATE = 0.9         # disarmed-wrapper ops/tick >= 0.9x bare ops/tick
+BLIP_SLACK = 32         # partition-round allowance beyond detection + p99
+RECOVERY_SLACK = 16     # post-heal round p99 allowance over steady p99
+SMOKE_REGRESSION = 1.3  # CI: fail when blip/steady ticks grow >30%
+
+CONFIGS = {
+    "full": dict(shards=6, clients=2, hot_keys=48, zipf_a=2.5, rounds=24,
+                 partition_round=8, partition_ticks=200, dpu_fail_round=16,
+                 gets=96, overwrites=48, value_size=64, queue_depth=4,
+                 heartbeat_timeout_ticks=6, timeout_ticks=96,
+                 dedup_cache=4096,
+                 drop=0.02, dup=0.02, reorder=0.01, delay=0.01,
+                 corrupt=0.01),
+    "smoke": dict(shards=4, clients=2, hot_keys=24, zipf_a=2.5, rounds=12,
+                  partition_round=4, partition_ticks=140, dpu_fail_round=8,
+                  gets=64, overwrites=32, value_size=64, queue_depth=4,
+                  heartbeat_timeout_ticks=6, timeout_ticks=96,
+                  dedup_cache=4096,
+                  drop=0.02, dup=0.02, reorder=0.01, delay=0.01,
+                  corrupt=0.01),
+}
+
+ZIPF_SEED = 0xFA110
+FAULT_SEED = 0xC4A05
+
+
+def calibrate(iters: int = 200_000) -> float:
+    """Reference ops/sec of a fixed pure-Python loop (machine-speed proxy)."""
+    pack = struct.Struct("<QII").pack
+    blob = bytes(range(256)) * 8
+    t0 = time.perf_counter()
+    d: dict[int, bytes] = {}
+    for i in range(iters):
+        d[i & 1023] = blob[i & 255 : (i & 255) + 64]
+        pack(i, i & 0xFFFF, 64)
+    return iters / (time.perf_counter() - t0)
+
+
+def percentile(vals: list[int], p: float) -> int:
+    if not vals:
+        return 0
+    s = sorted(vals)
+    return s[min(len(s) - 1, -(-len(s) * int(p) // 100) - 1)]
+
+
+def _zipf_ranks(cfg: dict, total: int) -> list[int]:
+    rng = np.random.default_rng(ZIPF_SEED)
+    return [(int(z) - 1) % cfg["hot_keys"]
+            for z in rng.zipf(cfg["zipf_a"], size=total)]
+
+
+def _value(key: bytes, rnd: int, size: int) -> bytes:
+    """Round-stamped value, a function of (key, round) only."""
+    base = key + b"#%05d#" % rnd
+    return (base * (size // len(base) + 1))[:size]
+
+
+def _scan_own_logs(store) -> tuple[int, int]:
+    """Ledger oracle: parse every live shard's OWN append-only record log.
+
+    Returns ``(records, duplicate_applies)`` where a duplicate apply is an
+    identical ``(key, value)`` record seen twice across the union — with
+    per-(key, round) single-writer PUTs and round-stamped values, only a
+    re-executed resend can produce one."""
+    cl = store.cluster
+    counts: dict[tuple[bytes, bytes], int] = {}
+    records = 0
+    for s, st in enumerate(store._states):
+        if s in cl._dead:
+            continue
+        if not st.log_off:
+            continue
+        data = cl.servers[s].frontend.read_sync(st.log_fid, 0, st.log_off)
+        pos = 0
+        while pos + REC_HDR.size <= len(data):
+            klen, vlen = REC_HDR.unpack_from(data, pos)
+            total = REC_HDR.size + klen + vlen
+            if pos + total > len(data):
+                break
+            key = bytes(data[pos + REC_HDR.size:pos + REC_HDR.size + klen])
+            val = bytes(data[pos + REC_HDR.size + klen:pos + total])
+            counts[(key, val)] = counts.get((key, val), 0) + 1
+            records += 1
+            pos += total
+    dups = sum(c - 1 for c in counts.values() if c > 1)
+    return records, dups
+
+
+def run_chaos_workload(cfg: dict, *, faults: bool, wrappers: bool) -> dict:
+    """Drive the settle-per-round Zipfian RMW loop.
+
+    ``wrappers`` installs FaultWire on every shard's wires; ``faults``
+    additionally arms the seeded schedules, partitions the hottest shard
+    mid-run (healing it later) and fails one DPU."""
+    config = ServerConfig(device_capacity=1 << 26, cache_items=1 << 14,
+                          replication=1, wire_checksums=True,
+                          dedup_cache=cfg["dedup_cache"],
+                          heartbeat_timeout_ticks=cfg[
+                              "heartbeat_timeout_ticks"])
+    store = ShardedKVStore(num_shards=cfg["shards"], config=config)
+    cluster = store.cluster
+    for srv in cluster.servers:
+        srv.device.queue_depth = cfg["queue_depth"]
+    wires = []
+    if wrappers:
+        for s, srv in enumerate(cluster.servers):
+            sched_in = sched_out = None
+            if faults:
+                sched_in = FaultSchedule(
+                    seed=FAULT_SEED ^ s, drop=cfg["drop"], dup=cfg["dup"],
+                    reorder=cfg["reorder"], delay=cfg["delay"],
+                    delay_ticks=(1, 3), corrupt=cfg["corrupt"])
+                sched_out = FaultSchedule(
+                    seed=FAULT_SEED ^ s ^ 0x9E3779B9, drop=cfg["drop"],
+                    dup=cfg["dup"], reorder=cfg["reorder"],
+                    delay=cfg["delay"], delay_ticks=(1, 3),
+                    corrupt=cfg["corrupt"])
+            # Lossy CLIENT network over a reliable backend fabric: the
+            # inter-shard replication flows (port 45000+ on either end —
+            # forwards ride the target's ingress, acks ride its response
+            # wire) have no retransmit layer of their own — a lost
+            # forward or ack would wedge a held ack forever, which is a
+            # transport the paper models as reliable (RDMA RC), not a
+            # storage bug.
+            wires.extend(wrap_director(
+                srv.director, cluster.clock,
+                ingress=sched_in, responses=sched_out,
+                flow_filter=lambda f: (f.src_port < 45000
+                                       and f.dst_port < 45000)))
+    clients = [KVClient(store, timeout_ticks=cfg["timeout_ticks"])
+               for _ in range(cfg["clients"])]
+    vsize = cfg["value_size"]
+    nclients = cfg["clients"]
+    hot = [b"hot-%04d" % i for i in range(cfg["hot_keys"])]
+
+    # Untimed warm: PUT-ack every hot key through client 0.
+    acked: dict[bytes, bytes] = {}
+    rids = clients[0].submit([("put", k, _value(k, -1, vsize)) for k in hot])
+    res = clients[0].harvest(rids)
+    assert all(s == wire.E_OK for s, _ in res.values())
+    for k in hot:
+        acked[k] = _value(k, -1, vsize)
+    res = clients[0].harvest(clients[0].submit([("get", k) for k in hot]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    for cli in clients:
+        cli.net.run_until_idle()
+
+    per_round = cfg["gets"] + cfg["overwrites"]
+    ranks = _zipf_ranks(cfg, cfg["rounds"] * nclients * per_round)
+    rk = iter(ranks)
+    round_ticks: list[int] = []
+    lost = 0
+    total = 0
+    victim = dpu_victim = None
+    gc.collect()
+    gc.disable()
+    t0 = time.perf_counter()
+    for r in range(cfg["rounds"]):
+        if faults and r == cfg["partition_round"]:
+            # Partition the shard owning the hottest key, two ticks into
+            # the round; its network heals partition_ticks later — well
+            # after the supervisor has promoted its replica.
+            victim = store.shard_for_key(hot[0])
+            cluster.partition(victim,
+                              cluster.clock.now + cfg["partition_ticks"])
+        if faults and r == cfg["dpu_fail_round"]:
+            # Fail a DIFFERENT live shard's DPU: its offloaded GETs must
+            # degrade to the host path without a correctness ripple.
+            for k in hot[1:]:
+                s = store.shard_for_key(k)
+                if s != victim and s not in cluster._dead:
+                    dpu_victim = s
+                    cluster.servers[s].offload.fail()
+                    break
+        t_start = cluster.clock.now
+        # Read phase: byte-compare every GET against the acked ledger.
+        gmeta = []
+        for cli in clients:
+            ks = [hot[next(rk)] for _ in range(cfg["gets"])]
+            gmeta.append((cli, ks, cli.submit([("get", k) for k in ks])))
+        for cli, ks, rg in gmeta:
+            res = cli.harvest(rg)
+            for k, rid in zip(ks, rg):
+                status, body = res[rid]
+                if status != wire.E_OK or decode_record(body)[1] != acked[k]:
+                    lost += 1
+        # Modify phase: per-(key, round) single-writer overwrites — the
+        # duplicate-apply oracle needs every (key, value) record to have
+        # exactly one legitimate producer.  Keys drawn by all clients are
+        # deduped, then each is assigned a deterministic designated
+        # writer for this round.
+        drawn = [hot[next(rk)]
+                 for _ in range(nclients * cfg["overwrites"])]
+        uniq = list(dict.fromkeys(drawn))
+        per_client: list[list[bytes]] = [[] for _ in range(nclients)]
+        for k in uniq:
+            per_client[(zlib.crc32(k) + r) % nclients].append(k)
+        pmeta = []
+        for cli, ks in zip(clients, per_client):
+            pmeta.append((cli, ks, cli.submit(
+                [("put", k, _value(k, r, vsize)) for k in ks])))
+        for cli, ks, rp in pmeta:
+            res = cli.harvest(rp)
+            for k, rid in zip(ks, rp):
+                if res[rid][0] == wire.E_OK:
+                    acked[k] = _value(k, r, vsize)
+                else:
+                    lost += 1
+        for cli in clients:
+            cli.net.run_until_idle()
+        total += nclients * cfg["gets"] + len(uniq)
+        round_ticks.append(cluster.clock.now - t_start)
+    # Let the heal land if the rounds outran partition_ticks, then sweep
+    # the whole ledger.
+    if faults and victim is not None:
+        guard = 0
+        while not cluster.rejoin_events and guard < 10_000:
+            cluster.pump()
+            guard += 1
+    sweep = clients[0].submit([("get", k) for k in hot])
+    res = clients[0].harvest(sweep)
+    for k, rid in zip(hot, sweep):
+        status, body = res[rid]
+        if status != wire.E_OK or decode_record(body)[1] != acked[k]:
+            lost += 1
+    for cli in clients:
+        cli.net.run_until_idle()
+    cluster.run_until_idle()
+    elapsed = time.perf_counter() - t0
+    gc.enable()
+
+    pr = cfg["partition_round"]
+    steady = round_ticks[:pr]
+    # Recovery window: past the partition round AND the promote/heal
+    # rounds that follow it (re-silver + catch-up are legitimate one-off
+    # costs, not a failure to recover).
+    post = round_ticks[pr + 3:]
+    records, dup_applies = _scan_own_logs(store)
+    stats = cluster.latency_stats()
+    injection = {"dropped": 0, "duplicated": 0, "reordered": 0, "delayed": 0,
+                 "corrupted": 0, "partition_dropped": 0}
+    for fw in wires:
+        for k, v in fw.totals.items():
+            injection[k] += v
+    out = {
+        "requests": total,
+        "ticks": cluster.clock.now,
+        "wall_s": elapsed,
+        "ops_per_s": total / elapsed,
+        "lost_acked": lost,
+        "dup_applies": dup_applies,
+        "log_records": records,
+        "round_ticks": round_ticks,
+        "steady_ops_per_tick": total / max(sum(round_ticks), 1),
+        "steady_p99": percentile(steady, 99),
+        "steady_median": percentile(steady, 50),
+        "blip_ticks": round_ticks[pr] if faults else 0,
+        "post_p99": percentile(post, 99) if faults else 0,
+        "post_median": percentile(post, 50) if faults else 0,
+        "injection": injection,
+        "client": {
+            "timeouts": sum(c.net.stats.timeouts for c in clients),
+            "resends": sum(c.net.stats.resends for c in clients),
+            "dup_responses": sum(c.net.stats.dup_responses
+                                 for c in clients),
+        },
+        "wire": stats.get("wire", {}),
+        "exactly_once": stats.get("exactly_once", {}),
+    }
+    if faults:
+        out["failover"] = {"victim": victim,
+                           "events": list(cluster.failover_events)}
+        out["rejoins"] = list(cluster.rejoin_events)
+        out["dpu_victim"] = dpu_victim
+    return out
+
+
+def load_json() -> dict:
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as fh:
+            return json.load(fh)
+    return {"schema": 1, "configs": CONFIGS}
+
+
+def save_json(doc: dict) -> None:
+    with open(JSON_PATH, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = ("--smoke" in argv
+             or os.environ.get("DDS_BENCH_SMOKE", "0") == "1")
+    record = ("current" if "--record-current" in argv else None)
+    mode = "smoke" if smoke else "full"
+    cfg = CONFIGS[mode]
+
+    section(f"chaos ({mode}: {cfg['shards']} shards K=1, "
+            f"{cfg['clients']} clients, drop/dup {cfg['drop']:.0%}, "
+            f"partition at round {cfg['partition_round']}, DPU fail at "
+            f"round {cfg['dpu_fail_round']}, {cfg['rounds']} rounds)")
+    c1 = calibrate()
+    res = run_chaos_workload(cfg, faults=True, wrappers=True)
+    rep2 = run_chaos_workload(cfg, faults=True, wrappers=True)
+    disarmed = run_chaos_workload(cfg, faults=False, wrappers=True)
+    bare = run_chaos_workload(cfg, faults=False, wrappers=False)
+    c2 = calibrate()
+    calib = max(c1, c2)
+    identical = all(res[k] == rep2[k] for k in
+                    ("round_ticks", "failover", "rejoins", "lost_acked",
+                     "dup_applies", "log_records", "ticks", "requests",
+                     "injection", "client", "wire", "exactly_once"))
+    tput_ratio = (disarmed["steady_ops_per_tick"]
+                  / max(bare["steady_ops_per_tick"], 1e-9))
+    inj = sum(res["injection"].values())
+    emit(f"chaos_{mode}", float(res["blip_ticks"]),
+         f"lost_acked={res['lost_acked']} dup_applies={res['dup_applies']} "
+         f"injected={inj} resends={res['client']['resends']} "
+         f"blip={res['blip_ticks']}t steady_p99={res['steady_p99']}t "
+         f"disarmed_ratio={tput_ratio:.2f}x deterministic={identical} "
+         f"tput={res['ops_per_s']:.0f}op/s")
+    emit(f"chaos_{mode}_exactly_once",
+         float(res["exactly_once"].get("replayed_acks", 0)),
+         f"dup_suppressed={res['exactly_once'].get('dup_suppressed', 0)} "
+         f"replayed_acks={res['exactly_once'].get('replayed_acks', 0)} "
+         f"corrupt_dropped={res['wire'].get('corrupt_dropped', 0)} "
+         f"dpu_bypassed={res['wire'].get('dpu_bypassed', 0)}")
+
+    doc = load_json()
+    doc["configs"] = CONFIGS
+    res_out = {k: v for k, v in res.items() if k != "round_ticks"}
+    res_out["config"] = cfg
+    res_out["deterministic"] = identical
+    res_out["disarmed_tput_ratio_vs_bare"] = round(tput_ratio, 3)
+    res_out["bare_steady_ops_per_tick"] = round(
+        bare["steady_ops_per_tick"], 3)
+    entry = {"calibration_ops_per_s": calib, mode: res_out}
+    if record:
+        doc.setdefault("current", {})["calibration_ops_per_s"] = calib
+        doc["current"][mode] = res_out
+        print(f"# recorded {mode} measurement into 'current'")
+    doc["last_run"] = {"mode": mode, **entry}
+    save_json(doc)
+
+    failures = []
+    if res["lost_acked"]:
+        failures.append(f"{res['lost_acked']} acknowledged writes lost or "
+                        f"stale under chaos (gate: zero)")
+    if res["dup_applies"]:
+        failures.append(f"{res['dup_applies']} duplicate applies in the "
+                        f"record logs (gate: zero — a resend re-ran)")
+    if not identical:
+        failures.append("two same-seed chaos runs diverged — "
+                        "determinism gate")
+    if not res["failover"]["events"]:
+        failures.append("partition never promoted a replica")
+    if not res["rejoins"]:
+        failures.append("partitioned shard never rejoined after heal")
+    if not res["wire"].get("dpu_bypassed"):
+        failures.append("DPU failure never bounced a GET to the host")
+    if not res["wire"].get("corrupt_dropped"):
+        failures.append("no corrupt frame was ever checksum-dropped "
+                        "(injection not reaching the wire?)")
+    detect = 2 * (cfg["heartbeat_timeout_ticks"] + 1)   # miss_windows = 2
+    blip_limit = res["steady_p99"] + detect + BLIP_SLACK
+    ok = res["blip_ticks"] <= blip_limit
+    print(f"# partition-round blip: {res['blip_ticks']}t (steady p99 "
+          f"{res['steady_p99']}t + detection {detect}t + slack "
+          f"{BLIP_SLACK}t = limit {blip_limit}t) -> "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"partition blip unbounded: {res['blip_ticks']} > "
+                        f"{blip_limit} ticks")
+    # Median, not p99: individual post rounds are heavy-tailed by design
+    # (a dropped batch frame costs a timeout chain), so the recovery
+    # question is whether the TYPICAL round returns to steady shape.
+    rec_limit = res["steady_median"] + RECOVERY_SLACK
+    ok = res["post_median"] <= rec_limit
+    print(f"# post-chaos round median: {res['post_median']}t (steady "
+          f"median {res['steady_median']}t + slack {RECOVERY_SLACK}t = "
+          f"limit {rec_limit}t; post p99 {res['post_p99']}t) -> "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"post-chaos median never recovered: "
+                        f"{res['post_median']} > {rec_limit} ticks")
+    ok = tput_ratio >= TPUT_GATE
+    print(f"# ops/tick, disarmed wrappers vs bare (deterministic): "
+          f"{disarmed['steady_ops_per_tick']:.2f} vs "
+          f"{bare['steady_ops_per_tick']:.2f} ({tput_ratio:.2f}x; gate "
+          f"{TPUT_GATE:.2f}x) -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"disarmed FaultWire too expensive: "
+                        f"{tput_ratio:.2f}x < {TPUT_GATE:.2f}x bare")
+    if smoke and not record:
+        ref = doc.get("current", {}).get("smoke")
+        if ref and ref.get("config") == cfg:
+            for key in ("blip_ticks", "steady_p99"):
+                limit = max(ref[key], 1) * SMOKE_REGRESSION
+                if res[key] > limit:
+                    failures.append(
+                        f"{key} regressed >30% vs recorded current: "
+                        f"{res[key]} > {limit:.1f} ticks")
+            print(f"# smoke vs recorded current: blip {res['blip_ticks']}t "
+                  f"vs {ref['blip_ticks']}t, steady p99 {res['steady_p99']}t "
+                  f"vs {ref['steady_p99']}t")
+        else:
+            print("# no comparable recorded current numbers; "
+                  "smoke regression gate skipped")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

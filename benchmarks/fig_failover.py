@@ -194,7 +194,9 @@ def run_failover_workload(cfg: dict, replication: int, crash: bool) -> dict:
     # Make sure a scheduled kill whose round outran it still lands, then
     # sweep the WHOLE ledger: every byte ever acked must be readable.
     if crash and victim is not None and not cluster.failover_events:
-        deadline = cluster.clock.now + cfg["heartbeat_timeout_ticks"] + 5
+        # detection = miss_windows (2) consecutive silent windows
+        deadline = (cluster.clock.now
+                    + 2 * (cfg["heartbeat_timeout_ticks"] + 1) + 5)
         while cluster.clock.now < deadline:
             cluster.pump()
     sweep = clients[0].submit([("get", k) for k in hot])
@@ -309,11 +311,11 @@ def main() -> None:
     if not identical:
         failures.append("two same-seed runs diverged (round ticks, "
                         "failover events or ledger) — determinism gate")
-    blip_limit = (res["steady_p99"] + cfg["heartbeat_timeout_ticks"]
-                  + BLIP_SLACK)
+    detect = 2 * (cfg["heartbeat_timeout_ticks"] + 1)   # miss_windows = 2
+    blip_limit = res["steady_p99"] + detect + BLIP_SLACK
     ok = res["blip_ticks"] <= blip_limit
     print(f"# crash-round blip: {res['blip_ticks']}t (steady p99 "
-          f"{res['steady_p99']}t + timeout {cfg['heartbeat_timeout_ticks']}t "
+          f"{res['steady_p99']}t + detection {detect}t "
           f"+ slack {BLIP_SLACK}t = limit {blip_limit}t) -> "
           f"{'OK' if ok else 'FAIL'}")
     if not ok:

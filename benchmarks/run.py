@@ -23,10 +23,11 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 from benchmarks import (compare, fig14_16_model, fig17_rings,
                         fig18_23_zerocopy, fig22_cache_table,
-                        fig24_26_integration, fig_cluster_scaling,
-                        fig_failover, fig_getstorm, fig_hotpath,
-                        fig_latency, fig_scaleout, fig_tenancy,
-                        fig_writepath, kernels_bench, roofline)
+                        fig24_26_integration, fig_chaos,
+                        fig_cluster_scaling, fig_failover, fig_getstorm,
+                        fig_hotpath, fig_latency, fig_scaleout,
+                        fig_tenancy, fig_writepath, kernels_bench,
+                        roofline)
 
 MODULES = {
     "cluster": fig_cluster_scaling,
@@ -37,6 +38,7 @@ MODULES = {
     "tenancy": fig_tenancy,
     "failover": fig_failover,
     "getstorm": fig_getstorm,
+    "chaos": fig_chaos,
     "fig14_16": fig14_16_model,
     "fig17": fig17_rings,
     "fig18_23": fig18_23_zerocopy,

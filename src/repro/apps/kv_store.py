@@ -127,6 +127,7 @@ class ShardedKVStore:
                 st.replica_fids = self.cluster.replicate_file(
                     s, st.log_fid, "kvlog")
             self.cluster.on_promote = self._on_promote
+            self.cluster.on_rejoin = self._on_rejoin
 
     def shard_for_key(self, key: bytes) -> int:
         return self.cluster.shard_for_key(key)
@@ -174,6 +175,39 @@ class ShardedKVStore:
             if table is not None:
                 table.delete(key)     # a stale pre-failover mapping
                 table.insert(key, loc)  # warm: post-failover GETs DPU-serve
+
+    def _on_rejoin(self, healed: int, primary: int) -> None:
+        """Re-silver the promoted primary's record log onto a healed shard.
+
+        A partitioned shard that missed enough heartbeat windows was failed
+        over; when its network comes back, ``DDSCluster._heal`` demotes it
+        to a replica of ``primary`` and re-arms the replication connection.
+        The cluster re-silvers its OWN file table, but the KV record logs
+        are application files — so copy the primary's log (which now also
+        carries every post-promotion PUT for the healed shard's adopted
+        keys) and register the mapping so future appends mirror before the
+        ack releases, restoring the redundancy the failover spent."""
+        pst = self._states[primary]
+        psrv = self.cluster.servers[primary]
+        hsrv = self.cluster.servers[healed]
+        prepl = psrv.replicator
+        if prepl is None:
+            return
+        # A pre-partition copy may already exist (the healed shard was a
+        # ring successor of the primary from construction) but its
+        # forwarding was dropped at the promotion — the log is append-only,
+        # so top up the missed tail and re-register the mapping.
+        rlfid = pst.replica_fids.get(healed)
+        if rlfid is None:
+            rlfid = hsrv.frontend.create_file(f"kvlog:r{primary}")
+        have = hsrv.fs.file_size(rlfid)
+        psize = psrv.fs.file_size(pst.log_fid)
+        if psize > have:
+            data = psrv.frontend.read_sync(pst.log_fid, have, psize - have)
+            hsrv.frontend.write_sync(rlfid, have, data)
+            hsrv.run_until_idle()
+        prepl.map_file(healed, pst.log_fid, rlfid)
+        pst.replica_fids[healed] = rlfid
 
     # -- Table 1 functions, closed over one shard's state ---------------------------
     def _api_for(self, shard: int) -> OffloadAPI:
@@ -513,6 +547,12 @@ class ShardedKVStore:
                 ent["adopted_bytes"] = st.adopted_bytes
             if srv.replicator is not None:
                 ent["replication"] = srv.replicator.summary()
+            ha = srv.host_app
+            if ha.dup_suppressed or ha.replayed_acks:
+                ent["exactly_once"] = {"dup_suppressed": ha.dup_suppressed,
+                                       "replayed_acks": ha.replayed_acks}
+            if srv.director.stats.dpu_bypassed:
+                ent["dpu_bypassed"] = srv.director.stats.dpu_bypassed
             out.append(ent)
         return out
 
@@ -534,12 +574,14 @@ class KVClient:
 
     def __init__(self, store: ShardedKVStore, ip: str = "10.0.0.9",
                  port: int | None = None, shard_cache: int = 1 << 16,
-                 tenant: int = 0, retry_attempts: int = 0):
+                 tenant: int = 0, retry_attempts: int = 0,
+                 timeout_ticks: int = 0):
         self.store = store
         self.tenant = tenant
         self.net = ClusterClient(store.cluster, ip=ip, port=port,
                                  tenant=tenant,
-                                 retry_attempts=retry_attempts)
+                                 retry_attempts=retry_attempts,
+                                 timeout_ticks=timeout_ticks)
         # Consistent-hash placement is stable WITHIN a ring epoch, so the
         # key->shard mapping is cacheable: repeat traffic skips the blake2b
         # ring walk (bounded to keep pathological key churn from growing

@@ -28,6 +28,7 @@ from repro.core.dds_server import (_OP_KIND, DDSStorageServer,
                                    encode_app_write, encode_batch)
 from repro.core.lifecycle import ClientLatency
 from repro.core.traffic import FLAG_SYN, FiveTuple, Packet
+from repro.core.vector import checksum64, scalar_mix
 
 if TYPE_CHECKING:  # import cycle: distributed.cluster imports core
     from repro.distributed.cluster import DDSCluster
@@ -39,6 +40,9 @@ class ClientStats:
     batches_sent: int = 0
     messages_sent: int = 0
     responses: int = 0
+    timeouts: int = 0        # tick deadlines that expired unanswered
+    resends: int = 0         # requests re-sent from replay notes
+    dup_responses: int = 0   # stale/duplicate wire responses discarded
 
 
 class ShardConnection:
@@ -71,8 +75,10 @@ class ShardConnection:
         payload = encode_batch(self._pending)
         n = len(self._pending)
         self._pending.clear()
-        self.server.director.ingress.push(
-            Packet(self.flow, self._seq, payload, epoch=self.epoch))
+        pkt = Packet(self.flow, self._seq, payload, epoch=self.epoch)
+        if self.server.director.stamp_checksums:
+            pkt.csum = checksum64(payload)
+        self.server.director.ingress.push(pkt)
         self._seq += len(payload)
         self.server.signal()   # client send: mark the target shard runnable
         return n
@@ -101,7 +107,7 @@ class ClusterClient:
 
     def __init__(self, cluster: "DDSCluster", ip: str = "10.0.0.9",
                  port: int | None = None, tenant: int = 0,
-                 retry_attempts: int = 0):
+                 retry_attempts: int = 0, timeout_ticks: int = 0):
         self.cluster = cluster
         self.tenant = tenant
         if port is None:
@@ -124,7 +130,13 @@ class ClusterClient:
         # Shed retry (bounded exponential backoff honoring the server's
         # ``retry_after`` hint): 0 = surface E_SHED to the caller directly.
         self.retry_attempts = retry_attempts
-        self._replay_on = self._armed or retry_attempts > 0
+        # Lossy-wire recovery: a request unanswered for ``timeout_ticks``
+        # is re-sent from its replay note with doubled backoff (the
+        # server-side dedup cache makes resends exactly-once).  0 = off.
+        self.timeout_ticks = timeout_ticks
+        self._deadlines: dict[int, tuple[int, int]] = {}  # rid -> (due, attempt)
+        self._replay_on = (self._armed or retry_attempts > 0
+                           or timeout_ticks > 0)
         # rid -> ("op", kind, gfid, offset, arg) for fid-addressed requests
         # (MUST re-encode at replay: the promoted shard's adopted copy has a
         # different local fid) or ("raw", shard, msg, cls) for application
@@ -213,11 +225,17 @@ class ClusterClient:
         self.stats.requests += 1
         return rid
 
+    def _arm_timeout(self, rid: int) -> None:
+        if self.timeout_ticks:
+            self._deadlines[rid] = (self.cluster.clock.now
+                                    + self.timeout_ticks, 0)
+
     def read(self, gfid: int, offset: int, nbytes: int) -> int:
         loc = self.cluster.locate(gfid)
         rid = self._rid(loc.shard)
         if self._replay_on:
             self._replay[rid] = ("op", "r", gfid, offset, nbytes)
+            self._arm_timeout(rid)
         self._enqueue(loc.shard,
                       encode_app_read(rid, loc.local_fid, offset, nbytes))
         return rid
@@ -247,6 +265,7 @@ class ClusterClient:
         for rid, loc, k, op in zip(rids, locs, cls, ops):
             if replay is not None:
                 replay[rid] = ("op", k, op[1], op[2], op[3])
+                self._arm_timeout(rid)
             if k == "r":
                 enqueue(loc.shard,
                         encode_app_read(rid, loc.local_fid, op[2], op[3]))
@@ -265,6 +284,7 @@ class ClusterClient:
         rid = self._rid(loc.shard, "w")
         if self._replay_on:
             self._replay[rid] = ("op", "w", gfid, offset, data)
+            self._arm_timeout(rid)
         self._enqueue(loc.shard,
                       encode_app_write(rid, loc.local_fid, offset, data))
         return rid
@@ -279,11 +299,19 @@ class ClusterClient:
 
     def send_raw(self, shard: int, build_msg: Callable[[int], bytes],
                  cls: str = "r") -> int:
-        """Route an application-defined message to an explicit shard."""
+        """Route an application-defined message to an explicit shard.
+
+        The shard is translated through the cluster's repair chain at
+        issue time: after a failover the ring owner's route moves to the
+        promoted replica and STAYS moved — even once the old primary
+        heals and rejoins as a replica, sending to it directly would
+        split-brain its application state."""
+        shard = self.cluster.route_of(shard)
         rid = self._rid(shard, cls)
         msg = build_msg(rid)
         if self._replay_on:
             self._replay[rid] = ("raw", shard, msg, cls)
+            self._arm_timeout(rid)
         self._enqueue(shard, msg)
         return rid
 
@@ -296,7 +324,10 @@ class ClusterClient:
         ``build_msg(rid, i)`` encodes the i-th message with its reserved
         request id.  One rid-range reservation covers the whole burst, and
         enqueueing stays inside this class so the dirty-connection and
-        per-shard outstanding bookkeeping cannot be bypassed."""
+        per-shard outstanding bookkeeping cannot be bypassed.  Target
+        shards follow the cluster's repair chain (see :meth:`send_raw`)."""
+        route_of = self.cluster.route_of
+        shards = [route_of(s) for s in shards]
         rids = self.reserve_rids(shards, cls)
         enqueue = self._enqueue
         replay = self._replay if self._replay_on else None
@@ -305,6 +336,7 @@ class ClusterClient:
             if replay is not None:
                 replay[rid] = ("raw", shard, msg,
                                cls if isinstance(cls, str) else cls[i])
+                self._arm_timeout(rid)
             enqueue(shard, msg)
         return rids
 
@@ -342,6 +374,8 @@ class ClusterClient:
             work += self._sync_epoch()
         if self._backoff:
             work += self._pump_backoff()
+        if self._deadlines:
+            work += self._pump_timeouts()
         return work + self.poll()
 
     def poll(self) -> int:
@@ -357,6 +391,7 @@ class ClusterClient:
         outs = self._shard_outstanding
         lat_pos = self._lat_pos
         collected: list[tuple[int, int]] = []
+        rid_shard = self._rid_shard
         for i, conn in enumerate(self.conns):
             if not outs[i]:
                 continue
@@ -364,6 +399,18 @@ class ClusterClient:
             conn.collect(responses)
             ao = conn.arrival_order
             if len(ao) > lat_pos[i]:
+                # Exactly-once at the client: a resent request can be
+                # answered twice (or a healed shard can flush a stale
+                # ack).  A response whose rid is no longer booked was
+                # already surfaced — discard it BEFORE the outstanding
+                # accounting below, or the spurious decrement would park
+                # a shard with responses still owed.
+                # (pop, not del: a duplicated frame can land the same
+                # rid twice in one drain window.)
+                for rid in ao[lat_pos[i]:]:
+                    if rid not in rid_shard and \
+                            responses.pop(rid, None) is not None:
+                        self.stats.dup_responses += 1
                 self._record_latency(conn, ao, lat_pos[i])
                 if len(ao) >= 1 << 16:
                     # Fully consumed: reset so a long-running client's
@@ -557,9 +604,15 @@ class ClusterClient:
             pending.add(rid)
             self._retries[rid] = attempt + 1
             _, retry_after = wire.decode_shed_hint(hint)
+            # Deterministic per-rid jitter de-synchronizes retry storms:
+            # without it every client shed in the same tick retries in
+            # the same tick, re-colliding forever.  ``scalar_mix`` is a
+            # pure function of (rid, attempt), so two same-seed runs
+            # still pick identical deadlines.
+            base = max(1, retry_after) << attempt
+            jitter = scalar_mix(rid ^ (attempt << 56)) % base
             self._backoff.append(
-                (self.cluster.clock.now + max(1, retry_after) * (1 << attempt),
-                 rid))
+                (self.cluster.clock.now + base + jitter, rid))
 
     def _pump_backoff(self) -> int:
         """Re-issue shed retries whose backoff deadline passed."""
@@ -592,14 +645,59 @@ class ClusterClient:
         # attempt's issue->drain, not time spent parked in backoff.
         issued = self._issued_r if cls == "r" else self._issued_w
         issued[rid] = self.cluster.clock.now
+        self._arm_timeout(rid)   # re-booked requests regain loss protection
         self._enqueue(shard, msg)
         return True
+
+    def _pump_timeouts(self) -> int:
+        """Resend requests whose tick deadline expired unanswered.
+
+        The resend re-materializes the request against the CURRENT ring
+        (same request id — the server-side dedup cache suppresses the
+        copy if the original survived, or replays the cached ack if only
+        the ack was lost) and re-arms the deadline with doubled backoff.
+        Deadlines for answered/surfaced rids are dropped lazily here."""
+        now = self.cluster.clock.now
+        due = [rid for rid, (t, _a) in self._deadlines.items() if t <= now]
+        if not due:
+            return 0
+        n = 0
+        tmo = self.timeout_ticks
+        for rid in due:
+            if rid in self.responses or rid not in self._rid_shard:
+                self._deadlines.pop(rid, None)
+                continue
+            entry = self._replay.get(rid)
+            if entry is None:
+                self._deadlines.pop(rid, None)
+                continue
+            attempt = self._deadlines[rid][1]
+            shard, msg = self._replay_msg(rid, entry)
+            if shard in self.cluster._dead:
+                # Repaired route still down: leave recovery to the
+                # failover machinery, re-arm one plain window.
+                self._deadlines[rid] = (now + tmo, attempt)
+                continue
+            old = self._rid_shard[rid]
+            if shard != old:
+                with self._lock:
+                    self._shard_outstanding[old] -= 1
+                    self._shard_outstanding[shard] += 1
+                self._rid_shard[rid] = shard
+            self._enqueue(shard, msg)
+            self.stats.timeouts += 1
+            self.stats.resends += 1
+            self._deadlines[rid] = (now + (tmo << min(attempt + 1, 6)),
+                                    attempt + 1)
+            n += 1
+        return n
 
     def _finalize(self, rid: int) -> None:
         """Drop replay/retry bookkeeping once a result reaches the caller."""
         self._replay.pop(rid, None)
         self._retries.pop(rid, None)
         self._redirects_seen.pop(rid, None)
+        self._deadlines.pop(rid, None)
 
     def outstanding(self) -> int:
         """Issued-but-unanswered requests — an O(1) counter, not a dict scan."""

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import struct
 import threading
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -184,6 +185,14 @@ def drain_client_flow(director, resp_flow, rx: bytearray, responses: dict,
     payloads = []
     payload_append = payloads.append
     for pkt in pkts:
+        if pkt.csum != -1 and vector.checksum64(pkt.payload) != pkt.csum:
+            # Stamped checksum mismatch: the frame was damaged in flight.
+            # Discard it as a loss — the client's timeout/resend machinery
+            # recovers the response; delivering torn bytes would poison the
+            # rx stream reassembly below.
+            director.stats.corrupt_dropped += 1
+            pkt.consumed()
+            continue
         payload_append(pkt.payload)
         ref = pkt.pool_ref
         if ref is not None:   # TX-completion: reclaim the pool block
@@ -192,7 +201,8 @@ def drain_client_flow(director, resp_flow, rx: bytearray, responses: dict,
             release.append(ref[1])
     # One join + one extend: n small bytearray appends would realloc the
     # rx buffer piecemeal and re-touch its tail n times.
-    rx += b"".join(payloads) if len(payloads) > 1 else payloads[0]
+    if payloads:
+        rx += b"".join(payloads) if len(payloads) > 1 else payloads[0]
     if release:
         pool.release_many(release)  # one lock round for the whole drain
     reassemble_responses(rx, responses, order)
@@ -294,8 +304,25 @@ class ServerConfig:
     # replicas BEFORE the client sees the ack.  0 = unreplicated.
     replication: int = 0
     # Failover detection: ticks of heartbeat silence before the cluster
-    # supervisor declares a shard dead and promotes a replica.
+    # supervisor counts one missed window; promotion fires only after
+    # ``heartbeat_miss_windows`` CONSECUTIVE missed windows, so a single
+    # delayed/partitioned heartbeat blip cannot false-promote a live
+    # primary.  Detection latency is
+    # ``heartbeat_miss_windows * (heartbeat_timeout_ticks + 1)`` pumps.
     heartbeat_timeout_ticks: int = 16
+    heartbeat_miss_windows: int = 2
+    # Lossy-network survival (see README "Network fault model"): when set,
+    # every wire frame (requests, host/DPU responses) is stamped with a
+    # ``vector.checksum64`` of its payload and verified at the receive
+    # edge — a bit-corrupted frame is discarded as a loss instead of
+    # delivering torn bytes, and the client's timeout/resend recovers it.
+    wire_checksums: bool = False
+    # Exactly-once mutations: per-(flow, request-id) server-side dedup /
+    # reply cache capacity (completed entries; in-flight markers are
+    # bounded by the in-flight window).  A resent mutation whose original
+    # is still executing is suppressed; one whose ack was already sent
+    # replays the CACHED ack without re-executing.  0 disables.
+    dedup_cache: int = 1024
     # End-to-end integrity: per-4KiB media checksums on the block device,
     # refreshed at every write commit (including the torn-writev prefix)
     # and verified on every read — a corrupted-media read completes E_IO
@@ -308,6 +335,10 @@ class ServerConfig:
             raise ValueError("journal_segments/replication must be >= 0")
         if self.heartbeat_timeout_ticks < 1:
             raise ValueError("heartbeat_timeout_ticks must be >= 1")
+        if self.heartbeat_miss_windows < 1:
+            raise ValueError("heartbeat_miss_windows must be >= 1")
+        if self.dedup_cache < 0:
+            raise ValueError("dedup_cache must be >= 0")
         if isinstance(self.qos, str):
             self.qos = QoSProfile.preset(self.qos)
         elif isinstance(self.qos, dict):
@@ -322,6 +353,9 @@ class ServerConfig:
 # §8.1 app header (<BQIQI) and the KV headers (<BQ...) carry req_id as a
 # u64 at byte offset 1.
 _REQ_ID_U64_AT_1 = struct.Struct("<Q")
+
+# Dedup-cache miss sentinel: ``None`` is a real value (pending marker).
+_DEDUP_MISS = object()
 
 
 def default_req_id_of(msg) -> int:
@@ -373,6 +407,10 @@ class DDSStorageServer:
             sig, self.api.off_pred, self.cache_table,
             ncores=cfg.director_cores, host_port=cfg.server_port,
             userspace_stack=cfg.userspace_stack)
+        # Frame integrity: stamp responses (and have clients stamp
+        # requests) with payload checksums; the receive edges verify and
+        # discard corrupt frames as losses.
+        self.director.stamp_checksums = cfg.wire_checksums
         # Tenancy: weighted-fair service on the offload queue and the host
         # wire's drain; token-bucket admission (when configured) sheds at
         # the demux via the lifecycle tracker's terminal marks.
@@ -461,6 +499,10 @@ class DDSStorageServer:
             self.host_app._orphan_sheds.add(frontend_rid)
             return
         host_flow, _typ, req_id = info[:3]
+        # The shed request will never complete: clear its dedup pending
+        # marker so a client retry is executed as a fresh request instead
+        # of being suppressed against an execution that died.
+        self.host_app._dedup.pop((host_flow, req_id), None)
         client_flow = self.director._client_flow_of.get(host_flow, host_flow)
         # Overload sheds carry a minimal hint: the tenant plus retry-after 1
         # (the bounded E_NOSPC path gave up THIS tick; next tick may admit).
@@ -583,6 +625,15 @@ class DDSStorageServer:
                 res.merge(g.req_ring.residency)
         if res.n:
             out["ring_residency"] = res.summary()
+        ds = self.director.stats
+        if ds.corrupt_dropped or ds.seq_resyncs or ds.dpu_bypassed:
+            out["wire"] = {"corrupt_dropped": ds.corrupt_dropped,
+                           "seq_resyncs": ds.seq_resyncs,
+                           "dpu_bypassed": ds.dpu_bypassed}
+        ha = self.host_app
+        if ha.dup_suppressed or ha.replayed_acks:
+            out["exactly_once"] = {"dup_suppressed": ha.dup_suppressed,
+                                   "replayed_acks": ha.replayed_acks}
         return out
 
     def _host_path_busy(self) -> bool:
@@ -630,6 +681,34 @@ class _HostApp:
         # DDSStorageServer._on_shed); reconciled right after booking.
         self._orphan_sheds: set[int] = set()
         self._files_ready = False
+        # Exactly-once mutation dedup / reply cache (armed by
+        # ``ServerConfig.dedup_cache``): (host_flow, req_id) -> None while
+        # the original execution is in flight (a resend is suppressed; the
+        # eventual ack answers both), or the completed ack bytes (a resend
+        # replays the CACHED ack without re-executing — a resent KV PUT
+        # must not append a second log record).  Only COMPLETED entries
+        # enter the FIFO eviction queue; pending markers are bounded by
+        # the in-flight window and removed on shed.
+        self._dedup_cap = server.config.dedup_cache
+        self._dedup: dict[tuple, bytes | None] = {}
+        self._dedup_fifo: deque[tuple] = deque()
+        self.dup_suppressed = 0
+        self.replayed_acks = 0
+
+    def _dedup_complete(self, key: tuple, resp: bytes) -> None:
+        """Record a mutation's final ack for replay; FIFO-evict old acks."""
+        if key not in self._dedup:
+            return   # marker was shed/evicted: nothing to fill
+        self._dedup[key] = resp
+        fifo = self._dedup_fifo
+        fifo.append(key)
+        while len(fifo) > self._dedup_cap:
+            old = fifo.popleft()
+            # Only completed entries ride the FIFO, so eviction can never
+            # kill a pending marker (a later completion with the same key
+            # re-appends; the stale queue entry is then a no-op pop).
+            if self._dedup.get(old) is not None:
+                self._dedup.pop(old, None)
 
     def busy(self) -> bool:
         """True while host requests are in flight (pump must keep stepping)."""
@@ -679,12 +758,34 @@ class _HostApp:
         # a bounded drain slice deferred the packet.
         now = srv.clock.now
         lt = srv.lifecycle
+        read_types = lt.read_types
+        dedup = self._dedup if self._dedup_cap else None
+        req_id_of = srv.api.req_id_of or default_req_id_of
         submits: list[tuple] = []   # ("w"|"r", file_id, offset, data|nbytes)
-        metas: list[tuple] = []     # (host_flow, typ, req_id, nbytes, ack, t0)
+        metas: list[tuple] = []  # (host_flow, typ, req_id, nbytes, ack, t0, dkey)
         responses: dict[FiveTuple, list] = {}  # immediate 'resp' actions
         n_resp = 0
         for host_flow, m in msgs:
             typ = m[0] if m else 0
+            # Exactly-once mutations: the dedup check MUST run before the
+            # handler — a KV PUT mutates index/log state inside the
+            # handler, so a resent PUT reaching it would apply twice.
+            dkey = None
+            if dedup is not None and typ not in read_types and len(m) >= 9:
+                dkey = (host_flow, req_id_of(m))
+                prev = dedup.get(dkey, _DEDUP_MISS)
+                if prev is not _DEDUP_MISS:
+                    if prev is None:
+                        # Original still executing: drop the resend; the
+                        # eventual (single) ack answers both copies.
+                        self.dup_suppressed += 1
+                    else:
+                        # Already acked: replay the CACHED ack verbatim.
+                        self.replayed_acks += 1
+                        n_resp += 1
+                        responses.setdefault(host_flow, []).append(prev)
+                    continue
+                dedup[dkey] = None   # pending marker
             if typ not in (APP_READ, APP_WRITE) and handler is not None:
                 action = handler(m)
                 kind = action[0]
@@ -692,12 +793,14 @@ class _HostApp:
                     _, req_id, status, body = action
                     n_resp += 1
                     # Served inline this tick: a zero-delta completion.
-                    cls = "host_read" if typ in lt.read_types else "write"
+                    cls = "host_read" if typ in read_types else "write"
                     lt.hist[cls].add(0)
                     if host_flow.tenant:
                         lt.add_tenant(host_flow.tenant, cls, 0)
-                    responses.setdefault(host_flow, []).append(
-                        APP_RESP_HDR.pack(req_id, status, len(body)) + body)
+                    resp = APP_RESP_HDR.pack(req_id, status, len(body)) + body
+                    if dkey is not None:
+                        self._dedup_complete(dkey, resp)
+                    responses.setdefault(host_flow, []).append(resp)
                 elif kind == "w":
                     # ('w', req_id, fid, off, data[, resp_body]) — the
                     # optional 6th element is echoed in the write ack (e.g.
@@ -705,12 +808,13 @@ class _HostApp:
                     _, req_id, file_id, offset, data = action[:5]
                     submits.append(("w", file_id, offset, data))
                     metas.append((host_flow, APP_WRITE, req_id, len(data),
-                                  action[5] if len(action) > 5 else b"", now))
+                                  action[5] if len(action) > 5 else b"", now,
+                                  dkey))
                 else:
                     _, req_id, file_id, offset, nbytes = action
                     submits.append(("r", file_id, offset, nbytes))
                     metas.append((host_flow, APP_READ, req_id, nbytes, b"",
-                                  now))
+                                  now, dkey))
                 continue
             typ, req_id, file_id, offset, nbytes = APP_HDR.unpack_from(m, 0)
             if typ == APP_WRITE:
@@ -718,7 +822,7 @@ class _HostApp:
                                 m[hdr_size : hdr_size + nbytes]))
             else:
                 submits.append(("r", file_id, offset, nbytes))
-            metas.append((host_flow, typ, req_id, nbytes, b"", now))
+            metas.append((host_flow, typ, req_id, nbytes, b"", now, dkey))
         # Modeled host CPU: network + app cost PER MESSAGE (batching the
         # simulator does not change what the host cores would burn), plus
         # the network cost of each immediate response.
@@ -752,6 +856,8 @@ class _HostApp:
                 for rid in orphans:
                     meta = inflight.pop(rid, None)
                     if meta is not None:
+                        if meta[6] is not None:
+                            self._dedup.pop(meta[6], None)
                         cf = cf_of.get(meta[0], meta[0])
                         lt.mark_shed(cf, meta[2], wire.encode_shed_hint(
                             getattr(cf, "tenant", 0), 1))
@@ -773,7 +879,7 @@ class _HostApp:
                 info = inflight.pop(c.request_id, None)
                 if info is None:
                     continue
-                host_flow, typ, req_id, nbytes, ack_body, t0 = info
+                host_flow, typ, req_id, nbytes, ack_body, t0, dkey = info
                 if (typ != APP_READ and repl is not None
                         and repl.holds(c.request_id)):
                     # Locally durable but the replica has not acked: HOLD
@@ -781,7 +887,7 @@ class _HostApp:
                     # the supervisor dropping a dead replica — signs off).
                     body = ack_body if c.error == wire.E_OK else b""
                     self._held_acks[c.request_id] = (host_flow, req_id,
-                                                     c.error, body, t0)
+                                                     c.error, body, t0, dkey)
                     continue
                 delta = now - t0
                 if typ == APP_READ:
@@ -794,19 +900,23 @@ class _HostApp:
                     tenant_add(host_flow.tenant,
                                "host_read" if typ == APP_READ else "write",
                                delta)
-                per_flow.setdefault(host_flow, []).append(
-                    APP_RESP_HDR.pack(req_id, c.error, len(body)) + body)
+                resp = APP_RESP_HDR.pack(req_id, c.error, len(body)) + body
+                if dkey is not None:
+                    self._dedup_complete(dkey, resp)
+                per_flow.setdefault(host_flow, []).append(resp)
                 n += 1
         held = self._held_acks
         if held and repl is not None:
             for rid in [r for r in held if not repl.holds(r)]:
-                host_flow, req_id, err, body, t0 = held.pop(rid)
+                host_flow, req_id, err, body, t0, dkey = held.pop(rid)
                 delta = now - t0
                 w_add(delta)
                 if host_flow.tenant:
                     tenant_add(host_flow.tenant, "write", delta)
-                per_flow.setdefault(host_flow, []).append(
-                    APP_RESP_HDR.pack(req_id, err, len(body)) + body)
+                resp = APP_RESP_HDR.pack(req_id, err, len(body)) + body
+                if dkey is not None:
+                    self._dedup_complete(dkey, resp)
+                per_flow.setdefault(host_flow, []).append(resp)
                 n += 1
         if n:
             srv.host_cpu_busy_s += self.HOST_NET_US * 1e-6 * n  # response path
@@ -831,7 +941,8 @@ class DDSClient:
     """
 
     def __init__(self, server: DDSStorageServer, ip: str = "10.0.0.2",
-                 port: int = 31337, tenant: int = 0):
+                 port: int = 31337, tenant: int = 0,
+                 timeout_ticks: int = 0):
         self.server = server
         self.flow = FiveTuple(ip, port, "10.0.0.1", server.config.server_port,
                               tenant=tenant)
@@ -855,13 +966,22 @@ class DDSClient:
         # can be answered by resubmitting the SAME request id.
         self.epoch = -1
         self._replay: dict[int, bytes] = {}
+        # Lossy-wire recovery: after ``timeout_ticks`` of silence ``wait``
+        # resends the request from its replay note with doubled backoff
+        # (the server's dedup cache makes the resend exactly-once).  0 =
+        # timeouts off (lossless-wire behavior, the default).
+        self.timeout_ticks = timeout_ticks
+        self.timeouts = 0
+        self.resends = 0
         server.director.ingress.push(Packet(self.flow, 0, b"", flags=FLAG_SYN))
         server.signal()
         server.director.step()
 
     def _send(self, payload: bytes) -> None:
-        self.server.director.ingress.push(
-            Packet(self.flow, self._seq, payload, epoch=self.epoch))
+        pkt = Packet(self.flow, self._seq, payload, epoch=self.epoch)
+        if self.server.director.stamp_checksums:
+            pkt.csum = vector.checksum64(payload)
+        self.server.director.ingress.push(pkt)
         self._seq += len(payload)
         self.server.signal()   # client sends are a scheduler wakeup source
 
@@ -871,7 +991,7 @@ class DDSClient:
             self._next_req += 1
         self._issued_r[rid] = self.server.clock.now
         msg = encode_app_read(rid, file_id, offset, nbytes)
-        if self.epoch >= 0:
+        if self.epoch >= 0 or self.timeout_ticks:
             self._replay[rid] = msg
         self._send(encode_batch([msg]))
         return rid
@@ -882,7 +1002,7 @@ class DDSClient:
             self._next_req += 1
         self._issued_w[rid] = self.server.clock.now
         msg = encode_app_write(rid, file_id, offset, data)
-        if self.epoch >= 0:
+        if self.epoch >= 0 or self.timeout_ticks:
             self._replay[rid] = msg
         self._send(encode_batch([msg]))
         return rid
@@ -955,7 +1075,7 @@ class DDSClient:
                 else:
                     encoded.append(encode_app_write(rid, m[1], m[2], m[3]))
                     self._issued_w[rid] = now
-        if self.epoch >= 0:
+        if self.epoch >= 0 or self.timeout_ticks:
             for rid, msg in zip(rids, encoded):
                 self._replay[rid] = msg
         self._send(encode_batch(encoded))
@@ -1009,11 +1129,27 @@ class DDSClient:
         # the host path is busy; the old unconditional per-spin
         # ``device.poll()`` here was pure overhead on idle iterations.
         lt = self.server.lifecycle
+        tmo = self.timeout_ticks
+        clock = self.server.clock
+        deadline = clock.now + tmo if tmo else None
+        attempt = 0
         for _ in range(max_iters):
             self.collect()
             if rid in self.responses:
                 self._replay.pop(rid, None)
                 return self.responses.pop(rid)
+            if deadline is not None and clock.now >= deadline:
+                # Tick-based timeout: the request or its response was lost
+                # on the wire.  Resend from the replay note with doubled
+                # backoff — the server's dedup cache suppresses the copy
+                # (or replays the cached ack) if the original survived.
+                msg = self._replay.get(rid)
+                if msg is not None:
+                    self.timeouts += 1
+                    self.resends += 1
+                    self._send(encode_batch([msg]))
+                attempt += 1
+                deadline = clock.now + (tmo << min(attempt, 6))
             term = lt.take_terminal(self.flow, rid)
             if term is not None:
                 code, hint = term

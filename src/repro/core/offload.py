@@ -351,6 +351,7 @@ class OffloadEngine:
         self._ring = [_Context() for _ in range(ring_size)]
         self._head = 0
         self._tail = 0
+        self.failed = False   # DPU failure injected: see ``fail()``
         self.stats = OffloadStats()
         # Request-lifecycle stamping, installed by the owning server.
         self.lifecycle = None
@@ -365,6 +366,28 @@ class OffloadEngine:
         # the pre-overhaul FIFO device never ordered either; acked writes
         # are always visible regardless (acks follow device completion).
         self.busy_files: dict | None = None
+
+    def fail(self) -> None:
+        """Deterministic DPU failure: graceful degradation to the host path.
+
+        Three things happen, none of which loses a request: (1) the
+        director re-routes every future predicate-positive read straight
+        to the host (``dpu_bypass`` — the PEP, admission and epoch fence
+        stay in force, only the offload split is disabled); (2) requests
+        already queued for the engine but not yet pulled bounce to the
+        host now; (3) in-flight ring contexts complete normally — the
+        device and pool are host-side resources the "DPU crash" does not
+        take down, so their responses drain through ``complete_pending``.
+        The server keeps serving at host-path throughput/latency
+        (``DirectorStats.dpu_bypassed`` counts the degraded requests)."""
+        if self.failed:
+            return
+        self.failed = True
+        self.director.dpu_bypass = True
+        queue = self.director.offload_queue
+        while queue:
+            for client, raw in queue.take(64):
+                self._bounce_to_host(client, raw)
 
     def in_flight(self) -> bool:
         """True while context-ring slots await completion or consumption.
@@ -385,6 +408,18 @@ class OffloadEngine:
         """
         work = 0
         queue = self.director.offload_queue
+        if self.failed:
+            # Degraded mode: anything that slipped into the queue after
+            # ``fail()`` bounces to the host; in-flight contexts drain.
+            n = 0
+            while queue:
+                for client, raw in queue.take(max_requests):
+                    self._bounce_to_host(client, raw)
+                    n += 1
+            if self._head == self._tail:
+                return n
+            self.fs.device.poll()
+            return n + self.complete_pending()
         if not queue:
             if self._head == self._tail:
                 return 0  # nothing offloaded, nothing in flight

@@ -40,6 +40,8 @@ from dataclasses import dataclass, field
 from itertools import repeat
 from typing import Callable
 
+from repro.core.vector import checksum64
+
 # Modeled BF-2 constants (§5.3).
 ARM_FORWARD_LATENCY_S = 6e-6
 PREDICATE_FAIL_RTT_S = 10e-6
@@ -108,6 +110,11 @@ class Packet:
     # terminal redirect instead of being served — post-failover, the keys it
     # addressed may live on a different shard.
     epoch: int = -1
+    # Frame checksum (``vector.checksum64`` of the payload; -1 = unstamped).
+    # Stamped by senders when wire checksums are armed; a receiver that
+    # finds a mismatch DISCARDS the frame — a corrupt frame is a lost
+    # frame, recovered by the client's timeout/resend layer, never parsed.
+    csum: int = -1
 
     @property
     def nbytes(self) -> int:
@@ -499,6 +506,9 @@ class DirectorStats:
     resp_from_host: int = 0
     resp_from_dpu: int = 0
     admission_shed: int = 0       # requests dropped by token-bucket admission
+    corrupt_dropped: int = 0      # checksum-failed frames discarded as losses
+    seq_resyncs: int = 0          # PEP resyncs past a gap left by lost frames
+    dpu_bypassed: int = 0         # messages host-routed because the DPU failed
     modeled_time_s: float = 0.0
     per_core_pkts: dict[int, int] = field(default_factory=dict)
 
@@ -541,6 +551,17 @@ class TrafficDirector:
         # director stays policy-free: it only compares integers.
         self.epoch_of: Callable[[], int] | None = None
         self.on_stale_epoch: Callable[[FiveTuple, object, int], None] | None = None
+        # Wire-checksum stamping for response frames (armed by the owning
+        # server when ``ServerConfig.wire_checksums`` is set).  Ingress
+        # verification needs no flag: a stamped frame (``csum != -1``) is
+        # always verified, an unstamped one never is.
+        self.stamp_checksums = False
+        # DPU-failure bypass: when the offload engine dies
+        # (``OffloadEngine.fail()``), every message the predicate would
+        # have offloaded is re-routed to the host path instead, counted in
+        # ``stats.dpu_bypassed``.  PEP, admission and the epoch fence stay
+        # in force — only the DPU leg is gone.
+        self.dpu_bypass = False
         self._conns: dict[FiveTuple, _PEPConnection] = {}
         self._host_flow_of: dict[FiveTuple, FiveTuple] = {}
         self._client_flow_of: dict[FiveTuple, FiveTuple] = {}  # reverse map
@@ -599,6 +620,13 @@ class TrafficDirector:
         inspected = hw_forwarded = to_dpu = adm_shed = 0
         modeled = 0.0
         for pkt in pkts:
+            # Stage 0: wire-checksum verify.  A stamped frame that fails is
+            # DISCARDED before any state is touched — corrupt frames behave
+            # exactly like lost frames (the seq gap below resyncs past it
+            # and the client's timeout layer resends the request).
+            if pkt.csum != -1 and checksum64(pkt.payload) != pkt.csum:
+                st.corrupt_dropped += 1
+                continue
             # Stage 1: application signature, evaluated in NIC hardware (§5.3).
             if not self.signature.matches(pkt.flow):
                 hw_forwarded += 1
@@ -613,7 +641,15 @@ class TrafficDirector:
                 conn.client_next_seq = pkt.seq + 1
                 continue
             if pkt.seq != conn.client_next_seq:
-                continue  # PEP handles client-side reliability; drop dup/ooo
+                if pkt.seq < conn.client_next_seq:
+                    continue  # dup / stale retransmit: PEP suppresses it
+                # Sequence GAP: frames were lost (or corrupt-discarded)
+                # below the PEP.  The PEP models TCP's receive edge — the
+                # lost request bytes are unrecoverable at this layer, so
+                # resync to the new edge and let the client's timeout
+                # resend the affected requests (under fresh seq numbers).
+                st.seq_resyncs += 1
+                conn.client_next_seq = pkt.seq
             conn.client_next_seq += pkt.nbytes
             if pkt.epoch >= 0 and self.epoch_of is not None:
                 cur = self.epoch_of()
@@ -627,6 +663,12 @@ class TrafficDirector:
             # Stage 2: the offload predicate inspects the payload (zero-copy:
             # the predicate sees the packet buffer itself, never a copy).
             host_msgs, dpu_msgs = self.off_pred(pkt.payload, self.cache_table)
+            if dpu_msgs and self.dpu_bypass:
+                # DPU path is down: everything the predicate offloaded is
+                # served by the host instead (graceful degradation).
+                st.dpu_bypassed += len(dpu_msgs)
+                host_msgs = (host_msgs + dpu_msgs) if host_msgs else dpu_msgs
+                dpu_msgs = []
             if admit is not None and (host_msgs or dpu_msgs):
                 # Token-bucket admission, applied at the demux — BEFORE a
                 # request can occupy a context-ring slot or device queue
@@ -713,9 +755,11 @@ class TrafficDirector:
         conn = self._conn(client_flow)
         resp_flow = conn.resp_flow
         seq = conn.client_resp_seq
+        stamp = self.stamp_checksums
         pkts = []
         for msg in msgs:
-            pkts.append(Packet(resp_flow, seq, msg))
+            pkts.append(Packet(resp_flow, seq, msg,
+                               csum=checksum64(msg) if stamp else -1))
             seq += len(msg)
         conn.client_resp_seq = seq
         self.to_client.push_many(resp_flow, pkts)
@@ -733,17 +777,22 @@ class TrafficDirector:
         conn = self._conn(client_flow)
         resp_flow = conn.resp_flow
         seq = conn.client_resp_seq
+        stamp = self.stamp_checksums
         for p in packets:
             p.flow = resp_flow
             p.seq = seq
             seq += len(p.payload)
+            if stamp:
+                p.csum = checksum64(p.payload)
         conn.client_resp_seq = seq
         self.to_client.push_many(resp_flow, packets)
         self.stats.resp_from_dpu += responses
 
     def _respond_to_client(self, client_flow: FiveTuple, msg: bytes) -> None:
         conn = self._conn(client_flow)
-        self.to_client.push(Packet(conn.resp_flow, conn.client_resp_seq, msg))
+        self.to_client.push(Packet(
+            conn.resp_flow, conn.client_resp_seq, msg,
+            csum=checksum64(msg) if self.stamp_checksums else -1))
         conn.client_resp_seq += len(msg)
 
     def drain_host_wire(self, deliver: Callable[[FiveTuple, bytes], None],

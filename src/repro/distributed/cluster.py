@@ -337,6 +337,37 @@ class _Replicator:
             self.dropped += 1
             self._resolve(rrid)
 
+    def add_target(self, target: int, srv: DDSStorageServer,
+                   port: int) -> None:
+        """(Re-)arm forwarding to ``target`` — a healed shard rejoining as
+        a replica.  ``port`` must be fresh per rejoin generation (the
+        target's PEP still holds the dropped connection's sequence state,
+        so reusing the old five-tuple would have every forward discarded
+        as a stale retransmit)."""
+        if target in self.conns:
+            return
+        self.conns[target] = ShardConnection(
+            srv, f"10.1.{self.primary}.1", port)
+        self._fid_map.setdefault(target, {})
+        self._pending.setdefault(target, set())
+
+    def reset(self) -> None:
+        """Demotion: abandon ALL in-flight forwarding state.
+
+        Called when a partitioned ex-primary heals after a replica was
+        promoted in its place.  Its held acks answer requests the clients
+        already replayed against the repaired ring, and flushing writes
+        frozen since before the partition could clobber newer bytes on
+        the new primary's replicas — both are dropped on the floor; the
+        epoch fence has already made every one of them unservable."""
+        for conn in self.conns.values():
+            conn._pending.clear()
+        self._hold.clear()
+        self._rrid_meta.clear()
+        for pend in self._pending.values():
+            pend.clear()
+        self._dirty = False
+
     def summary(self) -> dict:
         out = {"targets": sorted(self.conns), "forwarded": self.forwarded,
                "bytes": self.forwarded_bytes}
@@ -390,12 +421,23 @@ class DDSCluster:
         self._route: dict[int, int] = {}
         self._dead: set[int] = set()
         self._crash_at: dict[int, int] = {}
+        # Timed network partitions: shard -> heal tick.  A partitioned
+        # shard looks exactly like a crashed one from the outside (no
+        # pumping, no heartbeats, no routing) but its device and files
+        # survive — on heal it rejoins as a REPLICA of whoever was
+        # promoted in its place (the epoch fence already invalidated
+        # every packet it could try to serve, so no split brain).
+        self._partitioned: dict[int, int] = {}
         self.replication = (min(base.replication, num_shards - 1)
                             if num_shards > 1 else 0)
         self.failover_events: list[dict] = []
+        self.rejoin_events: list[dict] = []
         # Application hook (e.g. the KV store): called as
         # ``on_promote(dead_shard, promoted_shard)`` after ring repair.
         self.on_promote = None
+        # ``on_rejoin(healed_shard, primary_shard)``: application-level
+        # re-silver after a healed partition rejoins as a replica.
+        self.on_rejoin = None
         self.supervisor: ClusterSupervisor | None = None
         if self.replication > 0:
             for i, srv in enumerate(self.servers):
@@ -403,7 +445,8 @@ class DDSCluster:
                            for t in self.ring.successors(i, self.replication)]
                 srv.replicator = _Replicator(i, targets, self.clock)
             self.supervisor = ClusterSupervisor(
-                self, base.heartbeat_timeout_ticks)
+                self, base.heartbeat_timeout_ticks,
+                base.heartbeat_miss_windows)
             for srv in self.servers:
                 # Epoch fence: a packet tagged with a pre-failover epoch is
                 # refused with a retryable terminal redirect.
@@ -506,6 +549,81 @@ class DDSCluster:
         """Schedule ``crash(shard)`` for the first pump at/after ``tick``."""
         self._crash_at[shard] = tick
 
+    def partition(self, shard: int, until_tick: int) -> None:
+        """Deterministic fault injection: cut ``shard`` off the network NOW.
+
+        Unlike :meth:`crash`, the device keeps its state.  While
+        partitioned the shard is unreachable (not pumped, heartbeats
+        silent, routing skips it) — if the partition outlasts the
+        supervisor's grace windows a replica is promoted exactly as for a
+        crash.  At ``until_tick`` the shard heals and, if it was failed
+        over, rejoins the repaired ring AS A REPLICA of its promoted
+        successor (see :meth:`_heal`)."""
+        if shard in self._dead:
+            return
+        self._partitioned[shard] = until_tick
+        self._dead.add(shard)
+
+    def _heal(self, shard: int) -> None:
+        """A partitioned shard's network came back.
+
+        If nothing was promoted (the blip fit inside the supervisor's
+        grace windows) the shard simply resumes as primary.  Otherwise
+        the split-brain hazard is closed in three moves: (1) its
+        replicator abandons every in-flight forward it froze
+        pre-partition (``reset`` — the epoch fence already made the
+        underlying requests unservable, clients replayed them against
+        the new primary); (2) the new primary re-silvers the healed
+        shard: every file it now owns is copied over and registered as a
+        replica, restoring the redundancy the failover spent; (3) the
+        supervisor starts monitoring it again.  The healed shard serves
+        no client traffic — routes moved at promotion and stay moved."""
+        self._partitioned.pop(shard, None)
+        self._dead.discard(shard)
+        sup = self.supervisor
+        if sup is not None:
+            sup.monitor.watch(f"shard{shard}")
+            sup._misses.pop(f"shard{shard}", None)
+        if shard not in self._route:
+            return   # blip shorter than detection: clean resume as primary
+        srv = self.servers[shard]
+        if srv.replicator is not None:
+            srv.replicator.reset()
+        primary = self.route_of(shard)
+        prepl = self.servers[primary].replicator
+        resilvered = 0
+        if prepl is not None:
+            # Fresh port per rejoin generation: the healed shard's PEP
+            # still remembers the old forwarding connection's sequence
+            # state, so the epoch salt keeps the five-tuple unique.
+            prepl.add_target(shard, srv,
+                             port=45000 + shard + 1000 * (self.epoch + 1))
+            psrv = self.servers[primary]
+            for gfid, loc in self._files.items():
+                if loc.shard != primary:
+                    continue
+                # A pre-partition replica copy may already exist on the
+                # healed shard, but its forwarding was dropped at the
+                # promotion — recopy the whole file (it missed every
+                # partition-era write) and re-register the mapping.
+                rlfid = loc.replicas.get(shard)
+                if rlfid is None:
+                    rlfid = srv.frontend.create_file(f"rejoin@{gfid}")
+                size = psrv.fs.file_size(loc.local_fid)
+                if size:
+                    data = psrv.frontend.read_sync(loc.local_fid, 0, size)
+                    srv.frontend.write_sync(rlfid, 0, data)
+                    srv.run_until_idle()
+                prepl.map_file(shard, loc.local_fid, rlfid)
+                loc.replicas[shard] = rlfid
+                resilvered += 1
+        self.rejoin_events.append(
+            {"tick": self.clock.now, "healed": shard, "primary": primary,
+             "resilvered": resilvered})
+        if self.on_rejoin is not None:
+            self.on_rejoin(shard, primary)
+        self._ready.mark(shard)
+
     def _failover(self, dead: int) -> int | None:
         """Promote a replica of ``dead``: drain the promoted shard, adopt
         its replica copies as primaries, repair key routing, release client
@@ -581,6 +699,11 @@ class DDSCluster:
                 if now >= at:
                     del self._crash_at[shard]
                     self.crash(shard)
+        if self._partitioned:
+            now = self.clock.now
+            for shard, until in list(self._partitioned.items()):
+                if now >= until:
+                    self._heal(shard)
         sup = self.supervisor
         if sup is not None:
             # Failure detection runs BEFORE the quiet-latch early returns:
@@ -696,6 +819,22 @@ class DDSCluster:
         if self.failover_events:
             out["failover"] = {"epoch": self.epoch,
                                "events": list(self.failover_events)}
+        if self.rejoin_events:
+            out["rejoins"] = list(self.rejoin_events)
+        wire_stats = {"corrupt_dropped": 0, "seq_resyncs": 0,
+                      "dpu_bypassed": 0}
+        eo = {"dup_suppressed": 0, "replayed_acks": 0}
+        for srv in self.servers:
+            ds = srv.director.stats
+            wire_stats["corrupt_dropped"] += ds.corrupt_dropped
+            wire_stats["seq_resyncs"] += ds.seq_resyncs
+            wire_stats["dpu_bypassed"] += ds.dpu_bypassed
+            eo["dup_suppressed"] += srv.host_app.dup_suppressed
+            eo["replayed_acks"] += srv.host_app.replayed_acks
+        if any(wire_stats.values()):
+            out["wire"] = wire_stats
+        if any(eo.values()):
+            out["exactly_once"] = eo
         tenants = {t: {c: h.summary() for c, h in per.items() if h.n}
                    for t, per in sorted(self._merged_tenants().items())}
         for t, n in sorted(self._merged_tenant_sheds().items()):

@@ -86,6 +86,11 @@ class HeartbeatMonitor:
     def remove(self, host: str) -> None:
         self.hosts.pop(host, None)
 
+    def watch(self, host: str) -> None:
+        """(Re-)monitor ``host`` with a fresh beat — a healed partitioned
+        shard rejoining the fleet after its removal at promotion."""
+        self.hosts[host] = HostState(host, last_beat_s=self.now())
+
 
 class StragglerDetector:
     """Flags hosts whose step time exceeds threshold x fleet median."""
@@ -130,10 +135,16 @@ class ClusterSupervisor:
 
     Wired into the cluster pump when ``ServerConfig.replication`` > 0:
     every pump beats each LIVE shard on the shared tick clock (a crashed
-    shard's heartbeat goes silent at its crash tick), and ``poll`` declares
-    a shard dead once its silence exceeds ``timeout_ticks`` — then drives
-    the cluster's replica promotion and ring repair.  Detection latency is
-    therefore exactly ``timeout_ticks`` pumps, deterministic across runs.
+    shard's heartbeat goes silent at its crash tick).  ``poll`` counts one
+    MISSED WINDOW each time a shard's silence exceeds ``timeout_ticks``,
+    then re-arms the window; only after ``miss_windows`` CONSECUTIVE
+    missed windows (default 2) does it declare death and drive the
+    cluster's replica promotion and ring repair.  A single delayed or
+    partitioned heartbeat blip therefore cannot false-promote a live
+    primary — the shard gets a full second window to beat again, and any
+    real beat resets the count.  Detection latency is exactly
+    ``miss_windows * (timeout_ticks + 1)`` pumps, deterministic across
+    runs.
 
     The straggler detector is fed per-shard replication-lag means (ticks
     between a primary's forward and the replica's ack): a replica whose
@@ -141,14 +152,17 @@ class ClusterSupervisor:
     host a training fleet would checkpoint-exclude.
     """
 
-    def __init__(self, cluster, timeout_ticks: int = 16):
+    def __init__(self, cluster, timeout_ticks: int = 16,
+                 miss_windows: int = 2):
         self.cluster = cluster
         self.clock = cluster.clock
+        self.miss_windows = max(1, miss_windows)
         names = [self._name(i) for i in range(cluster.num_shards)]
         self.monitor = HeartbeatMonitor.on_ticks(names, self.clock,
                                                  timeout_ticks)
         self.detector = StragglerDetector()
         self.events: list[FailureEvent] = []
+        self._misses: dict[str, int] = {}   # consecutive missed windows
         self._lag_seen = [(0, 0)] * cluster.num_shards  # (n, total) deltas
 
     @staticmethod
@@ -156,18 +170,35 @@ class ClusterSupervisor:
         return f"shard{shard}"
 
     def beat_live(self) -> None:
-        """One heartbeat per live shard, stamped with the current tick."""
+        """One heartbeat per live shard, stamped with the current tick.
+
+        A real beat resets the shard's consecutive-missed-window count:
+        a blip that recovers within the grace windows leaves no trace.
+        """
         beat = self.monitor.beat
         now = self.clock.now
         dead = self.cluster._dead
+        misses = self._misses
         for i in range(self.cluster.num_shards):
             if i not in dead:
-                beat(self._name(i), now)
+                name = self._name(i)
+                beat(name, now)
+                if misses:
+                    misses.pop(name, None)
 
     def poll(self) -> list[FailureEvent]:
         """Detect newly dead shards; fail each over.  Returns new events."""
         out: list[FailureEvent] = []
         for name in self.monitor.dead_hosts():
+            misses = self._misses.get(name, 0) + 1
+            if misses < self.miss_windows:
+                # Grace window: note the miss and re-arm the timeout —
+                # promotion waits for consecutive silence, so a single
+                # delay/partition blip cannot split-brain a live primary.
+                self._misses[name] = misses
+                self.monitor.beat(name, self.clock.now)
+                continue
+            self._misses.pop(name, None)
             self.monitor.remove(name)
             shard = int(name[len("shard"):])
             promoted = self.cluster._failover(shard)

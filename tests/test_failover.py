@@ -221,8 +221,10 @@ def test_supervisor_detects_crash_and_promotes_deterministically():
     assert len(cl.failover_events) == 1
     ev = cl.failover_events[0]
     assert ev["dead"] == victim and ev["epoch"] == 1
-    # detection latency == heartbeat_timeout_ticks + 1 pumps, exactly
-    assert ev["tick"] == crash_tick + RCFG["heartbeat_timeout_ticks"] + 1
+    # detection latency == miss_windows * (heartbeat_timeout_ticks + 1)
+    # pumps, exactly — the first silent window only notes a miss, the
+    # second consecutive one promotes.
+    assert ev["tick"] == crash_tick + 2 * (RCFG["heartbeat_timeout_ticks"] + 1)
     loc = cl.locate(g)
     assert loc.shard == ev["promoted"] and loc.shard != victim
     assert cl.servers[loc.shard].frontend.read_sync(
@@ -360,7 +362,7 @@ def _crash_run(victim: int, crash_delay: int):
     # Let the kill + detection complete even when the wave outran the
     # scheduled crash tick (a victim without in-flight traffic blocks no
     # harvest, so the wave can finish pre-crash).
-    deadline = crash_tick + RCFG["heartbeat_timeout_ticks"] + 5
+    deadline = crash_tick + 2 * (RCFG["heartbeat_timeout_ticks"] + 1) + 5
     while cl.clock.now < deadline:
         cl.pump()
     # every phase-2 ack readable post-failover
