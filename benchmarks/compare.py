@@ -31,6 +31,8 @@ GETSTORM_JSON = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_getstorm.json")
 CHAOS_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_chaos.json")
+RESHARD_JSON = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_reshard.json")
 
 
 def _load(d: str) -> dict:
@@ -178,12 +180,42 @@ def chaos_compare() -> None:
          f"deterministic={cur.get('deterministic')}")
 
 
+def reshard_compare() -> None:
+    """Committed resharding record: what mid-run growth bought, in ticks."""
+    if not os.path.exists(RESHARD_JSON):
+        print("# no BENCH_reshard.json; reshard comparison skipped")
+        return
+    with open(RESHARD_JSON) as fh:
+        doc = json.load(fh)
+    cur = doc.get("current", {}).get("full")
+    if not cur:
+        print("# BENCH_reshard.json lacks current/full; skipped")
+        return
+    cfg = cur.get("config", {})
+    section("elastic resharding (ticks): "
+            f"{cfg.get('shards')} -> {cfg.get('grow_to')} shards mid-run")
+    emit("reshard_growth", cur["growth_ratio"],
+         f"steady ops/tick {cur['pre_ops_per_tick']:.1f} -> "
+         f"{cur['post_ops_per_tick']:.1f} ({cur['growth_ratio']:.2f}x), "
+         f"lost_acked={cur['lost_acked']}, "
+         f"deterministic={cur.get('deterministic')}")
+    emit("reshard_blip", float(cur["grow_p99"]),
+         f"round p99 pre {cur['pre_p99']}t -> during growth "
+         f"{cur['grow_p99']}t -> post {cur['post_p99']}t; "
+         f"migrated={cur['keys_migrated']} keys, "
+         f"dual_routed={cur['dual_routed']}")
+    emit("reshard_window", float(cur["grow_ticks_max"]),
+         f"slowest joiner: add->flip {cur['flip_ticks_max']}t, "
+         f"add->retired {cur['grow_ticks_max']}t")
+
+
 def main() -> None:
     latency_compare()
     tenancy_compare()
     failover_compare()
     getstorm_compare()
     chaos_compare()
+    reshard_compare()
     if not (os.path.isdir(BASE) and os.path.isdir(OPT)):
         print("# need both results/dryrun and results/dryrun_opt")
         return

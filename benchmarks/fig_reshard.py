@@ -1,0 +1,391 @@
+"""Elastic resharding gate: grow the cluster mid-run, double the throughput.
+
+PR 10 adds online ring membership: ``ShardedKVStore.add_shard`` streams the
+joiner's keys source -> destination over the host wire while the cluster
+keeps serving, dual-routes writes during the handoff (the ack holds until
+the destination holds the bytes), and flips ownership atomically with an
+epoch bump that in-flight requests ride via the PR 7 fence + replay.  This
+benchmark holds that machinery to the paper's scale-out economics: storage
+you can GROW under load, without a maintenance window, without losing a
+byte.
+
+One scenario: a Zipf-skewed closed-loop GET/overwrite workload runs on N
+shards; mid-run the cluster doubles to 2N, one ``add_shard`` at a time,
+with the workload never pausing.  Everything is measured in deterministic
+TICKS of the shared cluster clock:
+
+  * **throughput doubles** — steady ops/tick after growth must reach
+    >= ``TPUT_GATE`` (1.8x) the N-shard rate: the joiners take real load,
+    they are not decorative ring entries.
+  * **zero lost acked writes** — every acked PUT is byte-compared on every
+    subsequent read AND in a final full-ledger sweep, across all the
+    migrations and epoch bumps.  Hard gate, any mode.
+  * **bounded growth window** — each add_shard reaches its ownership flip
+    within ``FLIP_TICK_BUDGET`` ticks of starting; the whole doubling
+    (including cleanup drains) fits ``GROW_TICK_BUDGET`` ticks per joiner.
+  * **bounded p99 blip** — rounds racing a live migration may exceed the
+    steady-state p99 by at most ``BLIP_SLACK`` ticks (held dual-route
+    acks, fence replays), and post-growth rounds must be FASTER than
+    steady state (that is the point of growing).
+
+Two same-seed runs must produce identical round-tick traces, reshard
+events and ledgers (determinism gate).  Results go to
+``BENCH_reshard.json``; ``--smoke`` (CI) runs a reduced config and fails
+on a >30% tick regression vs the committed ``current`` numbers.
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import struct
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, section  # noqa: E402
+from repro.apps.kv_store import KVClient, ShardedKVStore, decode_record  # noqa: E402
+from repro.core import wire  # noqa: E402
+from repro.core.dds_server import ServerConfig  # noqa: E402
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_reshard.json")
+
+TPUT_GATE = 1.8         # post-growth steady ops/tick >= 1.8x pre-growth
+BLIP_SLACK = 48         # growth-round allowance beyond the steady p99
+FLIP_TICK_BUDGET = 160  # add_shard -> ownership flip, per joiner
+GROW_TICK_BUDGET = 360  # add_shard -> migration retired, per joiner
+SMOKE_REGRESSION = 1.3  # CI: fail when ticks grow >30% vs recorded current
+
+CONFIGS = {
+    "full": dict(shards=8, grow_to=16, clients=2, hot_keys=1024, zipf_a=1.03,
+                 pre_rounds=10, post_rounds=10, max_grow_rounds=160,
+                 gets=512, overwrites=128, value_size=64, queue_depth=4),
+    "smoke": dict(shards=4, grow_to=8, clients=2, hot_keys=512, zipf_a=1.03,
+                  pre_rounds=6, post_rounds=6, max_grow_rounds=120,
+                  gets=384, overwrites=96, value_size=64, queue_depth=4),
+}
+
+ZIPF_SEED = 0x6E517A
+
+
+def calibrate(iters: int = 200_000) -> float:
+    """Reference ops/sec of a fixed pure-Python loop (machine-speed proxy)."""
+    pack = struct.Struct("<QII").pack
+    blob = bytes(range(256)) * 8
+    t0 = time.perf_counter()
+    d: dict[int, bytes] = {}
+    for i in range(iters):
+        d[i & 1023] = blob[i & 255 : (i & 255) + 64]
+        pack(i, i & 0xFFFF, 64)
+    return iters / (time.perf_counter() - t0)
+
+
+def percentile(vals: list[int], p: float) -> int:
+    """Exact percentile of a small integer sample (nearest-rank)."""
+    if not vals:
+        return 0
+    s = sorted(vals)
+    return s[min(len(s) - 1, -(-len(s) * int(p) // 100) - 1)]
+
+
+def _zipf_ranks(cfg: dict, total: int) -> list[int]:
+    """Seeded skewed rank sequence, precomputed (untimed): the exact same
+    key sequence every rep, every run, every machine."""
+    rng = np.random.default_rng(ZIPF_SEED)
+    return [(int(z) - 1) % cfg["hot_keys"]
+            for z in rng.zipf(cfg["zipf_a"], size=total)]
+
+
+def _value(key: bytes, rnd: int, size: int) -> bytes:
+    """Round-stamped value, a function of (key, round) ONLY — two clients
+    overwriting the same key in the same round agree on the bytes, so the
+    acked ledger is unambiguous."""
+    base = key + b"#%05d#" % rnd
+    return (base * (size // len(base) + 1))[:size]
+
+
+def run_reshard_workload(cfg: dict) -> dict:
+    """Closed-loop Zipf GET/overwrite rounds; double the shard count
+    mid-run, one live migration at a time, and keep score in ticks."""
+    config = ServerConfig(device_capacity=1 << 26, cache_items=1 << 14,
+                          dedup_cache=1 << 10)
+    store = ShardedKVStore(num_shards=cfg["shards"], config=config,
+                           elastic=True)
+    cluster = store.cluster
+    qd = cfg["queue_depth"]
+    for srv in cluster.servers:
+        # Bounded per-poll completion budget: rounds are limited by device
+        # service rate, so ops/tick tracks how many shards share the load
+        # — the regime the 1.8x growth gate is about.
+        srv.device.queue_depth = qd
+    clients = [KVClient(store) for _ in range(cfg["clients"])]
+    vsize = cfg["value_size"]
+    hot = [b"grow-%04d" % i for i in range(cfg["hot_keys"])]
+
+    # Untimed warm: PUT-ack every key (seeds the acked ledger + DPU cache).
+    acked: dict[bytes, bytes] = {}
+    rids = clients[0].submit([("put", k, _value(k, -1, vsize)) for k in hot])
+    res = clients[0].harvest(rids)
+    assert all(s == wire.E_OK for s, _ in res.values())
+    for k in hot:
+        acked[k] = _value(k, -1, vsize)
+    res = clients[0].harvest(clients[0].submit([("get", k) for k in hot]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    for cli in clients:
+        cli.net.run_until_idle()
+
+    per_round = cfg["gets"] + cfg["overwrites"]
+    budget = (cfg["pre_rounds"] + cfg["post_rounds"]
+              + cfg["max_grow_rounds"])
+    ranks = iter(_zipf_ranks(cfg, budget * cfg["clients"] * per_round))
+    lost = 0
+    total = 0
+    round_ticks: list[int] = []
+    grow_spans: list[dict] = []   # per-joiner: add->flip and add->retired
+
+    def one_round(r: int) -> None:
+        nonlocal lost, total
+        t_start = cluster.clock.now
+        # GETs and overwrites go out in ONE pipelined batch per client —
+        # a second serialized submit/harvest phase would add a fixed
+        # per-round latency floor that masks the shard-parallel service
+        # time the growth gate is about.  A GET racing this round's
+        # overwrite of the same key may see either generation; both are
+        # exact, because _value is a function of (key, round) only and
+        # both clients stamp identical bytes.
+        owr = [[hot[next(ranks)] for _ in range(cfg["overwrites"])]
+               for _ in clients]
+        this_gen = {k for ks in owr for k in ks}
+        meta = []
+        for cli, oks in zip(clients, owr):
+            gks = [hot[next(ranks)] for _ in range(cfg["gets"])]
+            ops = [("get", k) for k in gks]
+            ops += [("put", k, _value(k, r, vsize)) for k in oks]
+            meta.append((cli, gks, oks, cli.submit(ops)))
+        for cli, gks, oks, rids in meta:
+            res = cli.harvest(rids)
+            for k, rid in zip(gks, rids):
+                status, body = res[rid]
+                if status != wire.E_OK:
+                    lost += 1
+                    continue
+                val = decode_record(body)[1]
+                if val != acked[k] and not (
+                        k in this_gen and val == _value(k, r, vsize)):
+                    lost += 1
+            for k, rid in zip(oks, rids[len(gks):]):
+                if res[rid][0] == wire.E_OK:
+                    acked[k] = _value(k, r, vsize)
+                else:
+                    lost += 1
+        # No run_until_idle here: with a live migration the cluster never
+        # goes idle (the resharder keeps the pump busy through its
+        # cleanup grace), and the whole point is that the workload NEVER
+        # pauses for it — a round ends when its harvests complete.
+        total += cfg["clients"] * per_round
+        round_ticks.append(cluster.clock.now - t_start)
+
+    gc.collect()
+    gc.disable()   # keep collector pauses out of the timed region
+    t0 = time.perf_counter()
+    rnd = 0
+    for _ in range(cfg["pre_rounds"]):
+        one_round(rnd)
+        rnd += 1
+    pre_ticks = round_ticks[:]
+    grow_first = rnd
+
+    # Mid-run growth: one live migration at a time, workload never pauses.
+    pending = cfg["grow_to"] - cfg["shards"]
+    span = None
+    while pending or cluster.resharder is not None:
+        if cluster.resharder is None and pending:
+            new = store.add_shard()
+            cluster.servers[new].device.queue_depth = qd
+            span = {"joiner": new, "add_tick": cluster.clock.now,
+                    "flip_tick": None, "retired_tick": None}
+            grow_spans.append(span)
+            pending -= 1
+        one_round(rnd)
+        rnd += 1
+        if span is not None and span["flip_tick"] is None \
+                and cluster.reshard_events \
+                and cluster.reshard_events[-1]["kind"] == f"add:{span['joiner']}":
+            span["flip_tick"] = cluster.reshard_events[-1]["tick"]
+        if span is not None and cluster.resharder is None:
+            span["retired_tick"] = cluster.clock.now
+            span = None
+        if rnd - grow_first > cfg["max_grow_rounds"]:
+            raise RuntimeError("growth never finished within "
+                               f"{cfg['max_grow_rounds']} rounds")
+    grow_ticks_list = round_ticks[grow_first:]
+
+    post_first = rnd
+    for _ in range(cfg["post_rounds"]):
+        one_round(rnd)
+        rnd += 1
+    post_ticks = round_ticks[post_first:]
+
+    # Final sweep: every byte ever acked must be readable on the grown ring.
+    sweep = clients[0].submit([("get", k) for k in hot])
+    res = clients[0].harvest(sweep)
+    for k, rid in zip(hot, sweep):
+        status, body = res[rid]
+        if status != wire.E_OK or decode_record(body)[1] != acked[k]:
+            lost += 1
+    elapsed = time.perf_counter() - t0
+    gc.enable()
+
+    ops_round = cfg["clients"] * per_round
+    reshard = cluster.latency_stats().get("resharding", {})
+    return {
+        "requests": total,
+        "ticks": cluster.clock.now,
+        "wall_s": elapsed,
+        "ops_per_s": total / elapsed,
+        "lost_acked": lost,
+        "round_ticks": round_ticks,
+        "pre_ops_per_tick": (len(pre_ticks) * ops_round
+                             / max(sum(pre_ticks), 1)),
+        "post_ops_per_tick": (len(post_ticks) * ops_round
+                              / max(sum(post_ticks), 1)),
+        "pre_p99": percentile(pre_ticks, 99),
+        "grow_p99": percentile(grow_ticks_list, 99),
+        "post_p99": percentile(post_ticks, 99),
+        "grow_rounds": len(grow_ticks_list),
+        "grow_spans": grow_spans,
+        "flip_ticks_max": max(s["flip_tick"] - s["add_tick"]
+                              for s in grow_spans),
+        "grow_ticks_max": max(s["retired_tick"] - s["add_tick"]
+                              for s in grow_spans),
+        "keys_migrated": reshard.get("totals", {}).get("keys_migrated", 0),
+        "dual_routed": reshard.get("totals", {}).get("dual_routed", 0),
+        "reshard_events": reshard.get("events", []),
+        "final_shards": len(cluster.servers),
+    }
+
+
+def load_json() -> dict:
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as fh:
+            return json.load(fh)
+    return {"schema": 1, "configs": CONFIGS}
+
+
+def save_json(doc: dict) -> None:
+    with open(JSON_PATH, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = ("--smoke" in argv
+             or os.environ.get("DDS_BENCH_SMOKE", "0") == "1")
+    record = ("current" if "--record-current" in argv else None)
+    mode = "smoke" if smoke else "full"
+    cfg = CONFIGS[mode]
+
+    section(f"elastic resharding ({mode}: {cfg['shards']} -> "
+            f"{cfg['grow_to']} shards mid-run, {cfg['clients']} clients, "
+            f"Zipf a={cfg['zipf_a']} over {cfg['hot_keys']} keys)")
+    # Two same-seed runs (determinism gate); wall-clock is paired with
+    # surrounding calibrations for the report line only — every gate below
+    # lives in the deterministic tick domain.
+    c1 = calibrate()
+    res = run_reshard_workload(cfg)
+    res2 = run_reshard_workload(cfg)
+    c2 = calibrate()
+    calib = max(c1, c2)
+    identical = all(res[k] == res2[k] for k in
+                    ("round_ticks", "reshard_events", "lost_acked",
+                     "ticks", "requests", "keys_migrated"))
+    ratio = res["post_ops_per_tick"] / max(res["pre_ops_per_tick"], 1e-9)
+    emit(f"reshard_{mode}", ratio,
+         f"growth={ratio:.2f}x lost_acked={res['lost_acked']} "
+         f"migrated={res['keys_migrated']} dual_routed={res['dual_routed']} "
+         f"grow_p99={res['grow_p99']}t flip_max={res['flip_ticks_max']}t "
+         f"deterministic={identical} tput={res['ops_per_s']:.0f}op/s")
+
+    doc = load_json()
+    doc["configs"] = CONFIGS
+    res_out = {k: v for k, v in res.items() if k != "round_ticks"}
+    res_out["config"] = cfg
+    res_out["deterministic"] = identical
+    res_out["growth_ratio"] = round(ratio, 3)
+    entry = {"calibration_ops_per_s": calib, mode: res_out}
+    if record:
+        doc.setdefault("current", {})["calibration_ops_per_s"] = calib
+        doc["current"][mode] = res_out
+        print(f"# recorded {mode} measurement into 'current'")
+    doc["last_run"] = {"mode": mode, **entry}
+    save_json(doc)
+
+    failures = []
+    if res["lost_acked"]:
+        failures.append(f"{res['lost_acked']} acknowledged writes lost or "
+                        f"stale across the growth (gate: zero)")
+    if not identical:
+        failures.append("two same-seed runs diverged (round ticks, reshard "
+                        "events or ledger) — determinism gate")
+    ok = ratio >= TPUT_GATE
+    print(f"# steady ops/tick, {cfg['grow_to']} vs {cfg['shards']} shards: "
+          f"{res['post_ops_per_tick']:.2f} vs {res['pre_ops_per_tick']:.2f} "
+          f"({ratio:.2f}x; gate {TPUT_GATE:.2f}x) -> "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"growth did not pay: {ratio:.2f}x < "
+                        f"{TPUT_GATE:.2f}x the pre-growth ops/tick")
+    blip_limit = res["pre_p99"] + BLIP_SLACK
+    ok = res["grow_p99"] <= blip_limit
+    print(f"# growth-round p99: {res['grow_p99']}t (steady p99 "
+          f"{res['pre_p99']}t + slack {BLIP_SLACK}t = limit {blip_limit}t) "
+          f"-> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"migration blip unbounded: {res['grow_p99']} > "
+                        f"{blip_limit} ticks")
+    ok = res["post_p99"] <= res["pre_p99"]
+    print(f"# post-growth round p99: {res['post_p99']}t vs pre "
+          f"{res['pre_p99']}t -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"post-growth p99 did not improve: "
+                        f"{res['post_p99']} > {res['pre_p99']} ticks")
+    ok = res["flip_ticks_max"] <= FLIP_TICK_BUDGET
+    print(f"# slowest add->flip: {res['flip_ticks_max']}t "
+          f"(budget {FLIP_TICK_BUDGET}t) -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"ownership flip too slow: {res['flip_ticks_max']} "
+                        f"> {FLIP_TICK_BUDGET} ticks")
+    ok = res["grow_ticks_max"] <= GROW_TICK_BUDGET
+    print(f"# slowest add->retired: {res['grow_ticks_max']}t "
+          f"(budget {GROW_TICK_BUDGET}t) -> {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(f"migration drain too slow: {res['grow_ticks_max']} "
+                        f"> {GROW_TICK_BUDGET} ticks")
+    if smoke and not record:
+        ref = doc.get("current", {}).get("smoke")
+        if ref and ref.get("config") == cfg:
+            for key in ("grow_p99", "pre_p99", "grow_ticks_max"):
+                limit = max(ref[key], 1) * SMOKE_REGRESSION
+                if res[key] > limit:
+                    failures.append(
+                        f"{key} regressed >30% vs recorded current: "
+                        f"{res[key]} > {limit:.1f} ticks")
+            print(f"# smoke vs recorded current: grow p99 {res['grow_p99']}t "
+                  f"vs {ref['grow_p99']}t, growth {ratio:.2f}x "
+                  f"vs {ref['growth_ratio']:.2f}x")
+        else:
+            print("# no comparable recorded current numbers; "
+                  "smoke regression gate skipped")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

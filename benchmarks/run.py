@@ -25,9 +25,9 @@ from benchmarks import (compare, fig14_16_model, fig17_rings,
                         fig18_23_zerocopy, fig22_cache_table,
                         fig24_26_integration, fig_chaos,
                         fig_cluster_scaling, fig_failover, fig_getstorm,
-                        fig_hotpath, fig_latency, fig_scaleout,
-                        fig_tenancy, fig_writepath, kernels_bench,
-                        roofline)
+                        fig_hotpath, fig_latency, fig_reshard,
+                        fig_scaleout, fig_tenancy, fig_writepath,
+                        kernels_bench, roofline)
 
 MODULES = {
     "cluster": fig_cluster_scaling,
@@ -39,6 +39,7 @@ MODULES = {
     "failover": fig_failover,
     "getstorm": fig_getstorm,
     "chaos": fig_chaos,
+    "reshard": fig_reshard,
     "fig14_16": fig14_16_model,
     "fig17": fig17_rings,
     "fig18_23": fig18_23_zerocopy,

@@ -37,15 +37,24 @@ from repro.core.client import ClusterClient
 from repro.core.dds_server import APP_RESP_HDR, ServerConfig, decode_batch
 from repro.core.offload import OffloadAPI, ReadOp, WriteOp
 from repro.distributed.cluster import DDSCluster
+from repro.distributed.resharding import Resharder
 
 # -- network message formats (batched with the §8.1 framing) -------------------------
 KV_PUT = 16
 KV_GET = 17
 KV_DEL = 18
+KV_MPUT = 19   # migration sync PUT (elastic resharding; shield-checked)
+KV_MDEL = 20   # migration sync DEL
 PUT_HDR = struct.Struct("<BQII")   # type, req_id, klen, vlen
 GET_HDR = struct.Struct("<BQI")    # type, req_id, klen
 REC_HDR = struct.Struct("<II")     # klen, vlen (on-disk record header)
 LOC = struct.Struct("<IQI")        # file_id, offset, size (PUT ack body)
+
+# A DELETE appends a TOMBSTONE record (header flag bit in vlen, key, no
+# value bytes): deletes ride the same log/replication/ack-hold path as
+# PUTs, so a replica promotion can no longer resurrect a deleted key.
+TOMBSTONE = 1 << 31
+_VLEN_MASK = TOMBSTONE - 1
 
 # Unified-surface op spellings -> latency class for the issue-tick stamp.
 _KV_CLS = {"get": "r", "put": "w", "delete": "w"}
@@ -63,9 +72,11 @@ def encode_del(req_id: int, key: bytes) -> bytes:
     return GET_HDR.pack(KV_DEL, req_id, len(key)) + key
 
 
-def decode_record(data: bytes) -> tuple[bytes, bytes]:
+def decode_record(data: bytes) -> tuple[bytes, bytes | None]:
     klen, vlen = REC_HDR.unpack_from(data, 0)
     k = data[REC_HDR.size : REC_HDR.size + klen]
+    if vlen & TOMBSTONE:
+        return k, None
     v = data[REC_HDR.size + klen : REC_HDR.size + klen + vlen]
     return k, v
 
@@ -105,16 +116,29 @@ class _ShardState:
     puts: int = 0
     dels: int = 0
     host_gets: int = 0
+    # Elastic resharding: per-key heat sketch (bounded, halve-on-overflow)
+    # for hot-shard detection, the migration-destination write SHIELD
+    # (keys directly written while a migration is armed — a late resent
+    # sync for one is stale by construction and must not apply), and the
+    # applied/skipped sync counters.
+    heat: dict = field(default_factory=dict)
+    shield: set | None = None
+    mig_puts: int = 0
+    mig_dels: int = 0
+    mig_skipped: int = 0
 
 
 class ShardedKVStore:
     """N-shard KV service; every shard is a full DDS storage server."""
 
     def __init__(self, num_shards: int = 2,
-                 config: ServerConfig | None = None, vnodes: int = 64):
+                 config: ServerConfig | None = None, vnodes: int = 64,
+                 elastic: bool = False):
         self._states = [_ShardState() for _ in range(num_shards)]
+        self._heat_base = [0] * num_shards
         self.cluster = DDSCluster(num_shards, config,
-                                  api_factory=self._api_for, vnodes=vnodes)
+                                  api_factory=self._api_for, vnodes=vnodes,
+                                  elastic=elastic)
         for st, srv in zip(self._states, self.cluster.servers):
             st.log_fid = srv.frontend.create_file("kvlog")
             srv.run_until_idle()
@@ -142,8 +166,10 @@ class ShardedKVStore:
         DPU cache entries for adopted keys are dropped-then-warmed so a
         stale mapping can never survive the promotion.
 
-        Limitation (documented): deletes are not logged, so a key deleted
-        on the dead primary after its last PUT resurrects here.
+        Deletes are logged as TOMBSTONE records, so a key deleted on the
+        dead primary after its last PUT stays deleted here: the scan's
+        later-wins rule resolves it to the tombstone, which drops the
+        key instead of adopting it.
         """
         fid = self._states[dead].replica_fids.get(promoted, -1)
         if fid < 0:
@@ -152,17 +178,19 @@ class ShardedKVStore:
         srv = self.cluster.servers[promoted]
         size = srv.fs.file_size(fid)
         data = srv.frontend.read_sync(fid, 0, size) if size else b""
-        adopted_index: dict[bytes, KVLocation] = {}
+        adopted_index: dict[bytes, KVLocation | None] = {}
         at_offset: dict = {}
         offsets: list = []
         pos = 0
         while pos + REC_HDR.size <= len(data):
             klen, vlen = REC_HDR.unpack_from(data, pos)
-            total = REC_HDR.size + klen + vlen
+            total = REC_HDR.size + klen + (vlen & _VLEN_MASK)
             if pos + total > len(data):
                 break   # torn tail record: never acked, drop it
             key = bytes(data[pos + REC_HDR.size : pos + REC_HDR.size + klen])
-            adopted_index[key] = KVLocation(fid, pos, total)  # later wins
+            # later wins; a tombstone resolves the key to DELETED
+            adopted_index[key] = None if vlen & TOMBSTONE \
+                else KVLocation(fid, pos, total)
             at_offset[pos] = (key, total)
             offsets.append(pos)
             pos += total
@@ -171,9 +199,13 @@ class ShardedKVStore:
         st.adopted_bytes += pos
         table = srv.cache_table
         for key, loc in adopted_index.items():
-            st.index[key] = loc   # key spaces are ring-disjoint: no clobber
             if table is not None:
                 table.delete(key)     # a stale pre-failover mapping
+            if loc is None:
+                st.index.pop(key, None)   # tombstoned on the dead primary
+                continue
+            st.index[key] = loc   # key spaces are ring-disjoint: no clobber
+            if table is not None:
                 table.insert(key, loc)  # warm: post-failover GETs DPU-serve
 
     def _on_rejoin(self, healed: int, primary: int) -> None:
@@ -412,10 +444,15 @@ class ShardedKVStore:
             out, pos = [], 0
             while pos + REC_HDR.size <= len(op.data):
                 klen, vlen = REC_HDR.unpack_from(op.data, pos)
-                total = REC_HDR.size + klen + vlen
+                total = REC_HDR.size + klen + (vlen & _VLEN_MASK)
                 key = bytes(op.data[pos + REC_HDR.size
                                     : pos + REC_HDR.size + klen])
-                out.append((key, KVLocation(op.file_id, op.offset + pos, total)))
+                # A tombstone record maps the key to None: cache-on-write
+                # becomes invalidate-on-write for deletes (the DPU drops
+                # the mapping before the delete's ack can release).
+                out.append((key, None) if vlen & TOMBSTONE else
+                           (key, KVLocation(op.file_id, op.offset + pos,
+                                            total)))
                 pos += total
             return out
 
@@ -470,6 +507,27 @@ class ShardedKVStore:
             return APP_RESP_HDR.pack(req_id, err,
                                      op.size if err == wire.E_OK else 0)
 
+        def heat_touch(key: bytes) -> None:
+            """Bounded per-key heat sketch: halve-and-prune on overflow so
+            a long Zipf run keeps only the genuinely hot tail."""
+            h = st.heat
+            h[key] = h.get(key, 0) + 1
+            if len(h) > 128:
+                for k, v in list(h.items()):
+                    v >>= 1
+                    if v:
+                        h[k] = v
+                    else:
+                        del h[k]
+
+        def append_record(req_id: int, key: bytes,
+                          rec: bytes, body: bytes) -> tuple:
+            loc = KVLocation(st.log_fid, st.log_off, len(rec))
+            st.log_off += len(rec)
+            st.at_offset[loc.offset] = (key, loc.size)
+            st.offsets.append(loc.offset)   # log appends: stays sorted
+            return ("w", req_id, loc.file_id, loc.offset, rec, body)
+
         def host_handler(msg: bytes) -> tuple:
             typ = msg[0] if msg else 0
             if typ == KV_PUT:
@@ -485,6 +543,9 @@ class ShardedKVStore:
                 st.at_offset[loc.offset] = (key, loc.size)
                 st.offsets.append(loc.offset)   # log appends: stays sorted
                 st.puts += 1
+                heat_touch(key)
+                if st.shield is not None:
+                    st.shield.add(key)
                 # Append to the log; Cache() fires on the write -> next GET
                 # for this key is DPU-served.  The ack returns the location.
                 return ("w", req_id, loc.file_id, loc.offset, rec, loc.encode())
@@ -493,20 +554,54 @@ class ShardedKVStore:
                 key = bytes(msg[GET_HDR.size : GET_HDR.size + klen])
                 loc = st.index.get(key)
                 st.host_gets += 1
+                heat_touch(key)
                 if loc is None:
                     return ("resp", req_id, wire.E_NOENT, b"")
                 return ("r", req_id, loc.file_id, loc.offset, loc.size)
             if typ == KV_DEL:
                 _, req_id, klen = GET_HDR.unpack_from(msg, 0)
                 key = bytes(msg[GET_HDR.size : GET_HDR.size + klen])
-                loc = st.index.pop(key, None)
-                if loc is None:
+                heat_touch(key)
+                if st.shield is not None:
+                    st.shield.add(key)
+                if st.index.pop(key, None) is None:
                     return ("resp", req_id, wire.E_NOENT, b"")
                 st.dels += 1
-                # Read-for-update: the host pulls the record back, which
-                # fires Invalidate() and drops the DPU mapping BEFORE the
-                # response; the dead record's bytes ack the delete.
-                return ("r", req_id, loc.file_id, loc.offset, loc.size)
+                # Tombstone append: the delete rides the same log write /
+                # replication / ack-hold path as a PUT, and Cache() drops
+                # the DPU mapping when the record lands (a promoted
+                # replica's log scan sees the delete too — no
+                # resurrection).
+                rec = REC_HDR.pack(klen, TOMBSTONE) + key
+                return append_record(req_id, key, rec, b"")
+            if typ == KV_MPUT:
+                # Migration sync from the resharding source.  If this key
+                # was directly written here since the shield armed, the
+                # sync is STALE (every migration value predates the
+                # ownership flip; every direct write postdates it) — ack
+                # it without applying.
+                _, req_id, klen, vlen = PUT_HDR.unpack_from(msg, 0)
+                key = bytes(msg[PUT_HDR.size : PUT_HDR.size + klen])
+                if st.shield is not None and key in st.shield:
+                    st.mig_skipped += 1
+                    return ("resp", req_id, wire.E_OK, b"")
+                value = msg[PUT_HDR.size + klen : PUT_HDR.size + klen + vlen]
+                rec = b"".join((REC_HDR.pack(klen, vlen), key, value))
+                loc = KVLocation(st.log_fid, st.log_off, len(rec))
+                st.index[key] = loc
+                st.mig_puts += 1
+                return append_record(req_id, key, rec, loc.encode())
+            if typ == KV_MDEL:
+                _, req_id, klen = GET_HDR.unpack_from(msg, 0)
+                key = bytes(msg[GET_HDR.size : GET_HDR.size + klen])
+                if st.shield is not None and key in st.shield:
+                    st.mig_skipped += 1
+                    return ("resp", req_id, wire.E_OK, b"")
+                if st.index.pop(key, None) is None:
+                    return ("resp", req_id, wire.E_NOENT, b"")
+                st.mig_dels += 1
+                rec = REC_HDR.pack(klen, TOMBSTONE) + key
+                return append_record(req_id, key, rec, b"")
             return ("resp", 0, wire.E_INVAL, b"")
 
         return OffloadAPI(off_pred, off_func, cache=cache,
@@ -518,6 +613,164 @@ class ShardedKVStore:
                           # Lifecycle classifier: GETs are reads; PUT/DEL
                           # are writes (mutations) in the latency stats.
                           read_types=frozenset({KV_GET}))
+
+    # -- elastic membership (online resharding) -----------------------------------------
+    def add_shard(self) -> int:
+        """Grow the cluster by one shard and start a LIVE migration of the
+        keys the new ring assigns to it.  Returns the new shard id; the
+        migration runs inside the cluster pump (``run_until_idle`` or any
+        client traffic drives it) and flips ownership atomically once the
+        destination holds every migrating byte."""
+        cl = self.cluster
+        if cl.resharder is not None:
+            raise RuntimeError("a resharding migration is already active")
+        new = len(cl.servers)
+        # State first: the ``_api_for`` closure binds by index at server
+        # construction, so the slot must exist before ``cl.add_shard``.
+        self._states.append(_ShardState())
+        self._heat_base.append(0)
+        try:
+            cl.add_shard()
+        except Exception:
+            self._states.pop()
+            self._heat_base.pop()
+            raise
+        st = self._states[new]
+        srv = cl.servers[new]
+        st.log_fid = srv.frontend.create_file("kvlog")
+        srv.run_until_idle()
+        pending = cl.ring.copy()
+        pending.add_node(new)
+        if cl.replication:
+            st.replica_fids = cl.replicate_file(new, st.log_fid, "kvlog",
+                                                ring=pending)
+        sources = sorted({cl.route_of(n) for n in cl.ring.nodes()}
+                         - {new} - cl._dead)
+        cl.start_reshard(Resharder(cl, self, pending,
+                                   [(s, new) for s in sources],
+                                   tag=f"add:{new}"))
+        return new
+
+    def remove_shard(self, shard: int) -> None:
+        """Drain ``shard`` out of the ring: stream its keys to their new
+        owners, then flip.  The server keeps running until the flip (it
+        must serve reads and dual-route writes during the migration); it
+        is marked retired afterwards."""
+        cl = self.cluster
+        if cl.resharder is not None:
+            raise RuntimeError("a resharding migration is already active")
+        if shard not in cl.ring.nodes():
+            raise ValueError(f"shard {shard} is not a ring member")
+        src = cl.route_of(shard)
+        if src in cl._dead:
+            raise ValueError(f"shard {shard} has no live server")
+        pending = cl.ring.copy()
+        pending.remove_node(shard)
+        dests = sorted(set(pending.nodes()) - {src} - cl._dead)
+        cl.start_reshard(Resharder(cl, self, pending,
+                                   [(src, d) for d in dests],
+                                   tag=f"remove:{shard}", retire=(shard,)))
+
+    # -- resharding adapter (driven by distributed.resharding.Resharder) ----------------
+    def migration_keys(self, shard: int) -> list:
+        """Deterministic snapshot of the keys ``shard`` currently owns."""
+        return sorted(self._states[shard].index)
+
+    def index_loc(self, shard: int, key: bytes):
+        return self._states[shard].index.get(key)
+
+    def read_value(self, shard: int, key: bytes, loc: KVLocation) -> bytes:
+        """Read a record's value bytes straight from device memory.
+
+        The front-end's synchronous read helper would eat concurrent host
+        completions on a busy shard (and its invalidate-on-read hook
+        would evict the source's own DPU entries for streamed keys) — the
+        migration driver instead translates through the fs map and reads
+        the committed bytes raw.  Safe by construction: the driver only
+        reads snapshot-time locations, made durable by a device drain at
+        migration setup; every later write carries its bytes through the
+        source tap."""
+        srv = self.cluster.servers[shard]
+        data = b"".join(srv.device.raw_read(phys, n) for phys, n in
+                        srv.fs.translate(loc.file_id, loc.offset, loc.size))
+        return decode_record(data)[1]
+
+    def parse_migration_record(self, shard: int, file_id: int, offset: int,
+                               data) -> tuple | None:
+        """Parse a tapped write into ``(key, loc, value)``; None if the
+        write is not this shard's KV log (journal, replica copies...).
+        Tombstones parse to ``(key, None, None)``."""
+        st = self._states[shard]
+        if file_id != st.log_fid or len(data) < REC_HDR.size:
+            return None
+        klen, vlen = REC_HDR.unpack_from(data, 0)
+        key = bytes(data[REC_HDR.size : REC_HDR.size + klen])
+        if vlen & TOMBSTONE:
+            return key, None, None
+        total = REC_HDR.size + klen + (vlen & _VLEN_MASK)
+        return (key, KVLocation(file_id, offset, total),
+                bytes(data[REC_HDR.size + klen : total]))
+
+    @staticmethod
+    def encode_migration_put(rrid: int, key: bytes, value: bytes) -> bytes:
+        return PUT_HDR.pack(KV_MPUT, rrid, len(key), len(value)) + key + value
+
+    @staticmethod
+    def encode_migration_del(rrid: int, key: bytes) -> bytes:
+        return GET_HDR.pack(KV_MDEL, rrid, len(key)) + key
+
+    def arm_shield(self, shard: int) -> None:
+        self._states[shard].shield = set()
+
+    def disarm_shield(self, shard: int) -> None:
+        if shard < len(self._states):
+            self._states[shard].shield = None
+
+    def _drop_keys(self, shard: int, keys) -> None:
+        st = self._states[shard]
+        table = self.cluster.servers[shard].cache_table
+        for k in keys:
+            st.index.pop(k, None)
+            if table is not None:
+                table.delete(k)
+
+    def drop_source_keys(self, shard: int, keys) -> None:
+        """Post-flip cleanup: the source sheds its copies of migrated
+        keys (index + any DPU entries fence-passed traffic re-warmed)."""
+        self._drop_keys(shard, keys)
+
+    def drop_dest_keys(self, shard: int, keys) -> None:
+        """Abort: the destination sheds the partial copy it streamed."""
+        self._drop_keys(shard, keys)
+
+    # -- hot-shard detection -------------------------------------------------------------
+    def shard_heat(self) -> list[int]:
+        """Per-shard ops since the previous call (PUT+GET+DEL, host and
+        DPU paths) — the skew signal ``hot_shards`` thresholds against."""
+        out = []
+        for i, (st, srv) in enumerate(zip(self._states,
+                                          self.cluster.servers)):
+            total = (st.puts + st.dels + st.host_gets
+                     + srv.offload.stats.completed)
+            out.append(total - self._heat_base[i])
+            self._heat_base[i] = total
+        return out
+
+    def hot_shards(self, factor: float = 2.0,
+                   min_ops: int = 64) -> list[int]:
+        """Shards whose heat exceeds ``factor``x the live-shard mean (and
+        ``min_ops`` absolute) — candidates for an ``add_shard`` rebalance."""
+        heat = self.shard_heat()
+        cl = self.cluster
+        live = [h for i, h in enumerate(heat)
+                if i not in cl._dead and i not in cl.retired]
+        if not live:
+            return []
+        mean = sum(live) / len(live)
+        floor = max(float(min_ops), factor * mean)
+        return [i for i, h in enumerate(heat)
+                if h >= floor and i not in cl._dead
+                and i not in cl.retired]
 
     # -- observability -----------------------------------------------------------------
     def dpu_served_gets(self) -> int:
@@ -545,6 +798,17 @@ class ShardedKVStore:
             if st.adopted_records:
                 ent["adopted_records"] = st.adopted_records
                 ent["adopted_bytes"] = st.adopted_bytes
+            if st.heat:
+                top = sorted(st.heat.items(), key=lambda kv: -kv[1])[:4]
+                ent["hot_keys"] = [
+                    (k.decode("latin1") if isinstance(k, (bytes, bytearray))
+                     else str(k), v) for k, v in top]
+            if st.mig_puts or st.mig_dels or st.mig_skipped:
+                ent["migration"] = {"applied_puts": st.mig_puts,
+                                    "applied_dels": st.mig_dels,
+                                    "stale_skipped": st.mig_skipped}
+            if st.shield is not None:
+                ent["migration_shielded"] = len(st.shield)
             if srv.replicator is not None:
                 ent["replication"] = srv.replicator.summary()
             ha = srv.host_app
@@ -607,16 +871,16 @@ class KVClient:
     def put(self, key: bytes, value: bytes) -> int:
         return self.net.send_raw(self._shard(key),
                                  lambda rid: encode_put(rid, key, value),
-                                 cls="w")
+                                 cls="w", key=key)
 
     def get(self, key: bytes) -> int:
         return self.net.send_raw(self._shard(key),
-                                 lambda rid: encode_get(rid, key))
+                                 lambda rid: encode_get(rid, key), key=key)
 
     def delete(self, key: bytes) -> int:
         return self.net.send_raw(self._shard(key),
                                  lambda rid: encode_del(rid, key),
-                                 cls="w")
+                                 cls="w", key=key)
 
     # -- unified burst surface --------------------------------------------------------
     def submit(self, ops: list[tuple]) -> list[int]:
@@ -639,7 +903,8 @@ class KVClient:
                 return encode_put(rid, op[1], op[2])
             return encode_del(rid, op[1])
 
-        return self.net.issue_many(shards, build, cls=cls)
+        return self.net.issue_many(shards, build, cls=cls,
+                                   keys=[op[1] for op in ops])
 
     def harvest(self, handles=None, block: bool = True,
                 max_iters: int = 200_000) -> dict[int, tuple[int, bytes]]:
@@ -653,7 +918,7 @@ class KVClient:
         shard = self._shard
         return self.net.issue_many([shard(k) for k in keys],
                                    lambda rid, i: encode(rid, keys[i]),
-                                   cls=cls)
+                                   cls=cls, keys=keys)
 
     def get_many(self, keys: list) -> list[int]:
         """Deprecated: ``submit([("get", k), ...])``."""
@@ -669,7 +934,7 @@ class KVClient:
         return self.net.issue_many(
             [shard(k) for k, _ in items],
             lambda rid, i: encode_put(rid, items[i][0], items[i][1]),
-            cls="w")
+            cls="w", keys=[k for k, _ in items])
 
     # -- scheduling + typed waits -----------------------------------------------------
     @property

@@ -50,7 +50,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import asdict, dataclass
-from typing import Any, Iterator
+from typing import Any, Iterable, Iterator
 
 import numpy as np
 
@@ -459,6 +459,19 @@ class CacheTable:
                     self.stats.deletes += 1
                     return True
             return False
+
+    def delete_many(self, keys: Iterable[Any]) -> int:
+        """Drop a batch of keys (live-migration range invalidation).
+
+        Each hit bumps its bucket's seqlock — and therefore the table
+        ``epoch`` — so predicate probe memos taken before an ownership
+        flip can never serve a migrated key from a stale mapping.
+        Returns the number of keys actually removed."""
+        n = 0
+        for k in keys:
+            if self.delete(k):
+                n += 1
+        return n
 
     def items(self) -> Iterator[tuple[Any, Any]]:
         """Stable snapshot of every (key, value) pair.

@@ -110,6 +110,7 @@ class ClusterClient:
                  retry_attempts: int = 0, timeout_ticks: int = 0):
         self.cluster = cluster
         self.tenant = tenant
+        self._ip = ip
         if port is None:
             # Each client needs its own source ports, or two clients' flows
             # (and therefore their responses) become indistinguishable.
@@ -118,11 +119,12 @@ class ClusterClient:
                 ClusterClient._next_base_port += len(cluster.servers)
         self.conns = [ShardConnection(srv, ip, port + i, tenant)
                       for i, srv in enumerate(cluster.servers)]
-        # Failover awareness, armed only on replicated clusters: packets are
-        # epoch-tagged, issued requests keep a replay note, and a failover's
-        # epoch bump transparently re-routes everything parked on the dead
-        # shard.  Unreplicated clusters pay one attribute test per pump.
-        self._armed = cluster.supervisor is not None
+        # Failover/reshard awareness, armed on replicated or elastic
+        # clusters: packets are epoch-tagged, issued requests keep a replay
+        # note, and an epoch bump (failover promotion or resharding flip)
+        # transparently re-routes everything parked on the old owner.
+        # Plain clusters pay one attribute test per pump.
+        self._armed = cluster.supervisor is not None or cluster.elastic
         self._epoch_seen = cluster.epoch
         epoch = cluster.epoch if self._armed else -1
         for conn in self.conns:
@@ -187,6 +189,8 @@ class ClusterClient:
         class for the end-to-end latency histograms: either one 'r'/'w'
         for the whole burst, or a per-op sequence for mixed batches."""
         n = len(shards)
+        if shards and max(shards) >= len(self.conns):
+            self._grow_conns()
         rid_shard = self._rid_shard
         with self._lock:
             # The per-shard counters gate response harvesting (poll skips
@@ -213,7 +217,35 @@ class ClusterClient:
         self.stats.requests += n
         return rids
 
+    def _grow_conns(self) -> None:
+        """The cluster grew (elastic ``add_shard``): open flows to the new
+        shards.  Ports come from the GLOBAL allocator — extending this
+        client's original contiguous block would collide with whichever
+        client allocated the next block."""
+        cl = self.cluster
+        n = len(cl.servers)
+        if n <= len(self.conns):
+            return
+        add = n - len(self.conns)
+        with ClusterClient._port_lock:
+            base = ClusterClient._next_base_port
+            ClusterClient._next_base_port += add
+        epoch = cl.epoch if self._armed else -1
+        for i in range(add):
+            conn = ShardConnection(cl.servers[len(self.conns)],
+                                   self._ip, base + i, self.tenant)
+            conn.epoch = epoch
+            self.conns.append(conn)
+            self._lat_pos.append(0)
+        with self._lock:
+            while len(self._shard_outstanding) < n:
+                self._shard_outstanding.append(0)
+            while len(self._dirty_flag) < n:
+                self._dirty_flag.append(False)
+
     def _rid(self, shard: int, cls: str = "r") -> int:
+        if shard >= len(self.conns):
+            self._grow_conns()
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
@@ -298,26 +330,31 @@ class ClusterClient:
                             for gfid, offset, data in writes])
 
     def send_raw(self, shard: int, build_msg: Callable[[int], bytes],
-                 cls: str = "r") -> int:
+                 cls: str = "r", key: bytes | None = None) -> int:
         """Route an application-defined message to an explicit shard.
 
         The shard is translated through the cluster's repair chain at
         issue time: after a failover the ring owner's route moves to the
         promoted replica and STAYS moved — even once the old primary
         heals and rejoins as a replica, sending to it directly would
-        split-brain its application state."""
+        split-brain its application state.
+
+        ``key`` (optional) is kept on the replay note: a resharding flip
+        moves key OWNERSHIP without a failover, so a replay must re-hash
+        the key against the current ring rather than follow the repair
+        chain of the originally targeted shard."""
         shard = self.cluster.route_of(shard)
         rid = self._rid(shard, cls)
         msg = build_msg(rid)
         if self._replay_on:
-            self._replay[rid] = ("raw", shard, msg, cls)
+            self._replay[rid] = ("raw", shard, msg, cls, key)
             self._arm_timeout(rid)
         self._enqueue(shard, msg)
         return rid
 
     def issue_many(self, shards: list[int],
                    build_msg: Callable[[int, int], bytes],
-                   cls: str = "r") -> list[int]:
+                   cls: str = "r", keys: list | None = None) -> list[int]:
         """Burst form of :meth:`send_raw`: the PUBLIC bulk-issue path for
         application clients (e.g. the KV store's ``get_many``).
 
@@ -325,7 +362,9 @@ class ClusterClient:
         request id.  One rid-range reservation covers the whole burst, and
         enqueueing stays inside this class so the dirty-connection and
         per-shard outstanding bookkeeping cannot be bypassed.  Target
-        shards follow the cluster's repair chain (see :meth:`send_raw`)."""
+        shards follow the cluster's repair chain (see :meth:`send_raw`);
+        ``keys`` (optional, parallel to ``shards``) makes replays re-hash
+        each key against the current ring (resharding flips)."""
         route_of = self.cluster.route_of
         shards = [route_of(s) for s in shards]
         rids = self.reserve_rids(shards, cls)
@@ -335,7 +374,8 @@ class ClusterClient:
             msg = build_msg(rid, i)
             if replay is not None:
                 replay[rid] = ("raw", shard, msg,
-                               cls if isinstance(cls, str) else cls[i])
+                               cls if isinstance(cls, str) else cls[i],
+                               keys[i] if keys is not None else None)
                 self._arm_timeout(rid)
             enqueue(shard, msg)
         return rids
@@ -456,6 +496,19 @@ class ClusterClient:
             if t0 is not None:
                 wadd(now - t0)
 
+    def _any_terminal(self) -> bool:
+        """True iff any connected server holds a terminal mark."""
+        conns = self.conns
+        seen: set[int] = set()
+        for conn in (conns.values() if hasattr(conns, "values") else conns):
+            lc = conn.server.lifecycle
+            if id(lc) in seen:
+                continue
+            seen.add(id(lc))
+            if lc.has_terminal():
+                return True
+        return False
+
     def _check_terminal(self, rids) -> int:
         """Reconcile terminal server-side marks for ``rids``.
 
@@ -522,6 +575,7 @@ class ClusterClient:
         if cur == self._epoch_seen:
             return 0
         self._epoch_seen = cur
+        self._grow_conns()   # an elastic add_shard bumps the epoch too
         for conn in self.conns:
             conn.epoch = cur
         dead = self.cluster._dead
@@ -548,7 +602,12 @@ class ClusterClient:
                                                   offset, arg)
             return loc.shard, encode_app_write(rid, loc.local_fid,
                                                offset, arg)
-        _, shard, msg, _cls = entry
+        _, shard, msg, _cls, key = entry
+        if key is not None:
+            # Key-addressed: ownership may have MOVED at a resharding
+            # flip — re-hash against the current ring (the repair chain
+            # only tracks failover promotions, not migrations).
+            return self.cluster.shard_for_key(key), msg
         return self.cluster.route_of(shard), msg
 
     def _resubmit(self, rid: int) -> bool:
@@ -798,6 +857,15 @@ class ClusterClient:
                 return {rid: got[rid] for rid in handles}  # caller's order
             if self.pump() == 0:
                 self._drain_busy_devices()
+                self._check_terminal(pending)
+            elif self._any_terminal():
+                # Epoch-fence refusals can land while the cluster stays
+                # busy for a long stretch (a live migration pumps work
+                # through its whole cleanup grace).  Waiting for the
+                # pump to go idle would stall the transparent replay
+                # until retirement — reconcile as soon as any terminal
+                # mark exists.  The probe is O(conns), so the common
+                # no-terminal iteration stays cheap.
                 self._check_terminal(pending)
             pending -= self._harvest(pending, got)
             if self.retry_attempts:

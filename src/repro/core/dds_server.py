@@ -457,6 +457,11 @@ class DDSStorageServer:
         # ``config.replication`` > 0): forwards acked writes to replica
         # shards and gates client write acks on replica acks.
         self.replicator = None
+        # Live-migration tap (installed by the resharding driver while this
+        # shard is a migration SOURCE): dual-routes writes for keys moving
+        # to their new owner and can hold client acks until the destination
+        # holds the bytes — the replicator's sibling on the same hooks.
+        self.migrator = None
 
     # -- work-signaled scheduling hooks --------------------------------------------
     def set_doorbell(self, doorbell) -> None:
@@ -562,7 +567,8 @@ class DDSStorageServer:
                 or self.host_app.busy()
                 or self.file_service.busy()
                 or self.frontend.any_outstanding()
-                or (self.replicator is not None and self.replicator.busy()))
+                or (self.replicator is not None and self.replicator.busy())
+                or (self.migrator is not None and self.migrator.busy()))
 
     # -- §6.1 hooks: translate file-service ops into user Cache/Invalidate ----------
     # (called with plain header fields: the file service's data plane keeps
@@ -844,6 +850,15 @@ class _HostApp:
                 for rid, sub in zip(rids, submits):
                     if sub[0] == "w":
                         repl.forward(rid, sub[1], sub[2], sub[3])
+            mig = srv.migrator
+            if mig is not None:
+                # Live migration dual-route: writes whose key already moved
+                # (or is moving) to a new owner are synced to the
+                # destination; during the dual-write phase the client ack is
+                # additionally held until the destination acked.
+                for rid, sub in zip(rids, submits):
+                    if sub[0] == "w":
+                        mig.forward(rid, sub[1], sub[2], sub[3])
             orphans = self._orphan_sheds
             if orphans:
                 # A shed fired inside submit_many (re-entrant ring-full
@@ -874,14 +889,17 @@ class _HostApp:
         w_add = hist["write"].add
         tenant_add = srv.lifecycle.add_tenant
         repl = srv.replicator
+        mig = srv.migrator
         for gid in list(srv.frontend._groups):
             for c in srv.frontend.poll_wait(gid, 0.0):
                 info = inflight.pop(c.request_id, None)
                 if info is None:
                     continue
                 host_flow, typ, req_id, nbytes, ack_body, t0, dkey = info
-                if (typ != APP_READ and repl is not None
-                        and repl.holds(c.request_id)):
+                if (typ != APP_READ
+                        and ((repl is not None and repl.holds(c.request_id))
+                             or (mig is not None
+                                 and mig.holds(c.request_id)))):
                     # Locally durable but the replica has not acked: HOLD
                     # the client ack (released below once the replica — or
                     # the supervisor dropping a dead replica — signs off).
@@ -906,8 +924,10 @@ class _HostApp:
                 per_flow.setdefault(host_flow, []).append(resp)
                 n += 1
         held = self._held_acks
-        if held and repl is not None:
-            for rid in [r for r in held if not repl.holds(r)]:
+        if held and (repl is not None or mig is not None):
+            for rid in [r for r in held
+                        if not (repl is not None and repl.holds(r))
+                        and not (mig is not None and mig.holds(r))]:
                 host_flow, req_id, err, body, t0, dkey = held.pop(rid)
                 delta = now - t0
                 w_add(delta)

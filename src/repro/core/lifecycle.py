@@ -228,6 +228,10 @@ class LifecycleTracker:
         """Pop any terminal ``(status, hint)`` for ``(flow, rid)``."""
         return self._terminal.pop((flow, rid), None)
 
+    def has_terminal(self) -> bool:
+        """Whether ANY request is terminally marked (cheap probe)."""
+        return bool(self._terminal)
+
     def summary(self) -> dict:
         out = {cls: h.summary() for cls, h in self.hist.items() if h.n}
         if self.sheds:

@@ -721,7 +721,12 @@ class OffloadEngine:
     def on_host_write(self, op: WriteOp) -> None:
         if self.api.cache and self.cache_table is not None:
             for key, item in self.api.cache(op):
-                self.cache_table.insert(key, item)
+                if item is None:
+                    # Tombstone: the app logged a delete marker — drop the
+                    # mapping instead of upserting it.
+                    self.cache_table.delete(key)
+                else:
+                    self.cache_table.insert(key, item)
 
     def on_host_read(self, op: ReadOp) -> None:
         if self.api.invalidate and self.cache_table is not None:

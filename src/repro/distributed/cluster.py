@@ -79,6 +79,7 @@ class HashRing:
             raise ValueError("num_shards must be positive")
         self.num_shards = num_shards
         self.vnodes = vnodes
+        self._nodes: set[int] = set(range(num_shards))
         # Build every (point, owner) pair flat and sort ONCE: the old
         # per-vnode ``list.insert`` into the sorted lists was O(n^2) in
         # total vnode count, which bites exactly when scale-out grows the
@@ -89,12 +90,92 @@ class HashRing:
         self._points = [p for p, _ in pairs]   # bisect-ready for shard_for
         self._owners = [s for _, s in pairs]
 
-    def shard_for(self, key: object) -> int:
-        h = stable_hash(key, salt=b"key:")
+    def _owner_at(self, h: int) -> int:
         i = bisect.bisect_right(self._points, h)
         if i == len(self._points):
             i = 0  # wrap around the ring
         return self._owners[i]
+
+    def shard_for(self, key: object) -> int:
+        return self._owner_at(stable_hash(key, salt=b"key:"))
+
+    def nodes(self) -> list[int]:
+        """Current member shard ids, sorted."""
+        return sorted(self._nodes)
+
+    def copy(self) -> "HashRing":
+        """Cheap structural copy — membership edits on the copy leave the
+        original untouched (the pending-ring idiom live resharding uses)."""
+        ring = HashRing.__new__(HashRing)
+        ring.num_shards = self.num_shards
+        ring.vnodes = self.vnodes
+        ring._nodes = set(self._nodes)
+        ring._points = list(self._points)
+        ring._owners = list(self._owners)
+        return ring
+
+    def add_node(self, shard: int) -> None:
+        """Online membership: splice ``shard``'s vnodes into the ring.
+
+        The merged arrays are identical to a fresh sort-once build over the
+        union membership, so incremental growth and from-scratch
+        construction agree point-for-point (pinned by test)."""
+        if shard in self._nodes:
+            return
+        self._nodes.add(shard)
+        pts = [(stable_hash(f"shard-{shard}-vnode-{v}"), shard)
+               for v in range(self.vnodes)]
+        pairs = sorted([*zip(self._points, self._owners), *pts])
+        self._points = [p for p, _ in pairs]
+        self._owners = [s for _, s in pairs]
+        self.num_shards = len(self._nodes)
+
+    def remove_node(self, shard: int) -> None:
+        """Online membership: drop every vnode owned by ``shard``.  Its
+        ranges fall to each vnode's clockwise successor; no other owner's
+        ranges move."""
+        if shard not in self._nodes or len(self._nodes) <= 1:
+            return
+        self._nodes.discard(shard)
+        pairs = [(p, s) for p, s in zip(self._points, self._owners)
+                 if s != shard]
+        self._points = [p for p, _ in pairs]
+        self._owners = [s for _, s in pairs]
+        self.num_shards = len(self._nodes)
+
+    def claimed_ranges(self, shard: int) -> list[tuple[int, int]]:
+        """Half-open hash ranges ``[lo, hi)`` owned by ``shard``.  The wrap
+        interval is reported as two pieces ``[last_point, 2^64)`` and
+        ``[0, first_point)``."""
+        out: list[tuple[int, int]] = []
+        pts, owners = self._points, self._owners
+        for i, owner in enumerate(owners):
+            if owner != shard:
+                continue
+            if i == 0:
+                out.append((pts[-1], 1 << 64))
+                out.append((0, pts[0]))
+            else:
+                out.append((pts[i - 1], pts[i]))
+        return [(lo, hi) for lo, hi in out if lo < hi]
+
+    @staticmethod
+    def remap_fraction(old: "HashRing", new: "HashRing") -> float:
+        """Fraction of the 64-bit hash space whose owner differs between
+        two rings — the invariant live-migration volume depends on (adding
+        one node to n remaps ~1/(n+1); removing one remaps only its own
+        share).  Exact interval arithmetic, not sampling: walk the merged
+        point set; ownership is constant on each piece."""
+        bounds = sorted(set(old._points) | set(new._points))
+        if not bounds:
+            return 0.0
+        moved = 0
+        span = 1 << 64
+        for j, b in enumerate(bounds):
+            hi = bounds[j + 1] if j + 1 < len(bounds) else bounds[0] + span
+            if old._owner_at(b) != new._owner_at(b):
+                moved += hi - b
+        return moved / span
 
     def successors(self, shard: int, k: int) -> list[int]:
         """The first ``k`` DISTINCT other shards clockwise from ``shard``'s
@@ -123,7 +204,7 @@ class HashRing:
         return out
 
     def distribution(self, keys: Iterable[object]) -> dict[int, int]:
-        out: dict[int, int] = {s: 0 for s in range(self.num_shards)}
+        out: dict[int, int] = {s: 0 for s in sorted(self._nodes)}
         for k in keys:
             out[self.shard_for(k)] += 1
         return out
@@ -196,6 +277,11 @@ class ReadySet:
                 armed[i] = False
         out.sort()
         return out
+
+    def grow(self, n: int = 1) -> None:
+        """Widen the armed bitmap for newly provisioned shards."""
+        with self._lock:
+            self._armed.extend([False] * n)
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -386,9 +472,14 @@ class DDSCluster:
     def __init__(self, num_shards: int = 2,
                  config: ServerConfig | None = None,
                  api_factory: Callable[[int], OffloadAPI | None] | None = None,
-                 vnodes: int = 64):
+                 vnodes: int = 64, elastic: bool = False):
         self.num_shards = num_shards
         base = config or ServerConfig()
+        # Kept for elastic growth: add_shard() provisions new servers from
+        # the same template the initial members used.
+        self._base_config = base
+        self._api_factory = api_factory
+        self.elastic = elastic
         self.ring = HashRing(num_shards, vnodes)
         self.servers: list[DDSStorageServer] = []
         self._ready = ReadySet(num_shards)
@@ -439,6 +530,18 @@ class DDSCluster:
         # re-silver after a healed partition rejoins as a replica.
         self.on_rejoin = None
         self.supervisor: ClusterSupervisor | None = None
+        # -- elastic resharding state --------------------------------------
+        # ``resharder`` is the one active migration driver (None when the
+        # membership is stable); committed ring changes append to
+        # ``reshard_events`` and finished/aborted migrations summarize into
+        # ``reshard_history``.  ``retired`` shards stay allocated (their
+        # index is load-bearing) but own no keys and take no traffic.
+        self.resharder = None
+        self.reshard_events: list[dict] = []
+        self.reshard_history: list[dict] = []
+        self.reshard_totals = {"keys_migrated": 0, "bytes_streamed": 0,
+                               "dual_routed": 0}
+        self.retired: set[int] = set()
         if self.replication > 0:
             for i, srv in enumerate(self.servers):
                 targets = [(t, self.servers[t])
@@ -452,6 +555,13 @@ class DDSCluster:
                 # refused with a retryable terminal redirect.
                 srv.director.epoch_of = lambda: self.epoch
                 srv.director.on_stale_epoch = srv._on_stale_epoch
+        elif elastic:
+            # Unreplicated but elastic: the ownership flip still needs the
+            # epoch fence so in-flight pre-flip packets bounce with a
+            # retryable redirect instead of landing on the old owner.
+            for srv in self.servers:
+                srv.director.epoch_of = lambda: self.epoch
+                srv.director.on_stale_epoch = srv._on_stale_epoch
 
     @property
     def failover_armed(self) -> bool:
@@ -460,6 +570,79 @@ class DDSCluster:
     def runnable(self) -> list[int]:
         """Currently armed shard indices (introspection/tests only)."""
         return sorted(i for i, a in enumerate(self._ready._armed) if a)
+
+    # -- elastic membership ---------------------------------------------------------
+    @property
+    def reshard_active(self) -> bool:
+        return self.resharder is not None
+
+    def add_shard(self) -> int:
+        """Provision one NEW storage server (infra only — the ring is
+        untouched until a migration flips ownership to it).
+
+        The new shard gets the same config template as the initial
+        members, joins the shared tick clock, ready set and supervisor,
+        and — on replicated clusters — gets its own replicator wired by
+        the PENDING ring (membership including itself), so its log is
+        redundant before it owns a single key."""
+        if not (self.failover_armed or self.elastic):
+            raise RuntimeError(
+                "add_shard requires an elastic or replicated cluster "
+                "(the ownership flip needs the epoch fence)")
+        i = len(self.servers)
+        base = self._base_config
+        cfg = replace(base, server_port=base.server_port + i)
+        api = self._api_factory(i) if self._api_factory is not None else None
+        srv = DDSStorageServer(cfg, api)
+        srv.adopt_clock(self.clock)
+        srv.set_doorbell(lambda i=i: self._ready.mark(i))
+        srv.director.epoch_of = lambda: self.epoch
+        srv.director.on_stale_epoch = srv._on_stale_epoch
+        self.servers.append(srv)
+        self.num_shards = len(self.servers)
+        self._ready.grow()
+        self.pump_steps.append(0)
+        if self.replication > 0:
+            pending = self.ring.copy()
+            pending.add_node(i)
+            targets = [(t, self.servers[t])
+                       for t in pending.successors(i, self.replication)
+                       if t not in self._dead]
+            srv.replicator = _Replicator(i, targets, self.clock)
+        if self.supervisor is not None:
+            self.supervisor.add_shard(i)
+        return i
+
+    def start_reshard(self, resharder) -> None:
+        """Install the one active migration driver; it is stepped from
+        ``pump()`` and retires itself on completion/abort."""
+        if self.resharder is not None:
+            raise RuntimeError("a resharding migration is already active")
+        if not (self.failover_armed or self.elastic):
+            raise RuntimeError("resharding requires elastic=True or replication")
+        self.resharder = resharder
+
+    def commit_ring(self, ring: HashRing, event: dict) -> None:
+        """The atomic ownership flip: swap the ring and bump the epoch in
+        one step.  Every in-flight packet stamped with the old epoch is
+        refused by the fence with a retryable redirect; epoch-aware clients
+        re-resolve against the new ring and replay."""
+        self.ring = ring
+        self.epoch += 1
+        event = dict(event, epoch=self.epoch, tick=self.clock.now)
+        self.reshard_events.append(event)
+
+    def _retire_resharder(self) -> None:
+        rs = self.resharder
+        if rs is None:
+            return
+        summary = rs.summary()
+        self.reshard_history.append(summary)
+        tot = self.reshard_totals
+        tot["keys_migrated"] += summary.get("keys_migrated", 0)
+        tot["bytes_streamed"] += summary.get("bytes_streamed", 0)
+        tot["dual_routed"] += summary.get("dual_routed", 0)
+        self.resharder = None
 
     # -- control plane: cluster-global files ---------------------------------------
     def create_file(self, name: str) -> int:
@@ -475,19 +658,21 @@ class DDSCluster:
         return gfid
 
     def replicate_file(self, primary: int, lfid: int,
-                       name: str) -> dict[int, int]:
+                       name: str, ring: HashRing | None = None) -> dict[int, int]:
         """Create replica copies of a shard-LOCAL file on the primary's ring
         successors and register them with its replicator.
 
         The public API for applications that create files directly on shard
         frontends (the KV store's record logs): every write the primary acks
         against ``lfid`` is thereafter forwarded before the ack releases.
-        Returns ``{replica shard: replica-local fid}``."""
+        ``ring`` lets elastic growth place a NEW shard's replicas by the
+        pending ring (the new shard is not in ``self.ring`` until the
+        ownership flip).  Returns ``{replica shard: replica-local fid}``."""
         out: dict[int, int] = {}
         repl = self.servers[primary].replicator
         if not self.replication or repl is None:
             return out
-        for t in self.ring.successors(primary, self.replication):
+        for t in (ring or self.ring).successors(primary, self.replication):
             if t in self._dead:
                 continue
             rlfid = self.servers[t].frontend.create_file(f"{name}:r{primary}")
@@ -630,11 +815,23 @@ class DDSCluster:
         acks held on the dead shard's replica acks, and bump the ring epoch
         (in-flight stale-epoch requests are refused with retryable
         redirects; clients replay against the repaired ring)."""
+        # Candidates come from where the replicas actually LIVE (the dead
+        # primary's replicator targets), not from recomputing the ring's
+        # successors: an elastic flip reshapes the ring without moving
+        # replica placement, so post-reshard the two can disagree — and a
+        # successor holding no copy would be promoted into data loss.
+        repl = self.servers[dead].replicator
+        holders = set(repl.conns) if repl is not None else set()
         promoted = None
         for cand in self.ring.successors(dead, self.replication):
-            if cand not in self._dead:
+            if cand not in self._dead and (not holders or cand in holders):
                 promoted = cand
                 break
+        if promoted is None:
+            for cand in sorted(holders):
+                if cand not in self._dead:
+                    promoted = cand
+                    break
         if promoted is not None:
             # Drain FIRST: every forwarded write the dead primary acked is
             # applied on the replica before any adopted file is served.
@@ -657,7 +854,14 @@ class DDSCluster:
                             prepl.map_file(t, rlfid, rfid)
             self._route[dead] = promoted
             for k, v in list(self._route.items()):
-                if v == dead:   # path compression: old chains point at the
+                if v != dead:
+                    continue
+                if k == promoted:
+                    # Ping-pong promotion (A died onto B, B now dies back
+                    # onto a healed A): a self-entry would make route_of
+                    # spin forever — the promoted shard routes to itself.
+                    del self._route[k]
+                else:   # path compression: old chains point at the
                     self._route[k] = promoted   # live end directly
         for i, srv in enumerate(self.servers):
             if i not in self._dead and srv.replicator is not None:
@@ -712,17 +916,27 @@ class DDSCluster:
             # both calls (sup is None) — zero cost on that path.
             sup.beat_live()
             sup.poll()
+        rs_work = 0
+        rs = self.resharder
+        if rs is not None:
+            # The migration driver is pumped like a shard: it reports >=1
+            # while a migration is in any live phase, keeping
+            # ``run_until_idle`` driving the cluster until the flip (or
+            # abort) lands even when no client traffic rings doorbells.
+            rs_work = rs.step()
+            if rs.phase in ("done", "aborted"):
+                self._retire_resharder()
         runnable = self._ready.take()
         servers = self.servers
         dead = self._dead
         if not runnable:
             if self._ready.quiet:
-                return 0   # verified idle, no doorbell since: nothing to do
+                return rs_work   # verified idle, no doorbell since
             runnable = [i for i, srv in enumerate(servers)
                         if i not in dead and srv.busy()]
             if not runnable:
                 self._ready.quiet = True
-                return 0
+                return rs_work
         work = 0
         steps = self.pump_steps
         mark = self._ready.mark
@@ -735,7 +949,7 @@ class DDSCluster:
             if w or srv.busy():
                 mark(i)
             work += w
-        return work
+        return work + rs_work
 
     def run_until_idle(self, max_iters: int = 200_000) -> None:
         """Converge on ready-set emptiness plus device drain.
@@ -849,6 +1063,25 @@ class DDSCluster:
                 "granted": sum(a["granted"] for a in admission),
                 "shed": sum(a["shed"] for a in admission),
             }
+        reshard = self._resharding_summary()
+        if reshard is not None:
+            out["resharding"] = reshard
+        return out
+
+    def _resharding_summary(self) -> dict | None:
+        """Migration observability: committed ring events, lifetime totals,
+        and — while one is live — the active migration's summary."""
+        if not (self.reshard_events or self.reshard_history
+                or self.resharder is not None):
+            return None
+        out: dict = {"events": list(self.reshard_events),
+                     "totals": dict(self.reshard_totals)}
+        if self.reshard_history:
+            out["completed"] = list(self.reshard_history)
+        if self.resharder is not None:
+            out["active"] = self.resharder.summary()
+        if self.retired:
+            out["retired"] = sorted(self.retired)
         return out
 
     def _replication_summary(self) -> dict | None:

@@ -210,6 +210,12 @@ class ClusterSupervisor:
         self._feed_stragglers()
         return out
 
+    def add_shard(self, shard: int) -> None:
+        """Monitor a newly provisioned shard (elastic growth): fresh
+        heartbeat state plus a straggler-feed slot for its replicator."""
+        self.monitor.watch(self._name(shard))
+        self._lag_seen.append((0, 0))
+
     def _feed_stragglers(self) -> None:
         """Record each live primary's mean replication lag since last poll."""
         cl = self.cluster

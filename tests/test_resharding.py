@@ -1,0 +1,512 @@
+"""Elastic resharding: crash-safe live shard add/remove (the scale PR).
+
+Covers the online-membership overhaul end to end:
+
+  * ring membership: incremental ``add_node``/``remove_node`` agree with
+    from-scratch construction; ``remap_fraction`` bounds the migration
+    volume (hypothesis property: one joiner remaps ~1/(n+1); a leaver
+    remaps EXACTLY its own ranges);
+  * live growth: ``add_shard`` streams owned keys source -> destination
+    over the host wire while serving traffic, dual-routes writes during
+    the handoff (held acks), flips ownership atomically with an epoch
+    bump, and sheds the source copies after a grace window;
+  * live shrink: ``remove_shard`` drains a member out of the ring and
+    retires it;
+  * the crash matrix: killing or partitioning either endpoint at every
+    phase (setup, stream, dual, flip, cleanup) resolves to an unambiguous
+    ring with zero lost acknowledged writes — pre-flip faults abort
+    cleanly, a source lost AT the flip proceeds (the gate already proved
+    the destination holds every acked byte), post-flip faults only end
+    the cleanup drain early;
+  * migration under a lossy wire: drop/dup/reorder on the migration flows
+    still yields a byte-identical destination with exactly-once sync
+    application (per-key single-flight + the server dedup cache);
+  * tombstones: a deleted key stays dead across replica promotion AND
+    across partition-heal re-silvering (the PR7 resurrection fix);
+  * observability: per-shard heat, hot-shard detection, migration
+    counters in ``shard_stats``/``latency_stats``;
+  * client elasticity: connections grow on the epoch bump so old clients
+    reach shards born after them.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wire
+from repro.core.dds_server import ServerConfig
+from repro.core.faultnet import FaultSchedule, wrap_director
+from repro.apps.kv_store import (KVClient, ShardedKVStore, decode_record)
+from repro.distributed.cluster import DDSCluster, HashRing
+from repro.distributed.resharding import PHASES
+
+ECFG = dict(device_capacity=1 << 24, dedup_cache=256)
+RCFG = dict(replication=1, heartbeat_timeout_ticks=6, **ECFG)
+
+
+def _preload(store, n, prefix=b"rk"):
+    c = KVClient(store, timeout_ticks=16)
+    keys = [b"%s%04d" % (prefix, i) for i in range(n)]
+    res = c.harvest(c.submit([("put", k, b"val:" + k) for k in keys]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    store.cluster.run_until_idle()
+    return c, keys
+
+
+def _assert_all_readable(store, expect: dict):
+    """Every acked write is visible with its exact bytes (the zero-lost-
+    acked-writes oracle); deleted keys answer E_NOENT."""
+    v = KVClient(store, timeout_ticks=16)
+    rids = v.submit([("get", k) for k in expect])
+    res = v.harvest(rids)
+    for k, rid in zip(expect, rids):
+        status, body = res[rid]
+        if expect[k] is None:
+            assert status == wire.E_NOENT, (k, status)
+        else:
+            assert status == wire.E_OK, (k, status)
+            assert decode_record(body)[1] == expect[k], k
+
+
+def _pump_to_phase(cl, target, max_pumps=6000):
+    """Drive the cluster until the active migration reaches ``target``.
+    Phase transitions are at most one per step, so per-pump polling
+    cannot skip a phase."""
+    for _ in range(max_pumps):
+        rs = cl.resharder
+        if rs is not None and rs.phase == target:
+            return rs
+        if rs is None and cl.reshard_history:
+            raise AssertionError(
+                f"migration finished before reaching {target!r}: "
+                f"{cl.reshard_history[-1]['phase']}")
+        cl.pump()
+    raise AssertionError(f"never reached phase {target!r}")
+
+
+# ---------------------------------------------------------------------------
+# Ring membership + remap_fraction (satellite: hypothesis property)
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_add_matches_fresh_build():
+    ring = HashRing(3)
+    ring.add_node(3)
+    fresh = HashRing(4)
+    assert ring._points == fresh._points
+    assert ring._owners == fresh._owners
+    assert ring.nodes() == [0, 1, 2, 3]
+
+
+def test_remove_node_leaves_other_ranges_untouched():
+    ring = HashRing(4)
+    survivor_ranges = {s: ring.claimed_ranges(s) for s in (0, 1, 3)}
+    ring.remove_node(2)
+    assert ring.nodes() == [0, 1, 3]
+    for s, old in survivor_ranges.items():
+        # every range s owned before is still owned by s (it may have
+        # GAINED the leaver's ranges, never lost its own)
+        new = ring.claimed_ranges(s)
+        for lo, hi in old:
+            assert any(nlo <= lo and hi <= nhi for nlo, nhi in new), (s, lo)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12))
+def test_remap_fraction_add_one_node_bounded(n):
+    old = HashRing(n)
+    new = old.copy()
+    new.add_node(n)
+    frac = HashRing.remap_fraction(old, new)
+    # the joiner should claim about 1/(n+1) of the space; vnode variance
+    # gives slack but never lets another node's keys move between two
+    # SURVIVING owners (only old-owner -> joiner moves happen)
+    assert 0.0 < frac < min(1.0, 3.0 / (n + 1))
+    span = sum(hi - lo for lo, hi in new.claimed_ranges(n)) / (1 << 64)
+    assert frac == pytest.approx(span, rel=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 12), st.integers(0, 11))
+def test_remap_fraction_remove_node_exactly_its_share(n, leaver):
+    leaver %= n
+    old = HashRing(n)
+    new = old.copy()
+    new.remove_node(leaver)
+    frac = HashRing.remap_fraction(old, new)
+    owned = sum(hi - lo for lo, hi in old.claimed_ranges(leaver)) / (1 << 64)
+    # removal remaps EXACTLY the leaver's ranges: nothing else moves
+    assert frac == pytest.approx(owned, rel=1e-12)
+    assert HashRing.remap_fraction(old, old) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Live growth and shrink (the tentpole happy paths)
+# ---------------------------------------------------------------------------
+
+
+def test_add_shard_migrates_keys_and_flips_epoch():
+    store = ShardedKVStore(2, ServerConfig(**ECFG), elastic=True)
+    cl = store.cluster
+    c, keys = _preload(store, 60)
+    epoch0 = cl.epoch
+    new = store.add_shard()
+    assert new == 2 and cl.resharder is not None
+    cl.run_until_idle()
+    assert cl.resharder is None
+    assert cl.reshard_history[-1]["phase"] == "done"
+    assert cl.epoch == epoch0 + 1
+    assert cl.ring.nodes() == [0, 1, 2]
+    owned = [k for k in keys if cl.ring.shard_for(k) == new]
+    assert owned, "the joiner claimed no keys — vnode layout broke"
+    assert cl.reshard_totals["keys_migrated"] >= len(owned)
+    # sources shed their copies of migrated keys after the grace drain
+    for k in owned:
+        assert k in store._states[new].index
+        assert k not in store._states[0].index
+        assert k not in store._states[1].index
+    _assert_all_readable(store, {k: b"val:" + k for k in keys})
+    # the migration journal tells the whole story on both endpoints
+    ev = cl.reshard_events[-1]
+    assert ev["kind"] == "add:2" and ev["keys_moved"] >= len(owned)
+
+
+def test_writes_during_migration_are_dual_routed():
+    store = ShardedKVStore(2, ServerConfig(**ECFG), elastic=True)
+    cl = store.cluster
+    c, keys = _preload(store, 80)
+    new = store.add_shard()
+    rs = cl.resharder
+    moving = [k for k in keys if rs.new_ring.shard_for(k) == new]
+    assert len(moving) >= 2
+    _pump_to_phase(cl, "dual")
+    # overwrite a migrating key + insert a fresh joiner-owned key while
+    # ownership is still with the source: both must dual-route (the ack
+    # holds until the destination holds the bytes)
+    fresh = next(b"fresh%03d" % i for i in range(1000)
+                 if rs.new_ring.shard_for(b"fresh%03d" % i) == new)
+    rids = c.submit([("put", moving[0], b"NEWER"), ("put", fresh, b"BORN")])
+    res = c.harvest(rids)
+    assert all(s == wire.E_OK for s, _ in res.values())
+    cl.run_until_idle()
+    assert cl.reshard_history[-1]["phase"] == "done"
+    assert cl.reshard_totals["dual_routed"] >= 1
+    expect = {k: b"val:" + k for k in keys}
+    expect[moving[0]] = b"NEWER"
+    expect[fresh] = b"BORN"
+    _assert_all_readable(store, expect)
+    # the new owner serves them from its own index
+    assert moving[0] in store._states[new].index
+    assert fresh in store._states[new].index
+
+
+def test_remove_shard_drains_and_retires():
+    store = ShardedKVStore(3, ServerConfig(**ECFG), elastic=True)
+    cl = store.cluster
+    c, keys = _preload(store, 60)
+    victim = 0
+    owned = [k for k in keys if cl.ring.shard_for(k) == victim]
+    assert owned
+    store.remove_shard(victim)
+    cl.run_until_idle()
+    assert cl.reshard_history[-1]["phase"] == "done"
+    assert victim in cl.retired
+    assert cl.ring.nodes() == [1, 2]
+    assert not store._states[victim].index
+    _assert_all_readable(store, {k: b"val:" + k for k in keys})
+    with pytest.raises(ValueError):
+        store.remove_shard(victim)          # not a member any more
+
+
+def test_concurrent_membership_changes_refused():
+    store = ShardedKVStore(2, ServerConfig(**ECFG), elastic=True)
+    _preload(store, 16)
+    store.add_shard()
+    assert store.cluster.resharder is not None
+    with pytest.raises(RuntimeError):
+        store.add_shard()
+    with pytest.raises(RuntimeError):
+        store.remove_shard(0)
+    store.cluster.run_until_idle()
+    assert store.cluster.resharder is None
+
+
+def test_migration_journal_records_every_phase():
+    store = ShardedKVStore(2, ServerConfig(**ECFG), elastic=True)
+    cl = store.cluster
+    _preload(store, 40)
+    new = store.add_shard()
+    rs = cl.resharder
+    cl.run_until_idle()
+    recs = rs.journal.read(new)
+    phases = [r["phase"] for r in recs]
+    for expected in ("setup", "dual", "flip", "cleanup", "done"):
+        assert expected in phases, phases
+    # phase order follows the protocol order
+    order = {p: i for i, p in enumerate(PHASES)}
+    assert phases == sorted(phases, key=order.__getitem__)
+    setup = recs[0]
+    assert setup["phase"] == "setup" and setup["aux"] >= 1   # snapshot size
+
+
+# ---------------------------------------------------------------------------
+# The crash matrix: kill either endpoint at every phase
+# ---------------------------------------------------------------------------
+
+CRASH_MATRIX = [
+    # (phase, victim_role, expected_final)
+    ("setup", "dest", "aborted"),
+    ("stream", "source", "aborted"),
+    ("stream", "dest", "aborted"),
+    ("dual", "source", "aborted"),
+    ("dual", "dest", "aborted"),
+    ("flip", "source", "done"),      # gate already proved the copy
+    ("flip", "dest", "aborted"),     # copy lost before the swap
+    ("cleanup", "source", "done"),   # ownership already moved
+    ("cleanup", "dest", "done"),
+]
+
+
+@pytest.mark.parametrize("phase,role,expected", CRASH_MATRIX,
+                         ids=[f"{p}-{r}" for p, r, _ in CRASH_MATRIX])
+def test_crash_matrix_resolves_unambiguously(phase, role, expected):
+    """Crash one endpoint at ``phase``; the migration must resolve to the
+    expected terminal state with every acked write still readable (the
+    replica holds the crashed shard's bytes — PR7's ack-hold)."""
+    store = ShardedKVStore(2, ServerConfig(**RCFG), elastic=True)
+    cl = store.cluster
+    c, keys = _preload(store, 240)
+    epoch0 = cl.epoch
+    new = store.add_shard()
+    rs = cl.resharder
+    victim = new if role == "dest" else rs._pair_specs[0][0]
+    if phase == "setup":
+        # setup runs inside the first step: a dead endpoint at that
+        # instant must abort before any byte moves
+        cl.crash(victim)
+        cl.pump()
+    else:
+        _pump_to_phase(cl, phase)
+        cl.crash(victim)
+    cl.run_until_idle()
+    assert cl.resharder is None
+    hist = cl.reshard_history[-1]
+    assert hist["phase"] == expected, (phase, role, hist)
+    if expected == "aborted":
+        # ownership never moved: the joiner is not a ring member and the
+        # only epoch bumps come from the failover itself
+        assert new not in cl.ring.nodes()
+        assert "reason" in hist
+    else:
+        assert new in cl.ring.nodes()
+        assert cl.epoch > epoch0
+    _assert_all_readable(store, {k: b"val:" + k for k in keys})
+
+
+@pytest.mark.parametrize("role", ["source", "dest"])
+def test_partition_stalls_then_completes(role):
+    """A partitioned-but-not-failed-over endpoint stalls the migration;
+    it resumes after heal and completes with nothing lost."""
+    store = ShardedKVStore(2, ServerConfig(**ECFG), elastic=True)
+    cl = store.cluster
+    c, keys = _preload(store, 120)
+    new = store.add_shard()
+    rs = cl.resharder
+    victim = new if role == "dest" else rs._pair_specs[0][0]
+    _pump_to_phase(cl, "stream")
+    acked_before = sum(p.acked for p in rs.pairs)
+    cl.partition(victim, until_tick=cl.clock.now + 40)
+    for _ in range(20):
+        cl.pump()
+    # stalled: no new sync acks land while the wire is down
+    assert rs.phase in ("stream", "dual")
+    assert sum(p.acked for p in rs.pairs) == acked_before
+    cl.run_until_idle()
+    assert cl.reshard_history[-1]["phase"] == "done"
+    assert new in cl.ring.nodes()
+    _assert_all_readable(store, {k: b"val:" + k for k in keys})
+
+
+# ---------------------------------------------------------------------------
+# Migration under a lossy wire (satellite: FaultWire on the stream)
+# ---------------------------------------------------------------------------
+
+
+def test_migration_survives_lossy_stream_exactly_once():
+    """Drop/dup/reorder armed on the migration flows only: the stream
+    must still deliver a byte-identical destination, each sync applied
+    exactly once (resends answered from the dedup cache, stale syncs
+    blocked by the write shield)."""
+    store = ShardedKVStore(2, ServerConfig(**ECFG), elastic=True)
+    cl = store.cluster
+    c, keys = _preload(store, 120)
+    new = store.add_shard()
+    rs = cl.resharder
+    _pump_to_phase(cl, "stream")   # conns exist: the SYN is already in
+    mig_flow = lambda f: f.src_port >= 47000 or f.dst_port >= 47000
+    stop = cl.clock.now + 300      # bounded storm: backoffed resends land
+    fin, fout = wrap_director(
+        cl.servers[new].director, cl.clock,
+        ingress=FaultSchedule(seed=13, drop=0.2, dup=0.15, reorder=0.1,
+                              stop_tick=stop),
+        responses=FaultSchedule(seed=13 ^ 0x9E3779B9, drop=0.2, dup=0.15,
+                                reorder=0.1, stop_tick=stop),
+        flow_filter=mig_flow)
+    cl.run_until_idle()
+    assert cl.reshard_history[-1]["phase"] == "done"
+    stats = fin.injection_stats()
+    assert sum(stats["totals"].values()) > 0, "the storm never fired"
+    # the filter kept the blast radius on the migration flows only
+    assert all(":47" in f.split("->")[0] or ":47" in f.split("->")[1]
+               for f in stats["flows"])
+    hist = cl.reshard_history[-1]
+    assert hist["resent"] >= 1      # drops really forced resends
+    # exactly-once: every migrated key applied at the destination once
+    mig = store.shard_stats()[new]["migration"]
+    moved = [k for k in keys if cl.ring.shard_for(k) == new]
+    assert mig["applied_puts"] == hist["keys_migrated"] == len(moved)
+    assert mig["stale_skipped"] == 0
+    _assert_all_readable(store, {k: b"val:" + k for k in keys})
+    for k in moved:
+        assert k in store._states[new].index
+        assert k not in store._states[0].index
+
+
+# ---------------------------------------------------------------------------
+# Tombstones: deletes survive promotion and rejoin re-silver (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_deleted_key_not_resurrected_by_promotion():
+    store = ShardedKVStore(2, ServerConfig(**RCFG))
+    cl = store.cluster
+    c = KVClient(store, timeout_ticks=16)
+    keys = [b"t%02d" % i for i in range(8)]
+    res = c.harvest(c.submit([("put", k, b"v" + k) for k in keys]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    victim = store.shard_for_key(keys[0])
+    vkeys = [k for k in keys if store.shard_for_key(k) == victim]
+    dead, live = vkeys[0], vkeys[1] if len(vkeys) > 1 else None
+    rid = c.delete(dead)
+    assert c.harvest([rid])[rid][0] == wire.E_OK
+    cl.run_until_idle()
+    cl.crash(victim)
+    # promotion rebuilds the index from the adopted log: the tombstone
+    # must win over the earlier PUT record
+    rid = c.get(dead)
+    assert c.harvest([rid])[rid][0] == wire.E_NOENT
+    if live is not None:
+        rid = c.get(live)
+        status, body = c.harvest([rid])[rid]
+        assert status == wire.E_OK and decode_record(body)[1] == b"v" + live
+
+
+def test_deleted_key_stays_dead_across_resilver_and_repromote():
+    store = ShardedKVStore(2, ServerConfig(replication=1,
+                                           heartbeat_timeout_ticks=4,
+                                           **ECFG))
+    cl = store.cluster
+    c = KVClient(store, timeout_ticks=16, retry_attempts=4)
+    keys = [b"z%02d" % i for i in range(10)]
+    res = c.harvest(c.submit([("put", k, b"v" + k) for k in keys]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    victim = store.shard_for_key(keys[0])
+    vkeys = [k for k in keys if store.shard_for_key(k) == victim]
+    assert len(vkeys) >= 2
+    rid = c.delete(vkeys[0])
+    assert c.harvest([rid])[rid][0] == wire.E_OK
+    cl.run_until_idle()
+    # partition past the grace window: promotion, then heal + re-silver
+    cl.partition(victim, until_tick=cl.clock.now + 60)
+    for _ in range(120):
+        cl.pump()
+        if cl.rejoin_events:
+            break
+    assert cl.rejoin_events and cl.rejoin_events[0]["healed"] == victim
+    primary = cl.rejoin_events[0]["primary"]
+    # the adopted view already honors the tombstone...
+    rid = c.get(vkeys[0])
+    assert c.harvest([rid])[rid][0] == wire.E_NOENT
+    # ...delete ANOTHER adopted key post-heal (mirrors to the healed
+    # replica), then kill the promoted primary: the re-silvered node
+    # promotes and must not resurrect either key
+    rid = c.delete(vkeys[1])
+    assert c.harvest([rid])[rid][0] == wire.E_OK
+    cl.run_until_idle()
+    cl.crash(primary)
+    for k in (vkeys[0], vkeys[1]):
+        rid = c.get(k)
+        assert c.harvest([rid])[rid][0] == wire.E_NOENT, k
+    # untouched keys are still served
+    other = [k for k in keys if k not in (vkeys[0], vkeys[1])]
+    res = c.harvest(c.submit([("get", k) for k in other]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+
+
+# ---------------------------------------------------------------------------
+# Observability: heat, hot shards, migration counters (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_heat_and_hot_shard_detection():
+    store = ShardedKVStore(2, ServerConfig(**ECFG))
+    c = KVClient(store)
+    keys = [b"h%02d" % i for i in range(12)]
+    res = c.harvest(c.submit([("put", k, b"x" + k) for k in keys]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    hot = store.shard_for_key(keys[0])
+    hkeys = [k for k in keys if store.shard_for_key(k) == hot]
+    store.shard_heat()                       # reset the baseline
+    for _ in range(20):
+        res = c.harvest(c.submit([("get", hkeys[0]) for _ in range(5)]))
+        assert all(s == wire.E_OK for s, _ in res.values())
+    assert store.hot_shards(min_ops=64) == [hot]
+    # the skewed key surfaces in the per-shard hot-key estimate
+    stats = store.shard_stats()
+    assert hkeys[0].decode("latin1") in [k for k, _ in stats[hot]["hot_keys"]]
+    # a balanced reload shows no outlier
+    store.shard_heat()
+    assert store.hot_shards(min_ops=64) == []
+
+
+def test_migration_counters_in_stats():
+    store = ShardedKVStore(2, ServerConfig(**ECFG), elastic=True)
+    cl = store.cluster
+    c, keys = _preload(store, 60)
+    new = store.add_shard()
+    _pump_to_phase(cl, "dual")
+    # mid-flight: the active migration is visible with live counters
+    mid = store.latency_stats()["resharding"]
+    assert mid["active"]["tag"] == "add:2"
+    assert mid["active"]["phase"] in ("stream", "dual")
+    assert store.shard_stats()[new]["migration_shielded"] == 0
+    cl.run_until_idle()
+    out = store.latency_stats()["resharding"]
+    assert "active" not in out
+    assert out["completed"][-1]["phase"] == "done"
+    assert out["totals"]["keys_migrated"] >= 1
+    assert out["totals"]["bytes_streamed"] >= 1
+    assert out["events"][-1]["kind"] == "add:2"
+    mig = store.shard_stats()[new]["migration"]
+    assert mig["applied_puts"] == out["totals"]["keys_migrated"]
+    # the shield is disarmed once the migration retires
+    assert store._states[new].shield is None
+
+
+def test_client_connections_grow_with_the_ring():
+    store = ShardedKVStore(2, ServerConfig(**ECFG), elastic=True)
+    cl = store.cluster
+    c, keys = _preload(store, 40)
+    assert len(c.net.conns) == 2
+    store.add_shard()
+    cl.run_until_idle()
+    # the next op syncs the epoch and grows the connection set
+    res = c.harvest(c.submit([("get", k) for k in keys]))
+    assert all(s == wire.E_OK for s, _ in res.values())
+    assert len(c.net.conns) == 3
+    # a brand-new key owned by the joiner round-trips through it
+    k = next(b"nk%03d" % i for i in range(1000)
+             if cl.ring.shard_for(b"nk%03d" % i) == 2)
+    rid = c.put(k, b"routed")
+    assert c.harvest([rid])[rid][0] == wire.E_OK
+    rid = c.get(k)
+    assert decode_record(c.harvest([rid])[rid][1])[1] == b"routed"
